@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, result records, milestone metrics."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def milestones(mse: np.ndarray, ts=(1000, 5000, 10000, 20000, -1)) -> dict:
+    out = {}
+    for t in ts:
+        idx = len(mse) - 1 if t == -1 else min(t, len(mse) - 1)
+        lo, hi = max(0, idx - 250), min(len(mse), idx + 250)
+        out[f"mse@{'end' if t == -1 else t}"] = float(np.median(mse[lo:hi]))
+    return out
+
+
+def time_call(fn, *args, **kwargs):
+    t0 = time.time()
+    out = fn(*args, **kwargs)
+    return out, time.time() - t0
+
+
+def dump(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"bench_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def row(name: str, seconds: float, derived: dict) -> str:
+    kv = " ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                  for k, v in derived.items())
+    return f"{name},{seconds * 1e6:.0f},{kv}"

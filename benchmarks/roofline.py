@@ -1,0 +1,141 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the UNROLLED dry-run capture (results/roofline.jsonl).
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip: cost_analysis
+  memory term     = HLO_bytes / HBM_bw                reports the post-SPMD
+  collective term = collective_bytes / ICI link bw    per-device program)
+
+plus MODEL_FLOPS = 6 * N(_active) * D and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat / redundancy waste).
+
+Collective bytes are ring-cost weighted (hlo_parse.collective_summary):
+all-reduce ~ 2x operand, all-gather/reduce-scatter ~ (k-1)/k, permute 1x.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+from repro.configs import SHAPES_BY_NAME, get_arch
+from repro.launch.mesh import HW
+
+NAME = "roofline"
+
+CAPTURE = os.path.join(RESULTS_DIR, "roofline.jsonl")
+CAPTURE_OPT = os.path.join(RESULTS_DIR, "roofline_opt.jsonl")
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """6*N_active*D analytic model FLOPs for this case, per chip."""
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    cfg = get_arch(rec["arch"])
+    n_active = rec.get("params_active") or cfg.active_param_count()
+    chips = 512 if rec["multi_pod"] else 256
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6  # fwd + bwd
+    elif rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2
+    return mult * n_active * tokens / chips
+
+
+def analyze_record(rec: dict) -> dict:
+    coll = rec["collectives"]
+    flops = rec["flops"]
+    t_comp = flops / HW.PEAK_FLOPS_BF16
+    t_mem = rec["bytes_accessed"] / HW.HBM_BW
+    t_coll = coll.get("total_ring_cost_bytes", coll["total_bytes"]) / HW.ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "kind": rec["kind"],
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops > 0 else float("nan"),
+        "hbm_gb": rec["memory"].get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def load_capture(path: str = CAPTURE) -> list:
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") == "ok":
+                recs[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return [analyze_record(r) for r in recs.values()]
+
+
+def run(quick: bool = False) -> dict:
+    rows = load_capture()
+    if not rows:
+        return {"error": f"no capture at {CAPTURE}; run "
+                "`python -m repro.launch.roofline_capture --out results/roofline.jsonl`"}
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r["dominant"], []).append(f"{r['arch']}x{r['shape']}")
+    worst = sorted(rows, key=lambda r: -r["bound_s"])[:3]
+    out = {
+        "rows": rows,
+        "dominant_counts": {k: len(v) for k, v in by_dom.items()},
+        "worst_cases": [f"{r['arch']} x {r['shape']} ({r['dominant']}, {r['bound_s']:.3f}s)"
+                        for r in worst],
+        "derived": {
+            "cases": len(rows),
+            "compute_bound": len(by_dom.get("compute", [])),
+            "memory_bound": len(by_dom.get("memory", [])),
+            "collective_bound": len(by_dom.get("collective", [])),
+        },
+    }
+    opt = load_capture(CAPTURE_OPT)
+    if opt:
+        base_by = {(r["arch"], r["shape"]): r for r in rows}
+        speedups = []
+        for r in opt:
+            b = base_by.get((r["arch"], r["shape"]))
+            if b and r["bound_s"] > 0:
+                speedups.append(b["bound_s"] / r["bound_s"])
+        out["opt_rows"] = opt
+        out["derived"]["opt_cases"] = len(opt)
+        out["derived"]["median_bound_speedup"] = float(
+            sorted(speedups)[len(speedups) // 2]
+        ) if speedups else 0.0
+        out["derived"]["max_bound_speedup"] = max(speedups) if speedups else 0.0
+    return out
+
+
+def format_table(rows: list) -> str:
+    hdr = (f"{'arch':<22}{'shape':<13}{'mesh':<9}{'compute_s':>11}{'memory_s':>11}"
+           f"{'collect_s':>11}{'dominant':>11}{'useful':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"{r['arch']:<22}{r['shape']:<13}{r['mesh']:<9}"
+            f"{r['compute_s']:>11.4g}{r['memory_s']:>11.4g}{r['collective_s']:>11.4g}"
+            f"{r['dominant']:>11}{r['useful_ratio']:>8.2f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    res = run()
+    if "rows" in res:
+        print(format_table(res["rows"]))
+        print("\ndominant:", res["dominant_counts"])
+    else:
+        print(res["error"])

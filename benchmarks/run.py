@@ -1,0 +1,78 @@
+"""Benchmark harness (deliverable d): one module per paper figure/claim plus
+the roofline and system benchmarks.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3_ring,...]
+
+Each module exposes ``run(quick) -> dict`` (with a ``derived`` summary) and
+``PAPER_CLAIM``; results land in results/bench_<name>.json and a CSV line
+``name,us_per_call,derived...`` is printed per benchmark (us_per_call =
+wall time of the benchmark body).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig3_ring,
+    fig4_erdos_renyi,
+    fig5_sparse_graphs,
+    fig6_annealing,
+    llm_walk_throughput,
+    multi_walk,
+    roofline,
+    theorem1_remark1,
+)
+from benchmarks.common import dump, row, time_call
+
+MODULES = [
+    fig3_ring,
+    fig4_erdos_renyi,
+    fig5_sparse_graphs,
+    fig6_annealing,
+    theorem1_remark1,
+    multi_walk,
+    llm_walk_throughput,
+    roofline,
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes/iters")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+
+    selected = MODULES
+    if args.only:
+        names = set(args.only.split(","))
+        selected = [m for m in MODULES if m.NAME in names]
+        if not selected:
+            print(f"no benchmarks match {args.only!r}", file=sys.stderr)
+            return 2
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in selected:
+        try:
+            result, seconds = time_call(mod.run, args.quick)
+            derived = result.get("derived", {})
+            if "error" in result:
+                print(f"{mod.NAME},0,SKIPPED: {result['error']}")
+                continue
+            dump(mod.NAME, result)
+            print(row(mod.NAME, seconds, derived))
+            if mod is roofline and "rows" in result:
+                print()
+                print(roofline.format_table(result["rows"]))
+                print()
+        except Exception as e:
+            failures += 1
+            print(f"{mod.NAME},0,FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

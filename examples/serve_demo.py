@@ -1,0 +1,45 @@
+"""Serving demo: batched greedy decoding with continuous batching.
+
+Spins up the ServeEngine on the reduced mamba2-370m (SSM: O(1) decode
+state) and the reduced qwen2.5 (KV cache) backbones, submits a bursty
+queue of requests with mixed prompt lengths, and reports throughput +
+slot utilization.  The production decode path for all 10 assigned
+architectures is exercised by the decode_32k / long_500k dry-run shapes.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.launch.serve import Request, ServeEngine
+
+
+def demo(arch: str, n_requests: int = 12, batch: int = 4):
+    cfg = reduced(get_arch(arch))
+    engine = ServeEngine(cfg, batch_size=batch, cache_len=256)
+    rng = np.random.default_rng(0)
+    for rid in range(n_requests):
+        engine.submit(
+            Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(4, 32))).astype(np.int32),
+                max_new_tokens=int(rng.integers(8, 24)),
+            )
+        )
+    stats = engine.run()
+    print(f"{arch:<24} completed {stats['completed']:>3}/{n_requests}   "
+          f"tokens {stats['generated_tokens']:>4}   "
+          f"slot-util {stats['slot_utilization']:.1%}   "
+          f"{stats['tokens_per_sec']:.1f} tok/s")
+
+
+def main():
+    print(f"{'arch':<24} {'results'}")
+    for arch in ("mamba2-370m", "qwen2.5-32b", "olmoe-1b-7b"):
+        demo(arch)
+    print("\n(reduced configs on CPU; decode_32k/long_500k dry-run shapes prove"
+          "\n the full configs lower on the production mesh)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Core contribution of the paper: random-walk transition design + MHLJ."""
+from repro.core.graphs import (
+    Graph,
+    ring,
+    grid2d,
+    watts_strogatz,
+    erdos_renyi,
+    star,
+    complete,
+    expander,
+    from_adjacency,
+)
+from repro.core.transition import (
+    MHLJParams,
+    simple_rw,
+    mh,
+    mh_uniform,
+    mh_importance,
+    mhlj,
+    row_probs_padded,
+)
+from repro.core.levy import (
+    trunc_geom_pmf,
+    levy_matrix,
+    levy_matrix_chained,
+    expected_transitions_per_update,
+    remark1_bound,
+)
+from repro.core.importance import (
+    linear_regression_lipschitz,
+    logistic_regression_lipschitz,
+    importance_distribution,
+    importance_weights,
+)
+from repro.core.walk import (
+    graph_tensors,
+    walk_markov,
+    walk_mhlj,
+    walk_markov_batched,
+    walk_mhlj_batched,
+)
+from repro.core import mixing, entrapment, theory, schedules
+
+__all__ = [
+    "Graph", "ring", "grid2d", "watts_strogatz", "erdos_renyi", "star",
+    "complete", "expander", "from_adjacency",
+    "MHLJParams", "simple_rw", "mh", "mh_uniform", "mh_importance", "mhlj",
+    "row_probs_padded",
+    "trunc_geom_pmf", "levy_matrix", "levy_matrix_chained",
+    "expected_transitions_per_update", "remark1_bound",
+    "linear_regression_lipschitz", "logistic_regression_lipschitz",
+    "importance_distribution", "importance_weights",
+    "graph_tensors", "walk_markov", "walk_mhlj", "walk_markov_batched",
+    "walk_mhlj_batched",
+    "mixing", "entrapment", "theory", "schedules",
+]

@@ -1,0 +1,216 @@
+"""Graph substrate for random-walk decentralized learning.
+
+The paper studies sparse communication graphs (ring, 2-D grid, Watts-Strogatz,
+Erdos-Renyi).  Every node has a self-loop (paper §II.A).  We keep two
+representations:
+
+* a dense adjacency matrix (numpy, ``float64``) used to *construct* transition
+  matrices and compute spectral quantities offline, and
+* a padded neighbor-list tensor (``jnp.int32`` of shape ``(n, max_deg)`` plus a
+  degree vector) used *inside* jitted walk steps and the Pallas transition
+  kernel, where ragged structures are not representable.
+
+Construction is deterministic given a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "ring",
+    "grid2d",
+    "watts_strogatz",
+    "erdos_renyi",
+    "star",
+    "complete",
+    "expander",
+    "from_adjacency",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected graph with self-loops, in both dense and padded forms.
+
+    Attributes:
+      adj: (n, n) float64 {0,1} adjacency, symmetric, unit diagonal.
+      neighbors: (n, max_deg) int32 padded neighbor lists.  Row v holds the
+        neighbor ids of v (including v itself, for the self-loop) followed by
+        padding that repeats v (so sampling a pad index is a harmless self-hop
+        and probability masks make pads unreachable anyway).
+      degrees: (n,) int32 true degrees (including the self-loop).
+      name: human-readable description.
+    """
+
+    adj: np.ndarray
+    neighbors: np.ndarray
+    degrees: np.ndarray
+    name: str = "graph"
+
+    @property
+    def n(self) -> int:
+        return int(self.adj.shape[0])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.neighbors.shape[1])
+
+    def validate(self) -> None:
+        a = self.adj
+        if a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.allclose(a, a.T):
+            raise ValueError("adjacency must be symmetric (undirected graph)")
+        if not np.all(np.diag(a) == 1):
+            raise ValueError("every node needs a self-loop (paper §II.A)")
+        if not np.all((a == 0) | (a == 1)):
+            raise ValueError("adjacency entries must be 0/1")
+        if not _is_connected(a):
+            raise ValueError("graph must be connected")
+        deg = a.sum(axis=1).astype(np.int64)
+        if not np.array_equal(deg, self.degrees.astype(np.int64)):
+            raise ValueError("degree vector inconsistent with adjacency")
+
+
+def _is_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        v = stack.pop()
+        for u in np.nonzero(adj[v])[0]:
+            if not seen[u]:
+                seen[u] = True
+                stack.append(int(u))
+    return bool(seen.all())
+
+
+def from_adjacency(adj: np.ndarray, name: str = "graph") -> Graph:
+    """Build a :class:`Graph` from a 0/1 adjacency; adds self-loops if absent."""
+    adj = np.asarray(adj, dtype=np.float64).copy()
+    np.fill_diagonal(adj, 1.0)
+    adj = np.maximum(adj, adj.T)  # symmetrize
+    degrees = adj.sum(axis=1).astype(np.int32)
+    max_deg = int(degrees.max())
+    n = adj.shape[0]
+    neighbors = np.empty((n, max_deg), dtype=np.int32)
+    for v in range(n):
+        nbrs = np.nonzero(adj[v])[0].astype(np.int32)
+        pad = np.full(max_deg - len(nbrs), v, dtype=np.int32)
+        neighbors[v] = np.concatenate([nbrs, pad])
+    g = Graph(adj=adj, neighbors=neighbors, degrees=degrees, name=name)
+    g.validate()
+    return g
+
+
+def ring(n: int) -> Graph:
+    """Ring of n nodes — the paper's canonical entrapment topology (Fig 2a)."""
+    if n < 3:
+        raise ValueError("ring needs n >= 3")
+    adj = np.zeros((n, n))
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = 1
+    adj[(idx + 1) % n, idx] = 1
+    return from_adjacency(adj, name=f"ring({n})")
+
+
+def grid2d(rows: int, cols: Optional[int] = None) -> Graph:
+    """2-D grid (paper Fig 5a uses ~1000 nodes)."""
+    cols = cols or rows
+    n = rows * cols
+    adj = np.zeros((n, n))
+
+    def nid(r, c):
+        return r * cols + c
+
+    for r in range(rows):
+        for c in range(cols):
+            if r + 1 < rows:
+                adj[nid(r, c), nid(r + 1, c)] = 1
+            if c + 1 < cols:
+                adj[nid(r, c), nid(r, c + 1)] = 1
+    return from_adjacency(adj, name=f"grid2d({rows}x{cols})")
+
+
+def watts_strogatz(n: int, k: int, p: float, seed: int = 0) -> Graph:
+    """Watts-Strogatz small world (paper Fig 5b: WS(1000, 4, 0.1)).
+
+    Standard construction: ring lattice with k nearest neighbors (k even),
+    each "forward" edge rewired with probability p (no self/multi edges).
+    """
+    if k % 2 != 0 or k >= n:
+        raise ValueError("watts_strogatz requires even k < n")
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n))
+    for v in range(n):
+        for j in range(1, k // 2 + 1):
+            adj[v, (v + j) % n] = 1
+            adj[(v + j) % n, v] = 1
+    for v in range(n):
+        for j in range(1, k // 2 + 1):
+            if rng.random() < p:
+                u = (v + j) % n
+                # rewire edge (v, u) -> (v, w)
+                candidates = np.nonzero((adj[v] == 0))[0]
+                candidates = candidates[candidates != v]
+                if len(candidates) == 0:
+                    continue
+                w = int(rng.choice(candidates))
+                adj[v, u] = adj[u, v] = 0
+                adj[v, w] = adj[w, v] = 1
+    g = from_adjacency(adj, name=f"ws({n},{k},{p})")
+    if not _is_connected(g.adj):  # extremely unlikely for paper params; retry
+        return watts_strogatz(n, k, p, seed=seed + 1)
+    return g
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0) -> Graph:
+    """Erdos-Renyi G(n, p) (paper Fig 4 uses ER(1000, 0.1)); resamples until connected."""
+    rng = np.random.default_rng(seed)
+    for attempt in range(64):
+        upper = rng.random((n, n)) < p
+        adj = np.triu(upper, k=1).astype(np.float64)
+        adj = adj + adj.T
+        if _is_connected(np.maximum(adj, np.eye(n))):
+            return from_adjacency(adj, name=f"er({n},{p})")
+    raise RuntimeError(f"could not sample a connected ER({n},{p}) in 64 tries")
+
+
+def star(n: int) -> Graph:
+    """Star graph — worst-case hub topology, useful in entrapment tests."""
+    adj = np.zeros((n, n))
+    adj[0, 1:] = 1
+    adj[1:, 0] = 1
+    return from_adjacency(adj, name=f"star({n})")
+
+
+def complete(n: int) -> Graph:
+    """Complete graph — the centralized-equivalent reference topology."""
+    adj = np.ones((n, n))
+    return from_adjacency(adj, name=f"complete({n})")
+
+
+def expander(n: int, d: int = 6, seed: int = 0) -> Graph:
+    """Random d-regular-ish expander via union of d/2 random perfect matchings.
+
+    Good conductance — a control topology where entrapment should NOT occur.
+    """
+    if n % 2 != 0:
+        raise ValueError("expander builder needs even n")
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n))
+    for _ in range(max(1, d // 2)):
+        perm = rng.permutation(n)
+        for i in range(0, n, 2):
+            a, b = perm[i], perm[i + 1]
+            adj[a, b] = adj[b, a] = 1
+    # also add a ring to guarantee connectivity
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = 1
+    adj[(idx + 1) % n, idx] = 1
+    return from_adjacency(adj, name=f"expander({n},{d})")

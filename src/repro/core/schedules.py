@@ -1,0 +1,33 @@
+"""Jump-probability schedules p_J(t) (paper Fig 6: shrink p_J -> 0 to kill the
+error gap without losing speed).
+
+Each schedule is a factory returning a (T,) float32 numpy array consumable by
+``walk.walk_mhlj`` and the trainers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["constant", "polynomial_decay", "step_decay", "linear_to_zero"]
+
+
+def constant(p_j: float, num_steps: int) -> np.ndarray:
+    return np.full(num_steps, p_j, dtype=np.float32)
+
+
+def polynomial_decay(p_j0: float, num_steps: int, power: float = 1.0, t0: int = 1) -> np.ndarray:
+    """p_J(t) = p_j0 * (t0 / (t0 + t))^power — the Fig-6 style annealing."""
+    t = np.arange(num_steps, dtype=np.float64)
+    return (p_j0 * (t0 / (t0 + t)) ** power).astype(np.float32)
+
+
+def step_decay(p_j0: float, num_steps: int, drop_every: int, factor: float = 0.5) -> np.ndarray:
+    t = np.arange(num_steps)
+    return (p_j0 * factor ** (t // drop_every)).astype(np.float32)
+
+
+def linear_to_zero(p_j0: float, num_steps: int, zero_at: float = 0.8) -> np.ndarray:
+    """Linear ramp from p_j0 to 0 reaching zero at fraction ``zero_at`` of T."""
+    t = np.arange(num_steps, dtype=np.float64)
+    horizon = max(1.0, zero_at * num_steps)
+    return np.maximum(0.0, p_j0 * (1.0 - t / horizon)).astype(np.float32)

@@ -1,0 +1,179 @@
+"""Transition-matrix designs for random-walk decentralized SGD (paper §I, §III, §V).
+
+All builders return dense row-stochastic numpy ``(n, n)`` matrices supported on
+the graph (plus self-loops).  Padded per-row probability tensors for jitted
+sampling are produced by :func:`row_probs_padded`.
+
+Designs implemented:
+
+1. ``simple_rw``        P(v,u) = 1/deg(v)                      (stationary ∝ deg)
+2. ``mh(pi)``           general Metropolis–Hastings, Eq. (6)
+3. ``mh_uniform``       MH targeting uniform π                  (Eq. choice 2)
+4. ``mh_importance``    P_IS of Eq. (7): MH targeting π_IS ∝ L_v
+5. ``mhlj``             P = (1-p_J) P_IS + p_J P_Lévy           (paper §V)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graphs import Graph
+from repro.core import levy as levy_mod
+
+__all__ = [
+    "simple_rw",
+    "mh",
+    "mh_uniform",
+    "mh_importance",
+    "mhlj",
+    "MHLJParams",
+    "row_probs_padded",
+    "is_row_stochastic",
+    "supported_on_graph",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MHLJParams:
+    """Lévy jump hyper-parameters (paper uses (0.1, 0.5, 3) in Fig 3)."""
+
+    p_j: float = 0.1
+    p_d: float = 0.5
+    r: int = 3
+
+    def validate(self) -> None:
+        if not (0.0 <= self.p_j <= 1.0):
+            raise ValueError(f"p_j must be in [0,1], got {self.p_j}")
+        if not (0.0 < self.p_d < 1.0):
+            raise ValueError(f"p_d must be in (0,1), got {self.p_d}")
+        if self.r < 1:
+            raise ValueError(f"r must be >= 1, got {self.r}")
+
+
+def simple_rw(graph: Graph) -> np.ndarray:
+    """Uniform neighbor choice: P(v,u) = 1/deg(v) on edges (incl. self-loop)."""
+    a = graph.adj
+    return a / a.sum(axis=1, keepdims=True)
+
+
+def mh(graph: Graph, pi: np.ndarray, q: Optional[np.ndarray] = None) -> np.ndarray:
+    """General Metropolis–Hastings transition, paper Eq. (6).
+
+    P(i,j) = Q(i,j) min{1, pi_j Q(j,i) / (pi_i Q(i,j))} for i != j on edges,
+    diagonal = leftover mass.  Q defaults to the simple random walk.
+    """
+    pi = np.asarray(pi, dtype=np.float64)
+    if pi.shape != (graph.n,):
+        raise ValueError(f"pi must have shape ({graph.n},), got {pi.shape}")
+    if np.any(pi <= 0):
+        raise ValueError("pi must be strictly positive")
+    pi = pi / pi.sum()
+    q = simple_rw(graph) if q is None else np.asarray(q, dtype=np.float64)
+
+    a = graph.adj
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = (pi[None, :] * q.T) / (pi[:, None] * q)
+    ratio = np.where(q > 0, ratio, 0.0)
+    p = q * np.minimum(1.0, ratio)
+    p *= a  # support constraint (redundant when q respects the graph)
+    np.fill_diagonal(p, 0.0)
+    np.fill_diagonal(p, 1.0 - p.sum(axis=1))
+    # numerical guard: tiny negative diagonals from float error
+    diag = np.diag(p).copy()
+    if np.any(diag < -1e-12):
+        raise AssertionError("MH construction produced negative self-loop mass")
+    np.fill_diagonal(p, np.maximum(diag, 0.0))
+    p /= p.sum(axis=1, keepdims=True)
+    return p
+
+
+def mh_uniform(graph: Graph) -> np.ndarray:
+    """MH targeting the uniform distribution (paper design 2)."""
+    return mh(graph, np.full(graph.n, 1.0 / graph.n))
+
+
+def mh_importance(graph: Graph, lipschitz: np.ndarray) -> np.ndarray:
+    """P_IS of paper Eq. (7): MH targeting pi_IS(v) ∝ L_v.
+
+    Eq. (7) is exactly Eq. (6) with Q = simple RW and pi = pi_IS:
+      P(i,j) = (1/deg(i)) min{1, deg(i) L_j / (deg(j) L_i)}.
+    """
+    lipschitz = np.asarray(lipschitz, dtype=np.float64)
+    if lipschitz.shape != (graph.n,):
+        raise ValueError(
+            f"lipschitz must have shape ({graph.n},), got {lipschitz.shape}"
+        )
+    if np.any(lipschitz <= 0):
+        raise ValueError("Lipschitz constants must be strictly positive")
+    return mh(graph, lipschitz / lipschitz.sum())
+
+
+def mhlj(
+    graph: Graph,
+    lipschitz: np.ndarray,
+    params: MHLJParams,
+    *,
+    chained_levy: bool = True,
+) -> np.ndarray:
+    """MHLJ effective transition: P = (1 - p_J) P_IS + p_J P_Lévy (paper §V).
+
+    ``chained_levy=True`` uses the exact law of Algorithm 1's jump loop
+    (composition of uniform hops); ``False`` uses the paper's adjacency-power
+    closed form.  They coincide on regular graphs (ring, torus grid).
+    """
+    params.validate()
+    p_is = mh_importance(graph, lipschitz)
+    if params.p_j == 0.0:
+        return p_is
+    if chained_levy:
+        p_levy = levy_mod.levy_matrix_chained(graph, params.p_d, params.r)
+    else:
+        p_levy = levy_mod.levy_matrix(graph, params.p_d, params.r)
+    return (1.0 - params.p_j) * p_is + params.p_j * p_levy
+
+
+# ---------------------------------------------------------------------------
+# Validation + padded representation helpers
+# ---------------------------------------------------------------------------
+
+
+def is_row_stochastic(p: np.ndarray, atol: float = 1e-9) -> bool:
+    return bool(
+        np.all(p >= -atol) and np.allclose(p.sum(axis=1), 1.0, atol=atol)
+    )
+
+
+def supported_on_graph(p: np.ndarray, graph: Graph, atol: float = 1e-12) -> bool:
+    """True iff P(i,j) > 0 only where adj(i,j) = 1 ... for 1-hop kernels.
+
+    Note MHLJ with r > 1 is NOT 1-hop supported (jumps traverse up to r edges
+    but each hop uses only local neighbor knowledge) — callers should test the
+    r-hop reachability matrix instead.
+    """
+    off_support = p * (1.0 - np.minimum(graph.adj, 1.0))
+    return bool(np.abs(off_support).max() <= atol)
+
+
+def row_probs_padded(p: np.ndarray, graph: Graph) -> np.ndarray:
+    """Gather each row of a 1-hop-supported P onto the padded neighbor lists.
+
+    Returns (n, max_deg) float32 probabilities aligned with ``graph.neighbors``;
+    padding entries get probability 0.  Only valid for 1-hop kernels
+    (simple RW, MH, P_IS) — the MHLJ *simulation* never materializes P but
+    follows Algorithm 1's two-phase sampling instead.
+    """
+    if not supported_on_graph(p, graph):
+        raise ValueError("row_probs_padded requires a 1-hop-supported kernel")
+    n, max_deg = graph.neighbors.shape
+    out = np.zeros((n, max_deg), dtype=np.float32)
+    for v in range(n):
+        deg = int(graph.degrees[v])
+        nbrs = graph.neighbors[v, :deg]
+        out[v, :deg] = p[v, nbrs]
+        # self-loop mass may appear both as a real neighbor entry and (for
+        # padded slots) must not be duplicated: pads stay at 0.
+    # renormalize tiny float error
+    s = out.sum(axis=1, keepdims=True)
+    return (out / s).astype(np.float32)

@@ -1,0 +1,163 @@
+"""JAX random-walk simulators (paper §II.C + Algorithm 1).
+
+Two simulators, both ``jax.lax.scan``-based and jit/vmap-friendly:
+
+* :func:`walk_markov` — a generic 1-hop time-homogeneous chain given padded
+  per-row probabilities (covers simple RW, MH-uniform, MH-IS).
+* :func:`walk_mhlj` — Algorithm 1 exactly: per iteration flip J~Ber(p_J);
+  J=0 -> one MH-IS hop; J=1 -> d~TruncGeom(p_d, r) uniform hops without
+  updates.  Returns the sequence of *update* nodes v_t plus the number of
+  physical transitions per iteration (Remark-1 accounting).
+
+``p_j`` may be a scalar or a (T,) schedule array (Fig 6 annealing).
+
+Representation: graphs enter as padded neighbor tensors ``neighbors`` of shape
+(n, max_deg) with degree vector ``degrees`` (see ``core.graphs``); 1-hop
+transition rows enter as (n, max_deg) probabilities aligned with neighbors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import Graph
+from repro.core.levy import trunc_geom_pmf
+
+__all__ = [
+    "graph_tensors",
+    "walk_markov",
+    "walk_mhlj",
+    "walk_markov_batched",
+    "walk_mhlj_batched",
+]
+
+
+def graph_tensors(graph: Graph) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device tensors (neighbors int32 (n,max_deg), degrees int32 (n,))."""
+    return jnp.asarray(graph.neighbors), jnp.asarray(graph.degrees)
+
+
+def _categorical_padded(key, probs_row: jnp.ndarray) -> jnp.ndarray:
+    """Sample an index from a padded probability row (pads have prob 0)."""
+    logits = jnp.log(jnp.maximum(probs_row, 1e-38))
+    logits = jnp.where(probs_row > 0, logits, -jnp.inf)
+    return jax.random.categorical(key, logits)
+
+
+def _uniform_neighbor(key, neighbors_row: jnp.ndarray, degree: jnp.ndarray) -> jnp.ndarray:
+    """Uniform true-neighbor choice from a padded row."""
+    idx = jax.random.randint(key, (), 0, degree)
+    return neighbors_row[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def walk_markov(
+    key: jax.Array,
+    row_probs: jnp.ndarray,  # (n, max_deg) float, aligned with neighbors
+    neighbors: jnp.ndarray,  # (n, max_deg) int32
+    v0: Union[int, jnp.ndarray],
+    num_steps: int,
+) -> jnp.ndarray:
+    """Simulate a 1-hop chain; returns trajectory (num_steps+1,) of node ids."""
+
+    def step(carry, key_t):
+        v = carry
+        idx = _categorical_padded(key_t, row_probs[v])
+        v_next = neighbors[v, idx]
+        return v_next, v_next
+
+    keys = jax.random.split(key, num_steps)
+    v0 = jnp.asarray(v0, dtype=jnp.int32)
+    _, traj = jax.lax.scan(step, v0, keys)
+    return jnp.concatenate([v0[None], traj])
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps", "r", "p_d"))
+def walk_mhlj(
+    key: jax.Array,
+    is_row_probs: jnp.ndarray,  # (n, max_deg) P_IS rows
+    neighbors: jnp.ndarray,  # (n, max_deg)
+    degrees: jnp.ndarray,  # (n,)
+    v0: Union[int, jnp.ndarray],
+    num_steps: int,
+    p_j: Union[float, jnp.ndarray],
+    p_d: float,
+    r: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Algorithm 1's node sequence.
+
+    Returns:
+      update_nodes: (num_steps,) int32 — v_t at which update t is applied
+        (element t is the node holding the model when update t runs; the
+        first update runs at v0).
+      transitions: (num_steps,) int32 — physical hops taken after update t
+        (1 for an MH move, d for a jump) — Remark-1 accounting.
+    """
+    p_j_sched = jnp.broadcast_to(jnp.asarray(p_j, dtype=jnp.float32), (num_steps,))
+    d_pmf = jnp.asarray(trunc_geom_pmf(p_d, r), dtype=jnp.float32)
+    d_logits = jnp.log(d_pmf)
+
+    def jump(key_j, v):
+        key_d, key_hops = jax.random.split(key_j)
+        d = 1 + jax.random.categorical(key_d, d_logits)  # in {1..r}
+        hop_keys = jax.random.split(key_hops, r)
+
+        def hop(i, state):
+            v_cur = state
+            v_new = _uniform_neighbor(hop_keys[i], neighbors[v_cur], degrees[v_cur])
+            return jnp.where(i < d, v_new, v_cur)
+
+        v_fin = jax.lax.fori_loop(0, r, hop, v)
+        return v_fin, d.astype(jnp.int32)
+
+    def mh_move(key_m, v):
+        idx = _categorical_padded(key_m, is_row_probs[v])
+        return neighbors[v, idx], jnp.int32(1)
+
+    def step(carry, inputs):
+        v = carry
+        key_t, p_j_t = inputs
+        key_b, key_mv = jax.random.split(key_t)
+        do_jump = jax.random.bernoulli(key_b, p_j_t)
+        v_jump, d_jump = jump(key_mv, v)
+        v_mh, d_mh = mh_move(key_mv, v)
+        v_next = jnp.where(do_jump, v_jump, v_mh)
+        hops = jnp.where(do_jump, d_jump, d_mh)
+        return v_next, (v, hops)
+
+    keys = jax.random.split(key, num_steps)
+    v0 = jnp.asarray(v0, dtype=jnp.int32)
+    _, (update_nodes, transitions) = jax.lax.scan(step, v0, (keys, p_j_sched))
+    return update_nodes, transitions
+
+
+def walk_markov_batched(key, row_probs, neighbors, v0s, num_steps):
+    """vmap over independent walks; v0s: (w,) -> trajectories (w, num_steps+1)."""
+    keys = jax.random.split(key, v0s.shape[0])
+    return jax.vmap(walk_markov, in_axes=(0, None, None, 0, None))(
+        keys, row_probs, neighbors, v0s, num_steps
+    )
+
+
+def walk_mhlj_batched(
+    key, is_row_probs, neighbors, degrees, v0s, num_steps, p_j, p_d, r
+):
+    """vmap Algorithm-1 walks; returns (w, num_steps) update nodes + hops."""
+    keys = jax.random.split(key, v0s.shape[0])
+    fn = functools.partial(
+        walk_mhlj, num_steps=num_steps, p_j=p_j, p_d=p_d, r=r
+    )
+    return jax.vmap(
+        lambda k, v0: fn(k, is_row_probs, neighbors, degrees, v0)
+    )(keys, v0s)
+
+
+def empirical_distribution(update_nodes: np.ndarray, n: int, burn_in: int = 0) -> np.ndarray:
+    """Empirical visit distribution of the update sequence after burn-in."""
+    seq = np.asarray(update_nodes)[..., burn_in:].ravel()
+    counts = np.bincount(seq, minlength=n).astype(np.float64)
+    return counts / counts.sum()

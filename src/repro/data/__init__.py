@@ -1,0 +1,16 @@
+from repro.data.synthetic import (
+    RegressionData,
+    make_heterogeneous_regression,
+    make_homogeneous_regression,
+)
+from repro.data.lm_data import NodeTokenData, make_node_token_shards
+from repro.data.pipeline import NodeDataPipeline
+
+__all__ = [
+    "RegressionData",
+    "make_heterogeneous_regression",
+    "make_homogeneous_regression",
+    "NodeTokenData",
+    "make_node_token_shards",
+    "NodeDataPipeline",
+]

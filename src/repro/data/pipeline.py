@@ -1,0 +1,42 @@
+"""Node-indexed data pipeline feeding the walk-orchestrated training loop.
+
+The walk (host-side orchestration) decides which node's shard produces the
+next global batch; the pipeline materializes that batch (host numpy) and the
+pjit'd train_step consumes it sharded over ('pod','data') along batch.
+
+For full-jax small-scale training (regression), nodes' data lives as device
+arrays and selection is a gather — see ``walk_sgd.trainer``.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.lm_data import NodeTokenData
+
+__all__ = ["NodeDataPipeline"]
+
+
+class NodeDataPipeline:
+    """Stateful host-side pipeline: next_batch(node) -> {tokens, labels}."""
+
+    def __init__(
+        self,
+        data: NodeTokenData,
+        batch_size: int,
+        seq_len: int,
+        seed: int = 0,
+    ) -> None:
+        self.data = data
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self._counter = seed
+
+    def next_batch(self, node: int) -> dict:
+        self._counter += 1
+        return self.data.batch(int(node), self.batch_size, self.seq_len, self._counter)
+
+    def stream(self, nodes: Iterator[int]) -> Iterator[dict]:
+        for v in nodes:
+            yield self.next_batch(v)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel is a subpackage with kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd model-layout wrapper), ref.py (pure-jnp oracle):
+
+* flash_attention — blockwise online-softmax attention (causal/sliding, GQA)
+* ssd             — mamba-2 chunked SSD scan with VMEM-resident state
+* rmsnorm         — fused rmsnorm(+scale)
+* walk_transition — batched MHLJ next-node sampling (the paper's hot spot
+                    at large walk counts): CDF inversion over padded
+                    neighbor rows, Eq.-7 probabilities computed in-kernel
+
+CPU validation uses interpret=True; on TPU the compiled kernels run.
+"""
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.rmsnorm import ops as rmsnorm_ops
+from repro.kernels.walk_transition import ops as walk_ops
+
+__all__ = ["ssd_ops", "flash_ops", "rmsnorm_ops", "walk_ops"]

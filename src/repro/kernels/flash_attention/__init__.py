@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import mha, mha_ref
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention", "mha", "mha_ref", "attention_ref"]

@@ -1,0 +1,145 @@
+"""Flash attention Pallas TPU kernel: blockwise online-softmax attention.
+
+Tiling: grid = (batch, q_head, q_blocks, k_blocks) with the k-block axis
+minor-most — TPU grids execute sequentially, so the running max / denominator
+/ accumulator live in VMEM scratch carried across k-block iterations.
+Q/K/V blocks are (bq, head_dim) / (bk, head_dim) VMEM tiles; head_dim and
+block sizes should be multiples of 128 / the MXU lane width for peak MXU
+utilization (we assert multiples of 8 and pad upstream).
+
+GQA is handled with zero memory overhead: the kv BlockSpec index_map folds
+the query head index onto its kv head (kv = n * K // N) — no repeat of K/V.
+
+Supports causal and sliding-window masks.  Fully-masked k-blocks are skipped
+with ``pl.when`` (the skip is exact for causal/window geometry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref,  # blocks
+    m_scr, l_scr, acc_scr,  # scratch: (bq,1), (bq,1), (bq,h)
+    *, scale: float, causal: bool, window: int, bq: int, bk: int, num_kb: int,
+    kv_len: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # k block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    row = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    col = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level skip: causal blocks fully above the diagonal, or fully
+    # outside the sliding window, contribute nothing.
+    run = jnp.asarray(True)
+    if causal:
+        run = (j * bk) <= (i * bq + bq - 1)
+        if window > 0:
+            # row r attends cols in (r - window, r]; the oldest row of this
+            # q block is i*bq, so the block is dead when its newest col is
+            # older than i*bq - window + 1.
+            run = run & ((j * bk + bk - 1) >= (i * bq - window + 1))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, h)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, h)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, h)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        mask = col < kv_len  # valid-length mask (tail padding)
+        if causal:
+            mask = mask & (col <= row)
+            if window > 0:
+                mask = mask & (col > row - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_scr[...] + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == num_kb - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, N, S, h)
+    k: jnp.ndarray,  # (B, K, T, h)
+    v: jnp.ndarray,  # (B, K, T, h)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, n, s, h = q.shape
+    _, kh, t, _ = k.shape
+    if n % kh:
+        raise ValueError("q heads must be a multiple of kv heads")
+    # Arbitrary lengths: pad to block multiples; padded k columns are masked
+    # inside the kernel (col < kv_len), padded q rows are sliced off below.
+    pad_q = (-s) % block_q
+    pad_k = (-t) % block_k
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    s_pad, t_pad = s + pad_q, t + pad_k
+    scale = h**-0.5
+    num_kb = t_pad // block_k
+    grid = (b, n, s_pad // block_q, num_kb)
+
+    kv_index = lambda bi, ni, qi, ki: (bi, ni * kh // n, ki, 0)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            bq=block_q, bk=block_k, num_kb=num_kb, kv_len=t,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, h), lambda bi, ni, qi, ki: (bi, ni, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, h), kv_index),
+            pl.BlockSpec((1, 1, block_k, h), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, h), lambda bi, ni, qi, ki: (bi, ni, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, s_pad, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s] if pad_q else out
+
+
+flash_attention_kernel = _kernel

@@ -1,0 +1,48 @@
+"""Jit'd public wrapper: model-layout (B, S, N, h) in/out, GQA-aware.
+
+On CPU this dispatches to interpret mode (validation); on TPU the compiled
+kernel runs.  ``use_kernel=False`` falls back to the jnp oracle — the switch
+the model layers use (DESIGN.md: kernels are enabled on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def mha(
+    q: jnp.ndarray,  # (B, S, N, h) — model layout
+    k: jnp.ndarray,  # (B, T, K, h)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention(
+        qt, kt, vt,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=not _is_tpu(),
+    )
+    return out.swapaxes(1, 2)
+
+
+def mha_ref(q, k, v, *, causal=True, window=0):
+    return attention_ref(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2), causal=causal, window=window
+    ).swapaxes(1, 2)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, N, S, h)
+    k: jnp.ndarray,  # (B, K, T, h)
+    v: jnp.ndarray,  # (B, K, T, h)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, n, s, h = q.shape
+    kh = k.shape[1]
+    rep = n // kh
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum(
+        "bnsh,bnth->bnst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (h**-0.5)
+    if causal:
+        row = jnp.arange(s)[:, None]
+        col = jnp.arange(k.shape[2])[None, :]
+        mask = col <= row
+        if window > 0:
+            mask = mask & (col > row - window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnst,bnth->bnsh", probs, v.astype(jnp.float32)).astype(q.dtype)

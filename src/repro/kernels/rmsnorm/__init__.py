@@ -1,0 +1,5 @@
+from repro.kernels.rmsnorm.kernel import rmsnorm_fused
+from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_oracle
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+__all__ = ["rmsnorm_fused", "rmsnorm", "rmsnorm_oracle", "rmsnorm_ref"]

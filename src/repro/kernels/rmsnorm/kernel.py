@@ -1,0 +1,48 @@
+"""Fused RMSNorm Pallas TPU kernel: one HBM round-trip per row block.
+
+Grid over row blocks; block (block_rows, D) in VMEM; fp32 accumulation for
+the mean-square; scale applied in-register before the single store.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_fused"]
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (br, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (normed * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_fused(
+    x: jnp.ndarray,  # (R, D)
+    scale: jnp.ndarray,  # (D,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    r, d = x.shape
+    br = min(block_rows, r)
+    if r % br:
+        br = 1  # degenerate fallback keeps correctness for odd row counts
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,26 @@
+"""Jit'd wrapper: model layout (..., D)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fused
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = rmsnorm_fused(flat, scale, eps=eps, interpret=not _is_tpu())
+    return out.reshape(shape)
+
+
+def rmsnorm_oracle(x, scale, eps: float = 1e-6):
+    return rmsnorm_ref(x, scale, eps)

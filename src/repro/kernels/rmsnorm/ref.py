@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused rmsnorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * (var + eps) ** -0.5 * scale.astype(jnp.float32)).astype(x.dtype)

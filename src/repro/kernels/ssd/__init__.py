@@ -1,0 +1,5 @@
+from repro.kernels.ssd.kernel import ssd_scan
+from repro.kernels.ssd.ops import ssd, ssd_oracle
+from repro.kernels.ssd.ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd", "ssd_oracle", "ssd_ref"]

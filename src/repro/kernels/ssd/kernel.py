@@ -1,0 +1,101 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid = (batch, head, num_chunks) with the chunk axis minor-most: TPU grids
+run sequentially, so the (N, P) SSM state lives in VMEM scratch and is
+carried across chunk iterations — the inter-chunk recurrence costs zero HBM
+round-trips (the key TPU adaptation: on GPU this is a separate state-passing
+kernel; on TPU the sequential grid + VMEM residency fuses it).
+
+Per (b, h, c) iteration, VMEM blocks:
+    x   (Q, P)    head inputs
+    da  (Q, 1)    dt * A   (log-decay increments, <= 0)
+    dt  (Q, 1)
+    b/c (Q, N)    input/output projections (group-expanded upstream)
+Compute (all MXU-shaped):
+    cum    = cumsum(da)                                   (Q,)
+    att    = (C B^T) * exp(cum_i - cum_j) * dt_j, lower-tri
+    y      = att @ x + exp(cum) * (C @ state)
+    state  = exp(cum_Q) * state + (B * exp(cum_Q - cum) * dt)^T @ x
+
+Q (chunk) and P, N should be multiples of the 128-lane MXU width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *, q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, P)
+    da = da_ref[0, 0].astype(jnp.float32)  # (Q, 1)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q, 1)
+    bb = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    cc = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+
+    cum = jnp.cumsum(da[:, 0])  # (Q,)
+    # intra-chunk quadratic part
+    scores = jax.lax.dot_general(
+        cc, bb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_i . B_j
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    att = jnp.where(col <= row, scores * decay, 0.0) * dt[:, 0][None, :]
+    y = jax.lax.dot_general(
+        att, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+    # inter-chunk contribution from the carried state
+    state = state_ref[...]  # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cc, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # state update
+    tail = jnp.exp(cum[-1] - cum) * dt[:, 0]  # (Q,)
+    state_ref[...] = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        bb * tail[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    xs: jnp.ndarray,  # (B, H, L, P) head-major layout
+    da: jnp.ndarray,  # (B, H, L)
+    dt: jnp.ndarray,  # (B, H, L)
+    bs: jnp.ndarray,  # (B, H, L, N) group-expanded
+    cs: jnp.ndarray,  # (B, H, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, l, p = xs.shape
+    n = bs.shape[-1]
+    if l % chunk:
+        raise ValueError(f"L={l} must divide chunk={chunk}")
+    nc = l // chunk
+    grid = (b, h, nc)
+    qp_spec = pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0))
+    qn_spec = pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0))
+    q1_spec = pl.BlockSpec((1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, q=chunk),
+        grid=grid,
+        in_specs=[qp_spec, q1_spec, q1_spec, qn_spec, qn_spec],
+        out_specs=qp_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, l, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xs, da[..., None], dt[..., None], bs, cs)

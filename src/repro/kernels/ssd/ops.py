@@ -1,0 +1,59 @@
+"""Jit'd wrapper: model layout (B, L, H, P) + per-head A, grouped B/C."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(
+    xs: jnp.ndarray,  # (B, L, H, P) — model layout
+    dt: jnp.ndarray,  # (B, L, H) post-softplus
+    a: jnp.ndarray,  # (H,) negative decay rates
+    bs: jnp.ndarray,  # (B, L, G, N)
+    cs: jnp.ndarray,  # (B, L, G, N)
+    chunk: int = 128,
+):
+    """Returns (y (B,L,H,P) fp32, None) — matches layers.mamba2.ssd_chunked."""
+    b, l, h, p = xs.shape
+    g = bs.shape[2]
+    rep = h // g
+    xs_k = xs.transpose(0, 2, 1, 3)  # (B,H,L,P)
+    dt_k = dt.transpose(0, 2, 1)  # (B,H,L)
+    da_k = dt_k * a[None, :, None]
+    bs_k = jnp.repeat(bs, rep, axis=2).transpose(0, 2, 1, 3)  # (B,H,L,N)
+    cs_k = jnp.repeat(cs, rep, axis=2).transpose(0, 2, 1, 3)
+    pad = (-l) % chunk
+    if pad:
+        xs_k = jnp.pad(xs_k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        da_k = jnp.pad(da_k, ((0, 0), (0, 0), (0, pad)))
+        dt_k = jnp.pad(dt_k, ((0, 0), (0, 0), (0, pad)))
+        bs_k = jnp.pad(bs_k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cs_k = jnp.pad(cs_k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    y = ssd_scan(
+        xs_k, da_k, dt_k, bs_k, cs_k, chunk=chunk, interpret=not _is_tpu()
+    )
+    y = y[:, :, :l].transpose(0, 2, 1, 3)  # (B,L,H,P)
+    return y, None
+
+
+def ssd_oracle(xs, dt, a, bs, cs):
+    """Model-layout oracle (exact recurrence)."""
+    h = xs.shape[2]
+    g = bs.shape[2]
+    rep = h // g
+    xs_k = xs.transpose(0, 2, 1, 3)
+    dt_k = dt.transpose(0, 2, 1)
+    da_k = dt_k * a[None, :, None]
+    bs_k = jnp.repeat(bs, rep, axis=2).transpose(0, 2, 1, 3)
+    cs_k = jnp.repeat(cs, rep, axis=2).transpose(0, 2, 1, 3)
+    return ssd_ref(xs_k, da_k, dt_k, bs_k, cs_k).transpose(0, 2, 1, 3)

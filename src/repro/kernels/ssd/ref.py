@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD kernel: exact sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xs, da, dt, bs, cs):
+    """Head-major layout: xs (B,H,L,P), da/dt (B,H,L), bs/cs (B,H,L,N)."""
+    b, h, l, p = xs.shape
+    n = bs.shape[-1]
+
+    def step(state, inp):
+        x_t, da_t, dt_t, b_t, c_t = inp  # (B,H,P),(B,H),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(da_t)
+        state = decay[..., None, None] * state + (
+            dt_t[..., None, None] * b_t[..., None] * x_t[..., None, :]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y
+
+    inputs = (
+        xs.transpose(2, 0, 1, 3).astype(jnp.float32),
+        da.transpose(2, 0, 1).astype(jnp.float32),
+        dt.transpose(2, 0, 1).astype(jnp.float32),
+        bs.transpose(2, 0, 1, 3).astype(jnp.float32),
+        cs.transpose(2, 0, 1, 3).astype(jnp.float32),
+    )
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, inputs)
+    return ys.transpose(1, 2, 0, 3)  # (B,H,L,P)

@@ -1,0 +1,40 @@
+"""Jit'd wrapper for batched MHLJ transitions (multi-walk mode)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.walk_transition.kernel import walk_transition
+from repro.kernels.walk_transition.ref import walk_transition_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("p_j", "p_d", "r"))
+def mhlj_step_batched(
+    key: jax.Array,
+    nodes: jnp.ndarray,
+    row_probs: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    degrees: jnp.ndarray,
+    *,
+    p_j: float,
+    p_d: float,
+    r: int,
+) -> jnp.ndarray:
+    u = jax.random.uniform(key, (nodes.shape[0], 2 + r), jnp.float32)
+    return walk_transition(
+        nodes, row_probs, neighbors, degrees, u,
+        p_j=p_j, p_d=p_d, r=r, interpret=not _is_tpu(),
+    )
+
+
+def mhlj_step_oracle(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):
+    u = jax.random.uniform(key, (nodes.shape[0], 2 + r), jnp.float32)
+    return walk_transition_ref(
+        nodes, row_probs, neighbors, degrees, u, p_j=p_j, p_d=p_d, r=r
+    )

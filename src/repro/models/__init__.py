@@ -1,0 +1,4 @@
+from repro.models import regression
+from repro.models.base import Model
+
+__all__ = ["regression", "Model"]

@@ -1,0 +1,33 @@
+"""Model protocol shared by all architectures in the framework.
+
+A Model is a bundle of pure functions over pytrees — no module state:
+
+  init(rng) -> params                    parameter pytree
+  loss(params, batch, rng) -> (scalar, aux)   training objective
+  apply(params, batch) -> outputs        forward pass (logits etc.)
+  param_specs() -> pytree of PartitionSpec    sharding (same treedef as params)
+  input_specs(shape_cfg) -> dict of ShapeDtypeStruct  dry-run stand-ins
+
+Concrete LLM models are produced by factory functions from a config
+dataclass (see ``repro.configs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+__all__ = ["Model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    name: str
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    apply: Callable[..., Any]
+    param_specs: Optional[Callable[[], Any]] = None
+    input_specs: Optional[Callable[..., Any]] = None
+    # decode-path (serving) hooks; None for encoder-only / non-LM models
+    init_cache: Optional[Callable[..., Any]] = None
+    decode_step: Optional[Callable[..., Any]] = None
+    cache_specs: Optional[Callable[[], Any]] = None

@@ -1,0 +1,200 @@
+"""Encoder-decoder audio backbone — Whisper [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB (per the assignment carve-out):
+``input_specs`` supplies post-conv frame embeddings (B, encoder_len, d_model).
+Everything downstream is fully implemented: sinusoidal-position encoder with
+bidirectional attention, decoder with causal self-attn + cross-attn + GELU
+MLPs, LayerNorms (whisper convention), learned decoder positions.
+
+Decode path: decoder self-attn KV ring cache + cross-KV precomputed once per
+request (stored in the cache pytree).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.base import Model
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import embedding as emb_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers.norms import layernorm, layernorm_init
+from repro.models.model_utils import remat_wrap, scan_layers, stacked_init, layer_scan
+
+__all__ = ["build_encdec_model"]
+
+
+def _sinusoid(length: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2, jnp.float32) / dim)
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def build_encdec_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    dims = attn_mod.AttnDims(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=True,  # whisper uses biases
+        use_rope=False,  # absolute positions, whisper convention
+    )
+
+    def enc_layer_init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": layernorm_init(cfg.d_model),
+            "attn": attn_mod.attn_init(k1, dims, dtype),
+            "ln2": layernorm_init(cfg.d_model),
+            "mlp": mlp_mod.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_layer_init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": layernorm_init(cfg.d_model),
+            "self_attn": attn_mod.attn_init(k1, dims, dtype),
+            "ln_x": layernorm_init(cfg.d_model),
+            "cross_attn": attn_mod.cross_attn_init(k2, dims, dtype),
+            "ln2": layernorm_init(cfg.d_model),
+            "mlp": mlp_mod.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def init(key):
+        k_emb, k_pos, k_enc, k_dec = jax.random.split(key, 4)
+        return {
+            "embedding": emb_mod.embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "dec_pos": (jax.random.normal(k_pos, (8192, cfg.d_model), jnp.float32) * 0.01).astype(dtype),
+            "encoder": stacked_init(enc_layer_init, k_enc, cfg.num_encoder_layers),
+            "ln_enc": layernorm_init(cfg.d_model),
+            "decoder": stacked_init(dec_layer_init, k_dec, cfg.num_layers),
+            "ln_f": layernorm_init(cfg.d_model),
+        }
+
+    def enc_body(lp, x):
+        h = attn_mod.attention_full(
+            lp["attn"], layernorm(lp["ln1"], x), dims, mode="bidir"
+        )
+        x = x + h
+        return x + mlp_mod.gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x))
+
+    def encode(params, frames):
+        x = frames.astype(dtype) + _sinusoid(frames.shape[1], cfg.d_model).astype(dtype)
+        x = scan_layers(enc_body, params["encoder"], x, remat=cfg.remat)
+        return layernorm(params["ln_enc"], x)
+
+    def dec_body_full(lp, carry):
+        x, memory = carry
+        h = attn_mod.attention_full(
+            lp["self_attn"], layernorm(lp["ln1"], x), dims,
+            mode="causal", window=cfg.sliding_window,
+        )
+        x = x + h
+        mem_kv = attn_mod.precompute_cross_kv(lp["cross_attn"], memory, dims)
+        x = x + attn_mod.cross_attention(lp["cross_attn"], layernorm(lp["ln_x"], x), mem_kv, dims)
+        x = x + mlp_mod.gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x))
+        return (x, memory)
+
+    def _trunk(params, batch):
+        memory = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = emb_mod.embed(params["embedding"], tokens)
+        # learned positions (whisper convention); table wraps for seq lengths
+        # beyond 8192 (whisper's real text ctx is 448 — the 32k/500k shapes
+        # are assignment stress-tests, see DESIGN.md §4)
+        pos_ids = jnp.arange(tokens.shape[1]) % params["dec_pos"].shape[0]
+        x = x + params["dec_pos"][pos_ids][None]
+        fn = remat_wrap(dec_body_full, cfg.remat)
+
+        def step(carry, lp):
+            return fn(lp, carry), None
+
+        (x, _), _ = layer_scan(step, (x, memory), params["decoder"])
+        return layernorm(params["ln_f"], x)
+
+    def apply(params, batch):
+        return _trunk(params, batch)
+
+    def loss(params, batch):
+        x = _trunk(params, batch)
+        ce = emb_mod.chunked_softmax_xent(
+            params["embedding"]["table"], x, batch["labels"], cfg.loss_chunks
+        )
+        return ce, {"xent": ce}
+
+    # ---- decode ----
+    def init_cache(batch_size: int, cache_len: int, params=None, frames=None):
+        """Cross-KV requires params+frames; dry-run passes ShapeDtypeStructs."""
+        window = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        self_cache = attn_mod.init_kv_cache(
+            batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        )
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), t
+        )
+        if params is not None and frames is not None:
+            memory = encode(params, frames)
+            cross = jax.vmap(
+                lambda lp: attn_mod.precompute_cross_kv(lp["cross_attn"], memory, dims),
+                in_axes=(0,),
+            )(params["decoder"])
+        else:
+            enc_len = cfg.encoder_len
+            kv = jnp.zeros(
+                (cfg.num_layers, batch_size, enc_len, cfg.num_kv_heads, cfg.resolved_head_dim),
+                dtype,
+            )
+            cross = {"k": kv, "v": kv}
+        return {"self": stack(self_cache), "cross": cross}
+
+    def decode_body(lp, x, cache, pos):
+        self_cache, mem_kv = cache
+        h, new_self = attn_mod.attention_decode(
+            lp["self_attn"], layernorm(lp["ln1"], x), self_cache, pos, dims
+        )
+        x = x + h
+        x = x + attn_mod.cross_attention(
+            lp["cross_attn"], layernorm(lp["ln_x"], x), mem_kv, dims
+        )
+        x = x + mlp_mod.gelu_mlp(lp["mlp"], layernorm(lp["ln2"], x))
+        return x, new_self
+
+    def decode_step(params, tokens, cache, pos):
+        x = emb_mod.embed(params["embedding"], tokens)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos % 8192, 1)[None]
+
+        def step(carry, inputs):
+            lp, sc, ck, cv = inputs
+            y, new_sc = decode_body(lp, carry, (sc, {"k": ck, "v": cv}), pos)
+            return y, new_sc
+
+        x, new_self = layer_scan(
+            step, x, (params["decoder"], cache["self"], cache["cross"]["k"], cache["cross"]["v"])
+        )
+        x = layernorm(params["ln_f"], x)
+        logits = emb_mod.unembed_logits(params["embedding"], x)[:, 0]
+        return logits, {"self": new_self, "cross": cache["cross"]}
+
+    def input_specs(shape, for_decode: bool = False):
+        b, s = shape.global_batch, shape.seq_len
+        if for_decode:
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "frames": jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), dtype),
+        }
+
+    return Model(
+        name=cfg.name,
+        init=init,
+        loss=loss,
+        apply=apply,
+        input_specs=input_specs,
+        init_cache=init_cache,
+        decode_step=decode_step,
+    )

@@ -1,0 +1,28 @@
+"""Build a Model from an ArchConfig, dispatching on family."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.base import Model
+from repro.models.encdec import build_encdec_model
+from repro.models.hybrid import build_hybrid_model
+from repro.models.mamba_model import build_mamba_model
+from repro.models.moe_transformer import build_moe_model
+from repro.models.transformer import build_dense_model
+
+__all__ = ["build_model"]
+
+
+def build_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    if cfg.family in ("dense", "vlm"):
+        return build_dense_model(cfg, dtype)
+    if cfg.family == "moe":
+        return build_moe_model(cfg, dtype)
+    if cfg.family == "ssm":
+        return build_mamba_model(cfg, dtype)
+    if cfg.family == "hybrid":
+        return build_hybrid_model(cfg, dtype)
+    if cfg.family == "audio":
+        return build_encdec_model(cfg, dtype)
+    raise ValueError(f"unknown family {cfg.family!r}")

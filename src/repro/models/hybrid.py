@@ -1,0 +1,210 @@
+"""Hybrid Mamba+Attention+MoE LM — Jamba-1.5-Large [arXiv:2403.19887].
+
+Jamba block structure: periods of ``attn_period`` (=8) layers with ONE
+attention layer (at ``attn_offset``) and 7 mamba layers; an FFN follows every
+mixer, alternating dense / MoE (``moe_every``=2, MoE on odd layers).  No RoPE:
+position information comes from the mamba mixers (Jamba convention).
+
+Implementation: lax.scan over the (num_layers / attn_period) periods with
+period-stacked params; the 8 sublayers inside a period are Python-unrolled
+(static structure), so HLO size stays ~one period.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.base import Model
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import embedding as emb_mod
+from repro.models.layers import mamba2 as mamba_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+from repro.models.mamba_model import mamba_dims_from_cfg
+from repro.models.model_utils import remat_wrap, stacked_init, layer_scan
+from repro.models.moe_transformer import _moe_dims
+from repro.models.transformer import _dims
+
+__all__ = ["build_hybrid_model"]
+
+
+def _period_structure(cfg: ArchConfig):
+    """Static per-period layout: list of (mixer, ffn) tags + index within kind."""
+    period = cfg.attn_period
+    layout = []
+    counters = {"mamba": 0, "moe": 0, "mlp": 0}
+    for i in range(period):
+        mixer = "attn" if i == cfg.attn_offset else "mamba"
+        mixer_idx = counters["mamba"] if mixer == "mamba" else 0
+        if mixer == "mamba":
+            counters["mamba"] += 1
+        ffn = "moe" if (cfg.num_experts and i % cfg.moe_every == cfg.moe_every - 1) else "mlp"
+        ffn_idx = counters[ffn]
+        counters[ffn] += 1
+        layout.append((mixer, mixer_idx, ffn, ffn_idx))
+    return layout, counters
+
+
+def build_hybrid_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    if cfg.num_layers % cfg.attn_period != 0:
+        raise ValueError("hybrid num_layers must be divisible by attn_period")
+    num_periods = cfg.num_layers // cfg.attn_period
+    layout, counts = _period_structure(cfg)
+    adims = _dims(cfg)
+    mdims = mamba_dims_from_cfg(cfg)
+    edims = _moe_dims(cfg)
+
+    def period_init(key):
+        k_m, k_a, k_e, k_f = jax.random.split(key, 4)
+        return {
+            "mamba": stacked_init(
+                lambda k: {"ln": rmsnorm_init(cfg.d_model), "mixer": mamba_mod.mamba_init(k, mdims, dtype)},
+                k_m, counts["mamba"],
+            ),
+            "attn": {"ln": rmsnorm_init(cfg.d_model), "attn": attn_mod.attn_init(k_a, adims, dtype)},
+            "moe": stacked_init(
+                lambda k: {"ln": rmsnorm_init(cfg.d_model), "moe": moe_mod.moe_init(k, edims, dtype)},
+                k_e, counts["moe"],
+            ) if counts["moe"] else {},
+            "mlp": stacked_init(
+                lambda k: {"ln": rmsnorm_init(cfg.d_model), "mlp": mlp_mod.swiglu_init(k, cfg.d_model, cfg.d_ff, dtype)},
+                k_f, counts["mlp"],
+            ) if counts["mlp"] else {},
+        }
+
+    def init(key):
+        k_emb, k_p = jax.random.split(key)
+        return {
+            "embedding": emb_mod.embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "periods": stacked_init(period_init, k_p, num_periods),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+
+    def _sub(tree, idx):
+        return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+    def period_body(pp, x):
+        aux_total = jnp.zeros((), jnp.float32)
+        for mixer, m_idx, ffn, f_idx in layout:
+            if mixer == "attn":
+                lp = pp["attn"]
+                h = attn_mod.attention_full(
+                    lp["attn"], rmsnorm(lp["ln"], x, cfg.norm_eps), adims,
+                    mode="causal", window=cfg.sliding_window,
+                )
+            else:
+                lp = _sub(pp["mamba"], m_idx)
+                h = mamba_mod.mamba_apply(lp["mixer"], rmsnorm(lp["ln"], x, cfg.norm_eps), mdims, use_kernel=cfg.use_kernels)
+            x = x + h
+            if ffn == "moe":
+                lp = _sub(pp["moe"], f_idx)
+                h, aux = moe_mod.moe_apply(lp["moe"], rmsnorm(lp["ln"], x, cfg.norm_eps), edims)
+                aux_total = aux_total + aux["moe_aux_loss"]
+            else:
+                lp = _sub(pp["mlp"], f_idx)
+                h = mlp_mod.swiglu(lp["mlp"], rmsnorm(lp["ln"], x, cfg.norm_eps))
+            x = x + h
+        return x, aux_total / max(counts["moe"], 1)
+
+    def _trunk(params, batch):
+        x = emb_mod.embed(params["embedding"], batch["tokens"])
+        fn = remat_wrap(period_body, cfg.remat)
+
+        def step(carry, pp):
+            new_x, aux = fn(pp, carry)
+            return new_x, aux
+
+        x, auxs = layer_scan(step, x, params["periods"])
+        return rmsnorm(params["ln_f"], x, cfg.norm_eps), jnp.mean(auxs)
+
+    def apply(params, batch):
+        return _trunk(params, batch)[0]
+
+    def loss(params, batch):
+        x, aux_loss = _trunk(params, batch)
+        ce = emb_mod.chunked_softmax_xent(
+            params["embedding"]["table"], x, batch["labels"], cfg.loss_chunks
+        )
+        return ce + 0.01 * aux_loss, {"xent": ce, "moe_aux": aux_loss}
+
+    # ---- decode ----
+    def init_cache(batch_size: int, cache_len: int):
+        window = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        attn_cache = attn_mod.init_kv_cache(
+            batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        )
+        mamba_cache = mamba_mod.init_mamba_cache(batch_size, mdims, dtype)
+        per_period = {
+            "attn": attn_cache,
+            "mamba": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (counts["mamba"],) + x.shape), mamba_cache
+            ),
+        }
+        return {
+            "periods": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (num_periods,) + x.shape), per_period
+            )
+        }
+
+    def period_decode(pp, x, cache, pos):
+        new_cache = {"attn": None, "mamba": [None] * counts["mamba"]}
+        for mixer, m_idx, ffn, f_idx in layout:
+            if mixer == "attn":
+                lp = pp["attn"]
+                h, nc = attn_mod.attention_decode(
+                    lp["attn"], rmsnorm(lp["ln"], x, cfg.norm_eps), cache["attn"], pos, adims
+                )
+                new_cache["attn"] = nc
+            else:
+                lp = _sub(pp["mamba"], m_idx)
+                h, nc = mamba_mod.mamba_decode(
+                    lp["mixer"], rmsnorm(lp["ln"], x, cfg.norm_eps),
+                    _sub(cache["mamba"], m_idx), mdims,
+                )
+                new_cache["mamba"][m_idx] = nc
+            x = x + h
+            if ffn == "moe":
+                lp = _sub(pp["moe"], f_idx)
+                h, _ = moe_mod.moe_apply(lp["moe"], rmsnorm(lp["ln"], x, cfg.norm_eps), edims)
+            else:
+                lp = _sub(pp["mlp"], f_idx)
+                h = mlp_mod.swiglu(lp["mlp"], rmsnorm(lp["ln"], x, cfg.norm_eps))
+            x = x + h
+        stacked_mamba = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_cache["mamba"]
+        )
+        return x, {"attn": new_cache["attn"], "mamba": stacked_mamba}
+
+    def decode_step(params, tokens, cache, pos):
+        x = emb_mod.embed(params["embedding"], tokens)
+
+        def step(carry, inputs):
+            pp, pc = inputs
+            y, nc = period_decode(pp, carry, pc, pos)
+            return y, nc
+
+        x, new_cache = layer_scan(step, x, (params["periods"], cache["periods"]))
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = emb_mod.unembed_logits(params["embedding"], x)[:, 0]
+        return logits, {"periods": new_cache}
+
+    def input_specs(shape, for_decode: bool = False):
+        b, s = shape.global_batch, shape.seq_len
+        if for_decode:
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+
+    return Model(
+        name=cfg.name,
+        init=init,
+        loss=loss,
+        apply=apply,
+        input_specs=input_specs,
+        init_cache=init_cache,
+        decode_step=decode_step,
+    )

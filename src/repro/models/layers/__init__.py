@@ -1,0 +1,3 @@
+from repro.models.layers import norms, rotary, embedding, attention, mlp, moe, mamba2
+
+__all__ = ["norms", "rotary", "embedding", "attention", "mlp", "moe", "mamba2"]

@@ -1,0 +1,78 @@
+"""Token embedding / unembedding + memory-safe chunked cross-entropy.
+
+The chunked cross-entropy never materializes the full (B, S, V) logits tensor:
+it scans over sequence chunks, computing per-chunk logits -> logsumexp ->
+label gather, which caps peak activation memory at (B, chunk, V_shard) and
+lets the backward pass rematerialize per chunk.  This matters at
+vocab=257k x seq=4k x batch=256 (paligemma train_4k would otherwise need a
+~540 GB transient).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "embedding_init",
+    "embed",
+    "unembed_logits",
+    "chunked_softmax_xent",
+]
+
+
+def embedding_init(key, vocab_size: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    table = jax.random.normal(key, (vocab_size, d_model), jnp.float32) * 0.02
+    return {"table": table.astype(dtype)}
+
+
+def embed(params: dict, tokens: jnp.ndarray, scale_by_sqrt_dim: bool = False) -> jnp.ndarray:
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale_by_sqrt_dim:
+        out = out * jnp.sqrt(jnp.asarray(out.shape[-1], out.dtype))
+    return out
+
+
+def unembed_logits(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full logits (B, S, V) — decode path only (S=1)."""
+    return jnp.einsum(
+        "bsd,vd->bsv", x, params["table"], preferred_element_type=jnp.float32
+    )
+
+
+def chunked_softmax_xent(
+    table: jnp.ndarray,  # (V, D) embedding/unembedding weights
+    x: jnp.ndarray,  # (B, S, D) final hidden states
+    labels: jnp.ndarray,  # (B, S) int32; negative labels are masked out
+    num_chunks: int = 8,
+    z_loss: float = 0.0,
+) -> jnp.ndarray:
+    """Mean token cross-entropy over unmasked positions, scanned over S chunks."""
+    from repro.models.model_utils import grad_dtype_guard
+
+    x = grad_dtype_guard(x)
+    b, s, d = x.shape
+    if s % num_chunks != 0:
+        num_chunks = 1
+    chunk = s // num_chunks
+    xc = x.reshape(b, num_chunks, chunk, d).swapaxes(0, 1)  # (C, B, chunk, D)
+    lc = labels.reshape(b, num_chunks, chunk).swapaxes(0, 1)
+
+    def one_chunk(carry, inp):
+        tot, cnt = carry
+        xx, ll = inp  # (B, chunk, D), (B, chunk)
+        mask = (ll >= 0).astype(jnp.float32)
+        safe = jnp.maximum(ll, 0)
+        logits = jnp.einsum(
+            "bsd,vd->bsv", xx, table, preferred_element_type=jnp.float32
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B, chunk)
+        picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        loss = ((lse - picked) * mask).sum()
+        if z_loss > 0.0:
+            loss = loss + z_loss * (jnp.square(lse) * mask).sum()
+        return (tot + loss, cnt + mask.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        one_chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc)
+    )
+    return total / jnp.maximum(count, 1.0)

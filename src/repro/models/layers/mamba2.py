@@ -1,0 +1,274 @@
+"""Mamba-2 (SSD, state-space duality) mixer layer [arXiv:2405.21060].
+
+Selective state space with scalar-per-head decay:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T        (state: (H, N, P))
+    y_t = C_t h_t + D * x_t
+
+Training uses the chunked SSD formulation (quadratic within chunks of length
+Q, linear state passing across chunks) — the same blocking the Pallas
+``ssd_scan`` kernel implements on TPU (MXU-aligned Q).  Decode is the O(1)
+single-step recurrence.  ``ssd_reference`` (exact sequential scan) is the
+oracle used by tests.
+
+Because dt*A <= 0, all decay products are computed in log space directly as
+segment sums of da = dt*A (no log() calls needed) — numerically exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import rmsnorm
+
+__all__ = [
+    "MambaDims",
+    "mamba_init",
+    "mamba_apply",
+    "mamba_decode",
+    "init_mamba_cache",
+    "ssd_chunked",
+    "ssd_reference",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_state: int  # N
+    num_heads: int  # H
+    head_dim: int  # P  (d_inner = H * P)
+    num_groups: int = 1  # G (B/C shared per group)
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.num_groups * self.d_state
+
+
+def mamba_init(key, dims: MambaDims, dtype=jnp.bfloat16) -> dict:
+    k_in, k_conv, k_dt, k_out = jax.random.split(key, 4)
+    d = dims.d_model
+    proj_out = dims.d_inner + dims.conv_channels + dims.num_heads  # z, conv-in, dt
+    dt = jnp.exp(
+        jax.random.uniform(k_dt, (dims.num_heads,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    return {
+        "in_proj": (jax.random.normal(k_in, (d, proj_out), jnp.float32) * d**-0.5).astype(dtype),
+        "conv_w": (jax.random.normal(k_conv, (dims.conv_kernel, dims.conv_channels), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dims.conv_channels,), dtype),
+        "a_log": jnp.log(jnp.arange(1, dims.num_heads + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((dims.num_heads,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "norm_scale": jnp.ones((dims.d_inner,), dtype),
+        "out_proj": (jax.random.normal(k_out, (dims.d_inner, d), jnp.float32) * dims.d_inner**-0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _split_proj(params, x, dims: MambaDims):
+    proj = jnp.einsum("bld,dp->blp", x, params["in_proj"])
+    z, conv_in, dt_raw = jnp.split(
+        proj, [dims.d_inner, dims.d_inner + dims.conv_channels], axis=-1
+    )
+    return z, conv_in, dt_raw
+
+
+def _split_conv_out(conv_out, dims: MambaDims):
+    xs, bs, cs = jnp.split(
+        conv_out,
+        [dims.d_inner, dims.d_inner + dims.num_groups * dims.d_state],
+        axis=-1,
+    )
+    b, l = conv_out.shape[:2]
+    xs = xs.reshape(b, l, dims.num_heads, dims.head_dim)
+    bs = bs.reshape(b, l, dims.num_groups, dims.d_state)
+    cs = cs.reshape(b, l, dims.num_groups, dims.d_state)
+    return xs, bs, cs
+
+
+def ssd_chunked(
+    xs: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H)  post-softplus, fp32
+    a: jnp.ndarray,  # (H,) negative decay rates, fp32
+    bs: jnp.ndarray,  # (B, L, G, N)
+    cs: jnp.ndarray,  # (B, L, G, N)
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # (B, H, N, P) initial state
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD; returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    b, l, h, p = xs.shape
+    g, n = bs.shape[2], bs.shape[3]
+    pad = (-l) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bs = jnp.pad(bs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cs = jnp.pad(cs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc, q = lp // chunk, chunk
+    rep = h // g  # heads per group
+
+    xs = xs.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dt = dt.reshape(b, nc, q, h)
+    bs = jnp.repeat(bs.reshape(b, nc, q, g, n), rep, axis=3).astype(jnp.float32)  # (B,NC,Q,H,N)
+    cs = jnp.repeat(cs.reshape(b, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+
+    da = dt * a[None, None, None, :]  # (B,NC,Q,H) log-decay increments (<=0)
+    cum = jnp.cumsum(da, axis=2)  # inclusive within chunk
+
+    # intra-chunk (quadratic): att[i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j<=i
+    scores = jnp.einsum("bcihn,bcjhn->bchij", cs, bs)
+    cum_t = cum.transpose(0, 1, 3, 2)  # (B,NC,H,Q)
+    decay = jnp.exp(cum_t[..., :, None] - cum_t[..., None, :])  # (B,NC,H,Qi,Qj)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = jnp.where(mask[None, None, None], scores * decay, 0.0)
+    att = att * dt.transpose(0, 1, 3, 2)[:, :, :, None, :]  # multiply dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att, xs)
+
+    # chunk summary states: S_k = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dt  # (B,NC,Q,H)
+    s_k = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", tail, bs, xs)
+
+    # inter-chunk recurrence over NC (sequential scan)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+    h_init = (
+        jnp.zeros((b, h, n, p), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def scan_fn(h_prev, inp):
+        cd, sk = inp  # (B,H), (B,H,N,P)
+        h_new = cd[..., None, None] * h_prev + sk
+        return h_new, h_prev  # emit state ENTERING this chunk
+
+    h_last, h_enter = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (chunk_decay.swapaxes(0, 1), s_k.swapaxes(0, 1)),
+    )
+    h_enter = h_enter.swapaxes(0, 1)  # (B,NC,H,N,P)
+
+    # inter-chunk contribution: y_i += C_i exp(cum_i) H_enter
+    y_inter = jnp.einsum(
+        "bcihn,bcih,bchnp->bcihp", cs, jnp.exp(cum), h_enter
+    )
+    y = (y_intra + y_inter).reshape(b, lp, h, p)[:, :l]
+    return y, h_last
+
+
+def ssd_reference(xs, dt, a, bs, cs, h0=None):
+    """Exact sequential recurrence (oracle).  Same signature minus chunk."""
+    b, l, h, p = xs.shape
+    g, n = bs.shape[2], bs.shape[3]
+    rep = h // g
+    bs = jnp.repeat(bs, rep, axis=2).astype(jnp.float32)
+    cs = jnp.repeat(cs, rep, axis=2).astype(jnp.float32)
+    xs = xs.astype(jnp.float32)
+    h_state = jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h_prev, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dt_t * a[None])  # (B,H)
+        # contrib[b,h,n,p] = dt[b,h] * B[b,h,n] * x[b,h,p]
+        contrib = dt_t[..., None, None] * b_t[..., None] * x_t[:, :, None, :]
+        h_new = decay[..., None, None] * h_prev + contrib
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, h_new)
+        return h_new, y_t
+
+    inputs = (
+        xs.swapaxes(0, 1),
+        dt.swapaxes(0, 1),
+        bs.swapaxes(0, 1),
+        cs.swapaxes(0, 1),
+    )
+    h_last, ys = jax.lax.scan(step, h_state, inputs)
+    return ys.swapaxes(0, 1), h_last
+
+
+def mamba_apply(
+    params: dict, x: jnp.ndarray, dims: MambaDims, use_kernel: bool = False
+) -> jnp.ndarray:
+    """Full-sequence mamba2 block: (B, L, D) -> (B, L, D)."""
+    from repro.models.layers.attention import _maybe_constrain
+
+    z, conv_in, dt_raw = _split_proj(params, x, dims)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xs, bs, cs = _split_conv_out(conv_out, dims)
+    # pin the SSD layout: batch over 'data', heads over 'model' (the grouped
+    # B/C tensors have G=1 group dims that cannot shard, which otherwise
+    # makes XLA replicate the whole batch — §Perf iteration E)
+    xs = _maybe_constrain(xs, ("data", None, "model", None))
+    bs = _maybe_constrain(bs, ("data", None, None, None))
+    cs = _maybe_constrain(cs, ("data", None, None, None))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = _maybe_constrain(dt, ("data", None, "model"))
+    a = -jnp.exp(params["a_log"])
+    if use_kernel:
+        from repro.kernels import ssd_ops
+
+        y, _ = ssd_ops.ssd(xs, dt, a, bs, cs, chunk=dims.chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, a, bs, cs, dims.chunk)
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], dims.d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    return jnp.einsum("bli,id->bld", y, params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) recurrent step with (conv, ssm) cache
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(batch: int, dims: MambaDims, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, dims.conv_kernel - 1, dims.conv_channels), dtype),
+        "ssm": jnp.zeros((batch, dims.num_heads, dims.d_state, dims.head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(
+    params: dict, x: jnp.ndarray, cache: dict, dims: MambaDims
+) -> tuple[jnp.ndarray, dict]:
+    """One-token step. x: (B, 1, D) -> (B, 1, D), updated cache."""
+    z, conv_in, dt_raw = _split_proj(params, x, dims)  # (B,1,*)
+    window = jnp.concatenate([cache["conv"], conv_in.astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"]
+    conv_out = (window * w[None]).sum(axis=1, keepdims=True) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs, bs, cs = _split_conv_out(conv_out, dims)  # (B,1,H,P), (B,1,G,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    rep = dims.num_heads // dims.num_groups
+    b_t = jnp.repeat(bs[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    c_t = jnp.repeat(cs[:, 0], rep, axis=1).astype(jnp.float32)
+    x_t = xs[:, 0].astype(jnp.float32)  # (B,H,P)
+
+    decay = jnp.exp(dt * a[None])  # (B,H)
+    h_new = (
+        decay[..., None, None] * cache["ssm"]
+        + dt[..., None, None] * b_t[..., None] * x_t[..., None, :]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c_t, h_new)
+    y = y + params["d_skip"][None, :, None] * x_t
+    y = y.reshape(x.shape[0], 1, dims.d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z))
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"])
+    return out, {"conv": window[:, 1:], "ssm": h_new}

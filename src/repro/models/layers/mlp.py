@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["swiglu_init", "swiglu", "gelu_mlp_init", "gelu_mlp"]
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model**-0.5, d_ff**-0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    hidden = jax.nn.silu(gate) * up
+    return jnp.einsum("bsf,fd->bsd", hidden, params["w_down"])
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff), jnp.float32) * d_model**-0.5).astype(dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model), jnp.float32) * d_ff**-0.5).astype(dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"]) + params["b_in"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"]) + params["b_out"]

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope"]
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies (head_dim/2,) in fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., seq, heads, head_dim)
+    positions: jnp.ndarray,  # (..., seq) int32
+    theta: float = 10000.0,
+) -> jnp.ndarray:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) — llama 'half' convention."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

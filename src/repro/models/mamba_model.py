@@ -1,0 +1,108 @@
+"""Mamba-2 attention-free LM (mamba2-370m [arXiv:2405.21060]).
+
+Stack of (rmsnorm -> mamba2 mixer -> residual); no separate FFN (mamba2
+follows the mamba convention of mixer-only blocks).  Decode carries
+(conv, ssm-state) caches — O(1) per token, so long_500k is native.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.base import Model
+from repro.models.layers import embedding as emb_mod
+from repro.models.layers import mamba2 as mamba_mod
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+from repro.models.model_utils import scan_layers, scan_layers_cache, stacked_init
+
+__all__ = ["build_mamba_model", "mamba_dims_from_cfg"]
+
+
+def mamba_dims_from_cfg(cfg: ArchConfig) -> mamba_mod.MambaDims:
+    return mamba_mod.MambaDims(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        num_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_head_dim,
+        num_groups=cfg.ssm_groups,
+        conv_kernel=cfg.conv_kernel,
+        chunk=cfg.ssd_chunk,
+    )
+
+
+def build_mamba_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    mdims = mamba_dims_from_cfg(cfg)
+
+    def layer_init(key):
+        return {"ln": rmsnorm_init(cfg.d_model), "mixer": mamba_mod.mamba_init(key, mdims, dtype)}
+
+    def init(key):
+        k_emb, k_layers = jax.random.split(key)
+        return {
+            "embedding": emb_mod.embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "layers": stacked_init(layer_init, k_layers, cfg.num_layers),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+
+    def body(lp, x):
+        return x + mamba_mod.mamba_apply(lp["mixer"], rmsnorm(lp["ln"], x, cfg.norm_eps), mdims, use_kernel=cfg.use_kernels)
+
+    def _trunk(params, batch):
+        x = emb_mod.embed(params["embedding"], batch["tokens"])
+        x = scan_layers(body, params["layers"], x, remat=cfg.remat)
+        return rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+    def apply(params, batch):
+        return _trunk(params, batch)
+
+    def loss(params, batch):
+        x = _trunk(params, batch)
+        ce = emb_mod.chunked_softmax_xent(
+            params["embedding"]["table"], x, batch["labels"], cfg.loss_chunks
+        )
+        return ce, {"xent": ce}
+
+    def init_cache(batch_size: int, cache_len: int):
+        del cache_len  # SSM state is O(1) in sequence length
+        one = mamba_mod.init_mamba_cache(batch_size, mdims, dtype)
+        return {
+            "layers": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one
+            )
+        }
+
+    def decode_body(lp, x, cache, pos):
+        del pos
+        h, new_cache = mamba_mod.mamba_decode(
+            lp["mixer"], rmsnorm(lp["ln"], x, cfg.norm_eps), cache, mdims
+        )
+        return x + h, new_cache
+
+    def decode_step(params, tokens, cache, pos):
+        x = emb_mod.embed(params["embedding"], tokens)
+        x, new_cache = scan_layers_cache(
+            decode_body, params["layers"], cache["layers"], x, pos
+        )
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = emb_mod.unembed_logits(params["embedding"], x)[:, 0]
+        return logits, {"layers": new_cache}
+
+    def input_specs(shape, for_decode: bool = False):
+        b, s = shape.global_batch, shape.seq_len
+        if for_decode:
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+
+    return Model(
+        name=cfg.name,
+        init=init,
+        loss=loss,
+        apply=apply,
+        input_specs=input_specs,
+        init_cache=init_cache,
+        decode_step=decode_step,
+    )

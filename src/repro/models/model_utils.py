@@ -1,0 +1,127 @@
+"""Shared model-assembly machinery: stacked layer init, scan-over-layers with
+remat, decode-cache threading, and the Model bundle builder.
+
+``unrolled_layers()`` switches every layer scan to a full unroll.  XLA's
+cost_analysis counts a ``while`` body ONCE regardless of trip count, so the
+roofline capture (launch/dryrun.py --unroll) lowers with unrolled layers to
+get per-step FLOPs / bytes / collective totals that include every layer;
+normal training/serving keeps the rolled scan (compile-time, code size).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "stacked_init",
+    "scan_layers",
+    "scan_layers_aux",
+    "scan_layers_cache",
+    "remat_wrap",
+    "layer_scan",
+    "unrolled_layers",
+]
+
+_SCAN_UNROLL: int | bool = 1
+
+
+@contextlib.contextmanager
+def unrolled_layers(enable: bool = True):
+    """Context: fully unroll all layer scans (roofline capture mode)."""
+    global _SCAN_UNROLL
+    prev = _SCAN_UNROLL
+    _SCAN_UNROLL = True if enable else 1
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL = prev
+
+
+def layer_scan(step: Callable, init, xs):
+    """lax.scan over stacked layer params honoring the unroll context."""
+    return jax.lax.scan(step, init, xs, unroll=_SCAN_UNROLL)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dtype_guard(dtype_name: str):
+    @jax.custom_vjp
+    def guard(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        return (g.astype(dtype_name),)
+
+    guard.defvjp(fwd, bwd)
+    return guard
+
+
+def grad_dtype_guard(x):
+    """Identity whose COTANGENT is cast back to the primal dtype.
+
+    f32-preferring einsums (attention scores, vocab logits) emit f32
+    cotangents; without a guard at each layer/loss boundary the f32
+    cotangent rides the whole backward residual stream — measured as 48%
+    of deepseek-67b train HBM bytes (EXPERIMENTS.md §Perf F).  Casting the
+    activation gradient to the activation dtype is the standard
+    mixed-precision convention (parameter grads stay untouched)."""
+    return _make_dtype_guard(jnp.dtype(x.dtype).name)(x)
+
+
+def stacked_init(layer_init: Callable, key, n: int):
+    """vmap a per-layer init over n split keys -> params with leading (n,) axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(layer_init)(keys)
+
+
+def remat_wrap(fn: Callable, mode: str) -> Callable:
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    if mode == "none":
+        return fn
+    raise ValueError(f"unknown remat mode {mode!r}")
+
+
+def scan_layers(body: Callable, stacked_params, x, remat: str = "full"):
+    """x -> body(layer_params, x) repeated over the stacked leading axis."""
+    fn = remat_wrap(body, remat)
+
+    def step(carry, lp):
+        return fn(lp, grad_dtype_guard(carry)), None
+
+    out, _ = layer_scan(step, x, stacked_params)
+    return out
+
+
+def scan_layers_aux(body: Callable, stacked_params, x, remat: str = "full"):
+    """Like scan_layers but body returns (x, aux_scalar); returns (x, mean_aux)."""
+    fn = remat_wrap(body, remat)
+
+    def step(carry, lp):
+        new_x, aux = fn(lp, grad_dtype_guard(carry))
+        return new_x, aux
+
+    out, auxs = layer_scan(step, x, stacked_params)
+    return out, jax.tree_util.tree_map(jnp.mean, auxs)
+
+
+def scan_layers_cache(body: Callable, stacked_params, stacked_cache, x, pos):
+    """Decode: thread (x, per-layer cache) through stacked layers."""
+
+    def step(carry, inputs):
+        lp, cache = inputs
+        y, new_cache = body(lp, carry, cache, pos)
+        return y, new_cache
+
+    out, new_caches = layer_scan(step, x, (stacked_params, stacked_cache))
+    return out, new_caches

@@ -1,0 +1,193 @@
+"""MoE decoder-only transformer (DeepSeekMoE-16B, OLMoE-1B-7B).
+
+DeepSeekMoE structure [arXiv:2401.06066]: fine-grained experts (64 routed,
+top-6) + 2 shared experts, first layer dense (d_ff 10944).  OLMoE
+[arXiv:2409.02060]: 64 routed top-8, no shared experts, all layers MoE.
+
+Leading dense layers are unrolled outside the scan (different treedef);
+the homogeneous MoE stack is scanned with stacked params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.base import Model
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import embedding as emb_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+from repro.models.model_utils import remat_wrap, scan_layers_cache, stacked_init, layer_scan
+from repro.models.transformer import _decode_body, _dims
+
+__all__ = ["build_moe_model"]
+
+
+def _moe_dims(cfg: ArchConfig) -> moe_mod.MoEDims:
+    return moe_mod.MoEDims(
+        d_model=cfg.d_model,
+        num_experts=cfg.num_experts,
+        experts_per_token=cfg.experts_per_token,
+        d_expert=cfg.moe_d_ff,
+        num_shared_experts=cfg.num_shared_experts,
+        capacity_factor=cfg.capacity_factor,
+    )
+
+
+def _moe_layer_init(cfg: ArchConfig, dtype):
+    dims = _dims(cfg)
+    mdims = _moe_dims(cfg)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attn_init(k1, dims, dtype),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "moe": moe_mod.moe_init(k2, mdims, dtype),
+        }
+
+    return init
+
+
+def _dense_layer_init(cfg: ArchConfig, dtype):
+    dims = _dims(cfg)
+    d_ff = cfg.dense_d_ff or cfg.d_ff
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attn_init(k1, dims, dtype),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_mod.swiglu_init(k2, cfg.d_model, d_ff, dtype),
+        }
+
+    return init
+
+
+def build_moe_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    dims = _dims(cfg)
+    mdims = _moe_dims(cfg)
+    n_dense = cfg.first_dense_layers
+    n_moe = cfg.num_layers - n_dense
+
+    def init(key):
+        k_emb, k_dense, k_moe = jax.random.split(key, 3)
+        params = {
+            "embedding": emb_mod.embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "moe_layers": stacked_init(_moe_layer_init(cfg, dtype), k_moe, n_moe),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+        if n_dense:
+            params["dense_layers"] = [
+                _dense_layer_init(cfg, dtype)(k)
+                for k in jax.random.split(k_dense, n_dense)
+            ]
+        return params
+
+    def _moe_body(lp, x):
+        h = attn_mod.attention_full(
+            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), dims,
+            mode="causal", window=cfg.sliding_window,
+        )
+        x = x + h
+        h, aux = moe_mod.moe_apply(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), mdims)
+        return x + h, aux["moe_aux_loss"]
+
+    def _dense_body(lp, x):
+        h = attn_mod.attention_full(
+            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), dims,
+            mode="causal", window=cfg.sliding_window,
+        )
+        x = x + h
+        h = mlp_mod.swiglu(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + h
+
+    def _trunk(params, batch):
+        x = emb_mod.embed(params["embedding"], batch["tokens"])
+        dense_fn = remat_wrap(_dense_body, cfg.remat)
+        for lp in params.get("dense_layers", []):
+            x = dense_fn(lp, x)
+        moe_fn = remat_wrap(_moe_body, cfg.remat)
+
+        def step(carry, lp):
+            new_x, aux = moe_fn(lp, carry)
+            return new_x, aux
+
+        x, auxs = layer_scan(step, x, params["moe_layers"])
+        return rmsnorm(params["ln_f"], x, cfg.norm_eps), jnp.mean(auxs)
+
+    def apply(params, batch):
+        return _trunk(params, batch)[0]
+
+    def loss(params, batch):
+        x, aux_loss = _trunk(params, batch)
+        ce = emb_mod.chunked_softmax_xent(
+            params["embedding"]["table"], x, batch["labels"], cfg.loss_chunks
+        )
+        total = ce + 0.01 * aux_loss
+        return total, {"xent": ce, "moe_aux": aux_loss}
+
+    # ---- decode ----
+    def _moe_decode_body(lp, x, cache, pos):
+        h, new_cache = attn_mod.attention_decode(
+            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), cache, pos, dims
+        )
+        x = x + h
+        h, _ = moe_mod.moe_apply(lp["moe"], rmsnorm(lp["ln2"], x, cfg.norm_eps), mdims)
+        return x + h, new_cache
+
+    dense_decode = _decode_body(cfg)
+
+    def init_cache(batch_size: int, cache_len: int):
+        window = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        one = lambda: attn_mod.init_kv_cache(
+            batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        )
+        cache = {
+            "moe_layers": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n_moe,) + x.shape), one()
+            )
+        }
+        if n_dense:
+            cache["dense_layers"] = [one() for _ in range(n_dense)]
+        return cache
+
+    def decode_step(params, tokens, cache, pos):
+        x = emb_mod.embed(params["embedding"], tokens)
+        new_cache = {}
+        if n_dense:
+            dl = []
+            for lp, c in zip(params["dense_layers"], cache["dense_layers"]):
+                x, nc = dense_decode(lp, x, c, pos)
+                dl.append(nc)
+            new_cache["dense_layers"] = dl
+        x, nmc = scan_layers_cache(
+            _moe_decode_body, params["moe_layers"], cache["moe_layers"], x, pos
+        )
+        new_cache["moe_layers"] = nmc
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = emb_mod.unembed_logits(params["embedding"], x)[:, 0]
+        return logits, new_cache
+
+    def input_specs(shape, for_decode: bool = False):
+        b, s = shape.global_batch, shape.seq_len
+        if for_decode:
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+
+    return Model(
+        name=cfg.name,
+        init=init,
+        loss=loss,
+        apply=apply,
+        input_specs=input_specs,
+        init_cache=init_cache,
+        decode_step=decode_step,
+    )

@@ -1,0 +1,42 @@
+"""The paper's models: linear least squares (Eq. 17-18) and logistic regression.
+
+Losses follow the paper exactly:
+  linear:   f_v(x) = (y_v - x^T A_v)^2        L_v = 2 ||A_v||^2
+  logistic: f_v(x) = -[y_v x^T A_v - log(1 + exp(x^T A_v))]   L_v = ||A_v||^2/4
+(the paper writes the logistic *log-likelihood*; we minimize its negative)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "linear_loss",
+    "linear_grad",
+    "logistic_loss",
+    "logistic_grad",
+    "mse_objective",
+]
+
+
+def linear_loss(x: jnp.ndarray, feature: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    resid = target - feature @ x
+    return resid**2
+
+
+linear_grad = jax.grad(linear_loss)
+
+
+def logistic_loss(x: jnp.ndarray, feature: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    z = feature @ x
+    # -(y z - log(1+e^z)) = log(1+e^z) - y z, numerically stable via softplus
+    return jax.nn.softplus(z) - target * z
+
+
+logistic_grad = jax.grad(logistic_loss)
+
+
+def mse_objective(x: jnp.ndarray, features: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Paper's reported metric: sum_v (y_v - A_v x)^2 / |V|."""
+    resid = targets - features @ x
+    return jnp.mean(resid**2)

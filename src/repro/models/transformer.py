@@ -1,0 +1,167 @@
+"""Dense decoder-only transformer LM (llama/qwen/gemma families) plus the
+PaliGemma prefix-LM variant (vlm): stub patch embeddings occupy the first
+``num_prefix_tokens`` positions and the mask is bidirectional over the prefix.
+
+Covers assigned archs: deepseek-7b, deepseek-67b, minitron-8b, qwen2.5-32b
+(qkv_bias=True), paligemma-3b (is_prefix_lm).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.base import Model
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import embedding as emb_mod
+from repro.models.layers import mlp as mlp_mod
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+from repro.models.model_utils import scan_layers, scan_layers_cache, stacked_init
+
+__all__ = ["build_dense_model"]
+
+
+def _dims(cfg: ArchConfig) -> attn_mod.AttnDims:
+    return attn_mod.AttnDims(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        use_rope=cfg.use_rope,
+        repeat_kv=cfg.gqa_repeat_kv,
+    )
+
+
+def _layer_init(cfg: ArchConfig, dtype):
+    dims = _dims(cfg)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attn_init(k1, dims, dtype),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_mod.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    return init
+
+
+def _layer_body(cfg: ArchConfig, mode: str, window: int, prefix_len: int):
+    dims = _dims(cfg)
+
+    def body(lp, x):
+        h = attn_mod.attention_full(
+            lp["attn"],
+            rmsnorm(lp["ln1"], x, cfg.norm_eps),
+            dims,
+            mode=mode,
+            window=window,
+            prefix_len=prefix_len,
+            use_flash=cfg.use_kernels,
+        )
+        x = x + h
+        h = mlp_mod.swiglu(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + h
+
+    return body
+
+
+def _decode_body(cfg: ArchConfig):
+    dims = _dims(cfg)
+
+    def body(lp, x, cache, pos):
+        h, new_cache = attn_mod.attention_decode(
+            lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), cache, pos, dims
+        )
+        x = x + h
+        h = mlp_mod.swiglu(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + h, new_cache
+
+    return body
+
+
+def build_dense_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    mask_mode = "prefix" if cfg.is_prefix_lm else "causal"
+    prefix_len = cfg.num_prefix_tokens if cfg.is_prefix_lm else 0
+
+    def init(key):
+        k_emb, k_layers = jax.random.split(key)
+        return {
+            "embedding": emb_mod.embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "layers": stacked_init(_layer_init(cfg, dtype), k_layers, cfg.num_layers),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+
+    def _trunk(params, batch, window: int):
+        x = emb_mod.embed(params["embedding"], batch["tokens"])
+        if cfg.is_prefix_lm:
+            prefix = batch["prefix_embeddings"].astype(x.dtype)
+            x = jax.lax.dynamic_update_slice(x, prefix, (0, 0, 0))
+        x = scan_layers(
+            _layer_body(cfg, mask_mode, window, prefix_len),
+            params["layers"],
+            x,
+            remat=cfg.remat,
+        )
+        return rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+    def apply(params, batch):
+        return _trunk(params, batch, cfg.sliding_window)
+
+    def loss(params, batch):
+        x = _trunk(params, batch, cfg.sliding_window)
+        ce = emb_mod.chunked_softmax_xent(
+            params["embedding"]["table"], x, batch["labels"], cfg.loss_chunks
+        )
+        return ce, {"xent": ce}
+
+    def init_cache(batch_size: int, cache_len: int):
+        window = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        one = lambda: attn_mod.init_kv_cache(
+            batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+        )
+        return {
+            "layers": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape),
+                one(),
+            )
+        }
+
+    def decode_step(params, tokens, cache, pos):
+        x = emb_mod.embed(params["embedding"], tokens)  # (B,1,D)
+        x, new_layer_cache = scan_layers_cache(
+            _decode_body(cfg), params["layers"], cache["layers"], x, pos
+        )
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = emb_mod.unembed_logits(params["embedding"], x)[:, 0]
+        return logits, {"layers": new_layer_cache}
+
+    def input_specs(shape, for_decode: bool = False):
+        b, s = shape.global_batch, shape.seq_len
+        if for_decode:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        else:
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        if cfg.is_prefix_lm and not for_decode:
+            specs["prefix_embeddings"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_prefix_tokens, cfg.d_model), dtype
+            )
+        return specs
+
+    return Model(
+        name=cfg.name,
+        init=init,
+        loss=loss,
+        apply=apply,
+        input_specs=input_specs,
+        init_cache=init_cache,
+        decode_step=decode_step,
+    )

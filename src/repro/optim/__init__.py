@@ -1,0 +1,13 @@
+from repro.optim.base import GradientTransformation, OptState, chain, identity
+from repro.optim.sgd import sgd, momentum
+from repro.optim.adam import adam, adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.transforms import clip_by_global_norm, add_weight_decay, scale, scale_by_schedule
+from repro.optim.schedules import constant_lr, cosine_decay, warmup_cosine, inverse_sqrt
+
+__all__ = [
+    "GradientTransformation", "OptState", "chain", "identity",
+    "sgd", "momentum", "adam", "adamw", "adafactor",
+    "clip_by_global_norm", "add_weight_decay", "scale", "scale_by_schedule",
+    "constant_lr", "cosine_decay", "warmup_cosine", "inverse_sqrt",
+]

@@ -1,0 +1,85 @@
+"""Adafactor (factored second moments) — the memory-lean optimizer used for
+the largest assigned config (jamba-1.5-large-398b) where full Adam state does
+not fit the per-chip HBM budget; see EXPERIMENTS.md §Dry-run."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+from repro.optim.sgd import ScalarOrSchedule, _lr_at
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    row: object  # factored second moment (rows) or None-like zeros for <2D
+    col: object
+    full: object  # unfactored second moment for <2D params
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(
+    learning_rate: ScalarOrSchedule,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> GradientTransformation:
+    def init(params):
+        def row_init(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape) else jnp.zeros((), jnp.float32)
+
+        def col_init(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p.shape) else jnp.zeros((), jnp.float32))
+
+        def full_init(p):
+            return jnp.zeros(p.shape, jnp.float32) if not _factored(p.shape) else jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            count=jnp.zeros((), jnp.int32),
+            row=jax.tree_util.tree_map(row_init, params),
+            col=jax.tree_util.tree_map(col_init, params),
+            full=jax.tree_util.tree_map(full_init, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+        lr = _lr_at(learning_rate, state.count)
+
+        def upd(g, r, c, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                new_r = beta * r + (1 - beta) * g2.mean(axis=-1)
+                new_c = beta * c + (1 - beta) * g2.mean(axis=-2)
+                r_factor = new_r / jnp.maximum(new_r.mean(axis=-1, keepdims=True), eps)
+                v = r_factor[..., None] * new_c[..., None, :]
+                new_f = f
+            else:
+                new_f = beta * f + (1 - beta) * g2
+                v = new_f
+                new_r, new_c = r, c
+            u = g / jnp.sqrt(jnp.maximum(v, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, new_r, new_c, new_f
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = treedef.flatten_up_to(state.row)
+        flat_c = treedef.flatten_up_to(state.col)
+        flat_f = treedef.flatten_up_to(state.full)
+        outs = [upd(g, r, c, f) for g, r, c, f in zip(flat_g, flat_r, flat_c, flat_f)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_row = treedef.unflatten([o[1] for o in outs])
+        new_col = treedef.unflatten([o[2] for o in outs])
+        new_full = treedef.unflatten([o[3] for o in outs])
+        return updates, AdafactorState(count=count, row=new_row, col=new_col, full=new_full)
+
+    return GradientTransformation(init, update)

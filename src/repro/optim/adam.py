@@ -1,0 +1,72 @@
+"""Adam / AdamW."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+from repro.optim.sgd import ScalarOrSchedule, _lr_at
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adam(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    mu_dtype: jnp.dtype = jnp.float32,
+) -> GradientTransformation:
+    def init(params):
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=mu_dtype), params)
+        nu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        lr = _lr_at(learning_rate, state.count)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(mu_dtype),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: -lr * (m.astype(jnp.float32) / c1) / (jnp.sqrt(v / c2) + eps),
+            mu, nu)
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def adamw(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    mu_dtype: jnp.dtype = jnp.float32,
+) -> GradientTransformation:
+    inner = adam(learning_rate, b1=b1, b2=b2, eps=eps, mu_dtype=mu_dtype)
+
+    def init(params):
+        return inner.init(params)
+
+    def update(grads, state, params):
+        updates, new_state = inner.update(grads, state, params)
+        lr = _lr_at(learning_rate, state.count)
+        updates = jax.tree_util.tree_map(
+            lambda u, p: u - lr * weight_decay * p.astype(jnp.float32),
+            updates, params)
+        return updates, new_state
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,62 @@
+"""Minimal gradient-transformation library (optax is not available offline).
+
+A ``GradientTransformation`` is an (init, update) pair:
+    init(params)                      -> state
+    update(grads, state, params)      -> (updates, state)
+Updates are *added* to params: ``params + updates`` (sign convention: the
+transformations produce the final negative-lr-scaled step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Params = Any
+Updates = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransformation:
+    init: Callable[[Params], OptState]
+    update: Callable[[Updates, OptState, Params], tuple]
+
+
+class ChainState(NamedTuple):
+    inner: tuple
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return ChainState(tuple(t.init(params) for t in transforms))
+
+    def update(grads, state, params=None):
+        new_states = []
+        updates = grads
+        for t, s in zip(transforms, state.inner):
+            updates, s = t.update(updates, s, params)
+            new_states.append(s)
+        return updates, ChainState(tuple(new_states))
+
+    return GradientTransformation(init, update)
+
+
+def identity() -> GradientTransformation:
+    return GradientTransformation(
+        init=lambda params: (),
+        update=lambda g, s, p=None: (g, s),
+    )
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if p is not None else None, params, updates
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,36 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(count):
+        t = jnp.minimum(count.astype(jnp.float32), decay_steps) / decay_steps
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return init_value * ((1 - alpha) * cos + alpha)
+
+    return schedule
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def schedule(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((c - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def inverse_sqrt(peak: float, warmup_steps: int = 1000):
+    def schedule(count):
+        c = jnp.maximum(count.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(c / warmup_steps, jnp.sqrt(warmup_steps / c))
+
+    return schedule

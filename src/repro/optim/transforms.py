@@ -1,0 +1,71 @@
+"""Composable gradient transforms: clipping, weight decay, scaling."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation, global_norm
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = global_norm(grads)
+        scale_factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale_factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def add_weight_decay(weight_decay: float) -> GradientTransformation:
+    """Adds wd * params to the *gradients* (L2, pre-preconditioner)."""
+
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params):
+        upd = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+        )
+        return upd, state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda g: factor * g, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_schedule(schedule: Callable) -> GradientTransformation:
+    def init(params):
+        del params
+        return ScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        s = schedule(state.count)
+        return (
+            jax.tree_util.tree_map(lambda g: s * g, grads),
+            ScheduleState(count=state.count + 1),
+        )
+
+    return GradientTransformation(init, update)

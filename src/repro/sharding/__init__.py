@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    PROFILES,
+    spec_for_leaf,
+    param_specs,
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    named_shardings,
+)
+
+__all__ = [
+    "PROFILES",
+    "spec_for_leaf",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "opt_state_specs",
+    "named_shardings",
+]

@@ -1,0 +1,181 @@
+"""Checkpointing: pytree <-> npz with key-path flattening.
+
+Production shape: atomic write (tmp + rename), monotonically numbered step
+directories, latest-k retention, and a manifest carrying the walk state so a
+restarted job resumes the SAME random-walk trajectory (paper Algorithm 1 is a
+sequential process — resuming from the wrong node would silently change the
+sampled distribution).
+
+Arrays are gathered to host (process 0) before writing; restoring returns
+numpy arrays which the caller re-shards via its NamedShardings (device_put).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "flatten_with_paths",
+    "unflatten_from_paths",
+    "save_pytree",
+    "load_pytree",
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+]
+
+_SEP = "/"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def flatten_with_paths(tree: Any) -> Tuple[dict, Any]:
+    """-> ({path: np.ndarray}, treedef)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = _path_str(path)
+        if key in flat:
+            raise ValueError(f"duplicate checkpoint key {key!r}")
+        flat[key] = np.asarray(leaf)
+    return flat, treedef
+
+
+def unflatten_from_paths(treedef, flat: dict) -> Any:
+    """Rebuild a pytree from a treedef and the path-keyed arrays."""
+    # leaf order of tree_flatten_with_path matches tree_unflatten's order
+    dummy = jax.tree_util.tree_unflatten(treedef, list(range(treedef.num_leaves)))
+    leaves_paths, _ = jax.tree_util.tree_flatten_with_path(dummy)
+    ordered = []
+    for path, _ in leaves_paths:
+        key = _path_str(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        ordered.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    """Atomic npz write of one pytree."""
+    flat, _ = flatten_with_paths(tree)
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load an npz checkpoint into the treedef of ``like``."""
+    _, treedef = flatten_with_paths(like)
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return unflatten_from_paths(treedef, flat)
+
+
+_STEP_RE = re.compile(r"^step_(\d{10})$")
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:010d}")
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(root)
+        if (m := _STEP_RE.match(d)) and os.path.exists(os.path.join(root, d, "MANIFEST.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def save_checkpoint(
+    root: str,
+    step: int,
+    params: Any,
+    opt_state: Any = None,
+    walk_state: Any = None,
+    extra: Optional[dict] = None,
+    keep: int = 3,
+) -> str:
+    """Write one numbered checkpoint; prune to the newest ``keep``."""
+    final = _step_dir(root, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    save_pytree(os.path.join(tmp, "params.npz"), params)
+    manifest = {"step": step, "extra": extra or {}}
+    if opt_state is not None:
+        save_pytree(os.path.join(tmp, "opt_state.npz"), opt_state)
+        manifest["has_opt_state"] = True
+    if walk_state is not None:
+        save_pytree(os.path.join(tmp, "walk_state.npz"), walk_state)
+        manifest["has_walk_state"] = True
+    # manifest written LAST: its presence marks the checkpoint complete
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    if keep > 0:
+        steps = sorted(
+            int(m.group(1)) for d in os.listdir(root) if (m := _STEP_RE.match(d))
+        )
+        for old in steps[:-keep]:
+            shutil.rmtree(_step_dir(root, old), ignore_errors=True)
+    return final
+
+
+def load_checkpoint(
+    root: str,
+    like_params: Any,
+    like_opt_state: Any = None,
+    like_walk_state: Any = None,
+    step: Optional[int] = None,
+) -> dict:
+    """Restore the given (or latest) step; returns dict with restored trees."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root!r}")
+    d = _step_dir(root, step)
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    out = {
+        "step": step,
+        "extra": manifest.get("extra", {}),
+        "params": load_pytree(os.path.join(d, "params.npz"), like_params),
+    }
+    if like_opt_state is not None and manifest.get("has_opt_state"):
+        out["opt_state"] = load_pytree(os.path.join(d, "opt_state.npz"), like_opt_state)
+    if like_walk_state is not None and manifest.get("has_walk_state"):
+        out["walk_state"] = load_pytree(os.path.join(d, "walk_state.npz"), like_walk_state)
+    return out

@@ -1,0 +1,113 @@
+"""Collective-traffic extraction from compiled (SPMD-partitioned) HLO text.
+
+``compiled.as_text()`` shapes are PER-DEVICE after partitioning, so summed
+byte counts are per-chip wire traffic.  For each collective we record the
+result-shape bytes and a modeled ring-cost (bytes actually serialized on the
+slowest link path):
+
+    all-reduce       2 * bytes * (g-1)/g
+    all-gather       bytes * (g-1)/g          (bytes = result, gathered)
+    reduce-scatter   bytes_result * (g-1)     (operand = g * result)
+    all-to-all       bytes * (g-1)/g
+    collective-permute   bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["parse_collectives", "collective_summary"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (handles tuples by summing)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_RE.search(line)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(members))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Extract every collective op: kind, result bytes, group size, ring cost."""
+    ops = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-start") or kind == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        g = _group_size(stripped)
+        if base == "all-reduce":
+            cost = 2.0 * result_bytes * (g - 1) / max(g, 1)
+        elif base == "all-gather":
+            cost = result_bytes * (g - 1) / max(g, 1)
+        elif base == "reduce-scatter":
+            cost = result_bytes * (g - 1)
+        elif base == "all-to-all":
+            cost = result_bytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            cost = float(result_bytes)
+        ops.append(
+            {"kind": base, "bytes": result_bytes, "group": g, "ring_cost_bytes": cost}
+        )
+    return ops
+
+
+def collective_summary(hlo_text: str) -> dict:
+    ops = parse_collectives(hlo_text)
+    by_kind = defaultdict(lambda: {"count": 0, "bytes": 0, "ring_cost_bytes": 0.0})
+    for op in ops:
+        k = by_kind[op["kind"]]
+        k["count"] += 1
+        k["bytes"] += op["bytes"]
+        k["ring_cost_bytes"] += op["ring_cost_bytes"]
+    return {
+        "total_bytes": int(sum(o["bytes"] for o in ops)),
+        "total_ring_cost_bytes": float(sum(o["ring_cost_bytes"] for o in ops)),
+        "num_ops": len(ops),
+        "by_kind": {k: dict(v) for k, v in by_kind.items()},
+    }

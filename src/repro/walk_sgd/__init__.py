@@ -1,0 +1,4 @@
+from repro.walk_sgd.trainer import RWSGDResult, run_rw_sgd
+from repro.walk_sgd.comm_model import CommModel, comm_report
+
+__all__ = ["RWSGDResult", "run_rw_sgd", "CommModel", "comm_report"]

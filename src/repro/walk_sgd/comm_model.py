@@ -1,0 +1,49 @@
+"""Remark-1 communication accounting.
+
+One *transition* = one model hand-off over a graph edge.  MHLJ trades extra
+transitions (jump hops carry the model without updating it) for fewer updates
+to a target accuracy.  This module turns (updates, transitions, model bytes)
+into the paper's cost statement and a bytes-on-the-wire estimate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.levy import expected_transitions_per_update, remark1_bound
+
+__all__ = ["CommModel", "comm_report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    model_bytes: int  # bytes per hand-off (parameters at wire precision)
+    link_bandwidth: float = 1e9  # bytes/s per edge (WAN-ish default)
+    per_hop_latency: float = 1e-3  # seconds
+
+
+def comm_report(
+    transitions: np.ndarray,
+    p_j: float,
+    p_d: float,
+    r: int,
+    comm: CommModel | None = None,
+) -> dict:
+    """Measured vs predicted transitions/update + wire-cost estimate."""
+    measured = float(np.asarray(transitions, dtype=np.float64).mean())
+    exact = expected_transitions_per_update(p_j, p_d, r)
+    bound = remark1_bound(p_j, p_d, r)
+    out = {
+        "transitions_per_update_measured": measured,
+        "transitions_per_update_exact": exact,
+        "transitions_per_update_bound": bound,
+        "within_bound": bool(measured <= bound + 5e-2),
+    }
+    if comm is not None:
+        n_hops = float(np.asarray(transitions, dtype=np.float64).sum())
+        out["wire_bytes_total"] = n_hops * comm.model_bytes
+        out["wire_seconds_est"] = n_hops * (
+            comm.model_bytes / comm.link_bandwidth + comm.per_hop_latency
+        )
+    return out

@@ -1,0 +1,202 @@
+"""Walk-orchestrated training for the large architectures (pjit-sharded).
+
+The paper's loop at datacenter scale (DESIGN.md §2): the random-walk state
+(current silo, RNG, per-silo Lipschitz estimates) is carried INSIDE the jitted
+train_step — the MHLJ transition (Algorithm 1) executes on-device each step,
+so the sampled silo sequence is part of the compiled program and the host
+pipeline just feeds the batch for the *announced* node (walk_state is
+replicated; its node id is fetched asynchronously by the input pipeline).
+
+The MH-IS transition probabilities are computed ON THE FLY from the current
+Lipschitz vector (Eq. 7 needs only deg(v), deg(u), L_v, L_u — local
+information), which supports both the paper's static L_v and the online EMA
+estimator for losses without closed-form smoothness (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import Graph
+from repro.core.levy import trunc_geom_pmf
+from repro.core.transition import MHLJParams
+from repro.models.base import Model
+from repro.optim.base import GradientTransformation, apply_updates, global_norm
+
+__all__ = ["WalkContext", "make_train_step", "make_serve_step", "init_walk_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkContext:
+    """Device-resident graph + MHLJ hyper-parameters (all small tensors)."""
+
+    neighbors: jnp.ndarray  # (n, max_deg) int32, padded with self id
+    degrees: jnp.ndarray  # (n,) int32
+    p_j: float
+    p_d: float
+    r: int
+    online_lipschitz: bool = False
+    lipschitz_ema: float = 0.9
+    # importance-weight clip range: online L_v estimates are noisy early on
+    # and w = L_bar/L_v multiplies the gradient; unclipped extremes (measured
+    # 0.1-6x within 200 steps) destabilize adaptive optimizers.  The paper's
+    # exact closed-form-L_v setting corresponds to clip = (0, inf).
+    weight_clip: tuple = (0.1, 10.0)
+
+    @classmethod
+    def from_graph(
+        cls, graph: Graph, params: MHLJParams, online_lipschitz: bool = False
+    ) -> "WalkContext":
+        return cls(
+            neighbors=jnp.asarray(graph.neighbors),
+            degrees=jnp.asarray(graph.degrees),
+            p_j=params.p_j,
+            p_d=params.p_d,
+            r=params.r,
+            online_lipschitz=online_lipschitz,
+        )
+
+    # -- transition machinery (all shapes static, jit-safe) -----------------
+
+    def _mh_is_row(self, v: jnp.ndarray, lipschitz: jnp.ndarray) -> jnp.ndarray:
+        """P_IS(v, .) over the padded neighbor row, from local info (Eq. 7)."""
+        nbrs = self.neighbors[v]  # (max_deg,)
+        deg_v = self.degrees[v].astype(jnp.float32)
+        deg_u = self.degrees[nbrs].astype(jnp.float32)
+        l_v = lipschitz[v]
+        l_u = lipschitz[nbrs]
+        move = jnp.minimum(1.0 / deg_v, l_u / (deg_u * l_v))
+        is_self = nbrs == v
+        move = jnp.where(is_self, 0.0, move)
+        p_stay = 1.0 - move.sum()
+        n_self = jnp.maximum(is_self.sum(), 1)
+        probs = jnp.where(is_self, p_stay / n_self, move)
+        return jnp.maximum(probs, 0.0)
+
+    def _mh_move(self, key, v, lipschitz):
+        probs = self._mh_is_row(v, lipschitz)
+        logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)), -jnp.inf)
+        idx = jax.random.categorical(key, logits)
+        return self.neighbors[v, idx], jnp.int32(1)
+
+    def _jump(self, key, v):
+        key_d, key_hops = jax.random.split(key)
+        d_logits = jnp.log(jnp.asarray(trunc_geom_pmf(self.p_d, self.r), jnp.float32))
+        d = 1 + jax.random.categorical(key_d, d_logits)
+        hop_keys = jax.random.split(key_hops, self.r)
+
+        def hop(i, v_cur):
+            idx = jax.random.randint(hop_keys[i], (), 0, self.degrees[v_cur])
+            v_new = self.neighbors[v_cur, idx]
+            return jnp.where(i < d, v_new, v_cur)
+
+        return jax.lax.fori_loop(0, self.r, hop, v), d.astype(jnp.int32)
+
+    def advance(self, state: dict) -> dict:
+        key, key_b, key_mv = jax.random.split(state["rng"], 3)
+        v = state["node"]
+        do_jump = jax.random.bernoulli(key_b, state.get("p_j", self.p_j))
+        v_jump, d_jump = self._jump(key_mv, v)
+        v_mh, d_mh = self._mh_move(key_mv, v, state["lipschitz"])
+        return {
+            **state,
+            "rng": key,
+            "node": jnp.where(do_jump, v_jump, v_mh).astype(jnp.int32),
+            "hops": state["hops"] + jnp.where(do_jump, d_jump, d_mh),
+            "updates": state["updates"] + 1,
+        }
+
+    def weight(self, state: dict) -> jnp.ndarray:
+        """Importance weight w(v) = L_bar / L_v (Eq. 12), clipped when the
+        online estimator is active (exact L_v needs no clip)."""
+        lips = state["lipschitz"]
+        w = jnp.mean(lips) / lips[state["node"]]
+        if self.online_lipschitz and self.weight_clip is not None:
+            w = jnp.clip(w, *self.weight_clip)
+        return w
+
+    def update_lipschitz(self, state: dict, grad_norm, param_fp) -> dict:
+        """Online EMA secant estimate of L_v (DESIGN.md adaptation)."""
+        if not self.online_lipschitz:
+            return state
+        v = state["node"]
+        prev_g = state["last_grad_norm"][v]
+        prev_f = state["last_param_fp"][v]
+        seen = state["visited"][v]
+        secant = jnp.abs(grad_norm - prev_g) / jnp.maximum(jnp.abs(param_fp - prev_f), 1e-8)
+        secant = jnp.clip(secant, 1e-3, 1e3)
+        old = state["lipschitz"][v]
+        new = jnp.where(seen, self.lipschitz_ema * old + (1 - self.lipschitz_ema) * secant, old)
+        return {
+            **state,
+            "lipschitz": state["lipschitz"].at[v].set(new),
+            "last_grad_norm": state["last_grad_norm"].at[v].set(grad_norm),
+            "last_param_fp": state["last_param_fp"].at[v].set(param_fp),
+            "visited": state["visited"].at[v].set(True),
+        }
+
+
+def init_walk_state(
+    n_nodes: int,
+    lipschitz: Optional[np.ndarray] = None,
+    v0: int = 0,
+    seed: int = 0,
+    online: bool = False,
+) -> dict:
+    state = {
+        "node": jnp.asarray(v0, jnp.int32),
+        "rng": jax.random.PRNGKey(seed),
+        "lipschitz": (
+            jnp.asarray(lipschitz, jnp.float32)
+            if lipschitz is not None
+            else jnp.ones((n_nodes,), jnp.float32)
+        ),
+        "hops": jnp.zeros((), jnp.int32),
+        "updates": jnp.zeros((), jnp.int32),
+    }
+    if online:
+        state.update(
+            last_grad_norm=jnp.zeros((n_nodes,), jnp.float32),
+            last_param_fp=jnp.zeros((n_nodes,), jnp.float32),
+            visited=jnp.zeros((n_nodes,), bool),
+        )
+    return state
+
+
+def make_train_step(
+    model: Model,
+    optimizer: GradientTransformation,
+    walk: WalkContext,
+) -> Callable:
+    """Jittable (params, opt_state, walk_state, batch) -> updated + metrics."""
+
+    def train_step(params, opt_state, walk_state, batch):
+        (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        w = walk.weight(walk_state)
+        grads = jax.tree_util.tree_map(lambda g: g * w.astype(g.dtype), grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if walk.online_lipschitz:
+            gn = global_norm(grads)
+            fp = global_norm(params)
+            walk_state = walk.update_lipschitz(walk_state, gn, fp)
+        walk_state = walk.advance(walk_state)
+        metrics = {"loss": loss, "weight": w, **aux}
+        return params, opt_state, walk_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """Jittable batched greedy decode step: (params, cache, tokens, pos)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, cache
+
+    return serve_step

@@ -1,0 +1,103 @@
+"""Beyond-paper: W parallel MHLJ walks with periodic parameter averaging.
+
+The paper's algorithm is a SINGLE walk — communication-minimal but
+sequential.  At datacenter scale the multi-pod mesh gives us W pods; we run
+one independent MHLJ walk per pod and average parameters every
+``avg_every`` updates (a token-algorithm analogue of local-SGD/FedAvg).
+
+Averaging W walks divides the Markov-sampling variance term of Theorem 1 by
+~W while keeping per-walk communication at the paper's Remark-1 budget; the
+only extra cost is one all-reduce of the parameters every ``avg_every``
+steps over the 'pod' axis.  The error-gap term is unchanged (each walk runs
+the same perturbed chain).  Benchmarked against the faithful single walk in
+benchmarks/ (EXPERIMENTS.md §Perf "beyond-paper").
+
+Implementation: parameters/optimizer/walk states are stacked on a leading
+walk axis and the single-walk train step is vmapped; on the production mesh
+the walk axis is sharded over 'pod' so each pod executes exactly one walk.
+``average_params`` is the periodic all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import Model
+from repro.optim.base import GradientTransformation
+from repro.walk_sgd.llm_trainer import WalkContext, init_walk_state, make_train_step
+
+__all__ = [
+    "init_multi_walk_state",
+    "stack_params",
+    "make_multi_walk_step",
+    "average_params",
+]
+
+
+def stack_params(params, num_walks: int):
+    """Replicate a param pytree along a new leading walk axis."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (num_walks,) + p.shape), params
+    )
+
+
+def init_multi_walk_state(
+    n_nodes: int,
+    num_walks: int,
+    lipschitz: Optional[np.ndarray] = None,
+    v0s: Optional[Sequence[int]] = None,
+    seed: int = 0,
+):
+    """Stacked walk states with distinct start nodes and RNG streams."""
+    if v0s is None:
+        rng = np.random.default_rng(seed)
+        v0s = rng.choice(n_nodes, size=num_walks, replace=num_walks > n_nodes)
+    states = [
+        init_walk_state(n_nodes, lipschitz, v0=int(v), seed=seed * 1009 + i)
+        for i, v in enumerate(v0s)
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def average_params(params_w):
+    """All-walk parameter average, re-broadcast to every walk (the periodic
+    'pod'-axis all-reduce; XLA lowers the mean to an all-reduce when the
+    walk axis is sharded over 'pod')."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(
+            jnp.mean(p, axis=0, keepdims=True), p.shape
+        ).astype(p.dtype),
+        params_w,
+    )
+
+
+def make_multi_walk_step(
+    model: Model,
+    optimizer: GradientTransformation,
+    walk: WalkContext,
+    avg_every: int = 0,
+) -> Callable:
+    """Jittable (params_w, opt_w, walk_w, batches_w, step_idx) -> updated.
+
+    ``batches_w`` carries one batch per walk (leading walk axis).  When
+    ``avg_every > 0``, parameters are averaged across walks every
+    ``avg_every`` steps (local-SGD style).
+    """
+    single = make_train_step(model, optimizer, walk)
+    vstep = jax.vmap(single)
+
+    def step(params_w, opt_w, walk_w, batches_w, step_idx):
+        params_w, opt_w, walk_w, metrics = vstep(params_w, opt_w, walk_w, batches_w)
+        if avg_every > 0:
+            do_avg = (step_idx + 1) % avg_every == 0
+            params_w = jax.tree_util.tree_map(
+                lambda avg, raw: jnp.where(do_avg, avg, raw),
+                average_params(params_w),
+                params_w,
+            )
+        return params_w, opt_w, walk_w, metrics
+
+    return step

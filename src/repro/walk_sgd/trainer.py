@@ -1,0 +1,200 @@
+"""Full-JAX random-walk SGD trainer (paper Algorithm 1 + baselines).
+
+Runs the *entire* T-iteration training as one ``lax.scan``: per iteration the
+carried state is (model x, walk position v); the update applies the
+importance-weighted stochastic gradient of the visited node's local loss
+(Eq. 12), and the walk advances per the chosen method:
+
+  method='uniform'    MH targeting uniform pi, plain gradient (w=1)
+  method='importance' MH-IS (Eq. 7), weighted gradient w(v)=L_bar/L_v
+  method='mhlj'       Algorithm 1 (MH-IS + Levy jumps), weighted gradient
+  method='simple'     simple random walk, plain gradient (degree-biased)
+
+This is the regression-scale engine used for the paper's figures; the
+pjit-sharded LLM engine is ``walk_sgd.llm_trainer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transition as trans_mod
+from repro.core.graphs import Graph
+from repro.core.levy import trunc_geom_pmf
+from repro.core.transition import MHLJParams
+from repro.core.walk import graph_tensors
+from repro.data.synthetic import RegressionData
+from repro.models import regression as reg
+
+__all__ = ["RWSGDResult", "run_rw_sgd"]
+
+METHODS = ("uniform", "importance", "mhlj", "simple")
+
+
+@dataclasses.dataclass
+class RWSGDResult:
+    mse: np.ndarray  # (T+1,) objective trace (paper Fig-3 metric)
+    update_nodes: np.ndarray  # (T,)
+    transitions: np.ndarray  # (T,) physical hops per update (Remark 1)
+    x_final: np.ndarray
+    method: str
+
+    @property
+    def transitions_per_update(self) -> float:
+        return float(self.transitions.mean())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "r", "p_d", "use_weights", "use_jumps", "loss_grad"),
+)
+def _run_scan(
+    key,
+    x0,
+    features,
+    targets,
+    weights,  # (n,) L_bar / L_v (ones when unweighted)
+    row_probs,  # (n, max_deg)
+    neighbors,
+    degrees,
+    v0,
+    num_steps: int,
+    gamma: float,
+    p_j_sched,  # (num_steps,)
+    p_d: float,
+    r: int,
+    use_weights: bool,
+    use_jumps: bool,
+    loss_grad,  # static callable: grad of per-node loss
+):
+    d_logits = jnp.log(jnp.asarray(trunc_geom_pmf(p_d, r), jnp.float32)) if use_jumps else None
+
+    def mh_move(key_m, v):
+        probs = row_probs[v]
+        logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)), -jnp.inf)
+        idx = jax.random.categorical(key_m, logits)
+        return neighbors[v, idx], jnp.int32(1)
+
+    def jump(key_j, v):
+        key_d, key_hops = jax.random.split(key_j)
+        d = 1 + jax.random.categorical(key_d, d_logits)
+        hop_keys = jax.random.split(key_hops, r)
+
+        def hop(i, v_cur):
+            idx = jax.random.randint(hop_keys[i], (), 0, degrees[v_cur])
+            v_new = neighbors[v_cur, idx]
+            return jnp.where(i < d, v_new, v_cur)
+
+        return jax.lax.fori_loop(0, r, hop, v), d.astype(jnp.int32)
+
+    def step(carry, inputs):
+        x, v = carry
+        key_t, p_j_t = inputs
+        g = loss_grad(x, features[v], targets[v])
+        w = jnp.where(use_weights, weights[v], 1.0)
+        x_new = x - gamma * w * g
+
+        key_b, key_mv = jax.random.split(key_t)
+        if use_jumps:
+            do_jump = jax.random.bernoulli(key_b, p_j_t)
+            v_jump, d_jump = jump(key_mv, v)
+            v_mh, d_mh = mh_move(key_mv, v)
+            v_next = jnp.where(do_jump, v_jump, v_mh)
+            hops = jnp.where(do_jump, d_jump, d_mh)
+        else:
+            v_next, hops = mh_move(key_mv, v)
+
+        mse = reg.mse_objective(x_new, features, targets)
+        return (x_new, v_next), (mse, v, hops)
+
+    keys = jax.random.split(key, num_steps)
+    (x_fin, _), (mses, nodes, hops) = jax.lax.scan(
+        step, (x0, jnp.asarray(v0, jnp.int32)), (keys, p_j_sched)
+    )
+    mse0 = reg.mse_objective(x0, features, targets)
+    return x_fin, jnp.concatenate([mse0[None], mses]), nodes, hops
+
+
+def run_rw_sgd(
+    method: str,
+    graph: Graph,
+    data: RegressionData,
+    gamma: float,
+    num_steps: int,
+    *,
+    mhlj_params: Optional[MHLJParams] = None,
+    p_j_schedule: Optional[np.ndarray] = None,
+    loss: str = "linear",
+    x0: Optional[np.ndarray] = None,
+    v0: int = 0,
+    seed: int = 0,
+) -> RWSGDResult:
+    """Run one RW-SGD training; returns the Fig-3 style MSE trace."""
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}")
+    lips = data.lipschitz
+    if method == "uniform":
+        p = trans_mod.mh_uniform(graph)
+        use_weights, use_jumps = False, False
+    elif method == "simple":
+        p = trans_mod.simple_rw(graph)
+        use_weights, use_jumps = False, False
+    elif method == "importance":
+        p = trans_mod.mh_importance(graph, lips)
+        use_weights, use_jumps = True, False
+    else:  # mhlj
+        mhlj_params = mhlj_params or MHLJParams()
+        mhlj_params.validate()
+        p = trans_mod.mh_importance(graph, lips)  # MH part; jumps sampled live
+        use_weights, use_jumps = True, True
+
+    row_probs = jnp.asarray(trans_mod.row_probs_padded(p, graph))
+    neighbors, degrees = graph_tensors(graph)
+    weights = jnp.asarray(lips.mean() / lips, jnp.float32)
+
+    if use_jumps:
+        if p_j_schedule is not None:
+            p_j_sched = jnp.asarray(p_j_schedule, jnp.float32)
+            if p_j_sched.shape != (num_steps,):
+                raise ValueError("p_j_schedule must have shape (num_steps,)")
+        else:
+            p_j_sched = jnp.full((num_steps,), mhlj_params.p_j, jnp.float32)
+        p_d, r = mhlj_params.p_d, mhlj_params.r
+    else:
+        p_j_sched = jnp.zeros((num_steps,), jnp.float32)
+        p_d, r = 0.5, 1  # unused
+
+    grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
+    x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
+
+    x_fin, mses, nodes, hops = _run_scan(
+        jax.random.PRNGKey(seed),
+        x0,
+        jnp.asarray(data.features, jnp.float32),
+        jnp.asarray(data.targets, jnp.float32),
+        weights,
+        row_probs,
+        neighbors,
+        degrees,
+        v0,
+        num_steps,
+        gamma,
+        p_j_sched,
+        p_d,
+        r,
+        use_weights,
+        use_jumps,
+        grad_fn,
+    )
+    return RWSGDResult(
+        mse=np.asarray(mses),
+        update_nodes=np.asarray(nodes),
+        transitions=np.asarray(hops),
+        x_final=np.asarray(x_fin),
+        method=method,
+    )

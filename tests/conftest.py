@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+only launch/dryrun.py forces 512 placeholder devices (system requirement)."""
+import numpy as np
+import pytest
+
+from repro.core import MHLJParams, ring
+from repro.data import make_heterogeneous_regression
+
+
+@pytest.fixture(scope="session")
+def small_ring():
+    return ring(16)
+
+
+@pytest.fixture(scope="session")
+def hetero_lipschitz():
+    lips = np.ones(16)
+    lips[3] = 50.0
+    return lips
+
+
+@pytest.fixture(scope="session")
+def mhlj_params():
+    return MHLJParams(p_j=0.1, p_d=0.5, r=3)
+
+
+@pytest.fixture(scope="session")
+def small_hetero_data():
+    return make_heterogeneous_regression(
+        32, dim=6, sigma_high_sq=100.0, p_high=0.05, seed=0
+    )

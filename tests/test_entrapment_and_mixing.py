@@ -1,0 +1,106 @@
+"""The paper's core phenomenon: entrapment under MH-IS on sparse graphs, and
+its resolution by MHLJ (paper §IV-§V, Theorem 1 ingredients)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    MHLJParams,
+    complete,
+    expander,
+    grid2d,
+    mh_importance,
+    mh_uniform,
+    mhlj,
+    ring,
+)
+from repro.core import entrapment, mixing, theory
+
+
+def _trap_instance(n=16, trap=3, strength=50.0):
+    lips = np.ones(n)
+    lips[trap] = strength
+    return lips, trap
+
+
+def test_entrapment_dwell_time_on_ring():
+    """Detailed balance forces huge dwell at the important node (Eq. 8)."""
+    g = ring(16)
+    lips, trap = _trap_instance()
+    p_is = mh_importance(g, lips)
+    dwell = entrapment.expected_dwell_time(p_is)
+    assert dwell[trap] > 20  # ~ deg/2 * L_trap / L_neighbor scale
+    assert dwell[trap] > 10 * np.median(dwell)
+
+
+def test_mhlj_cuts_dwell_time(mhlj_params):
+    g = ring(16)
+    lips, trap = _trap_instance()
+    dwell_is = entrapment.expected_dwell_time(mh_importance(g, lips))[trap]
+    dwell_mhlj = entrapment.expected_dwell_time(mhlj(g, lips, mhlj_params))[trap]
+    assert dwell_mhlj < 0.3 * dwell_is
+
+
+@pytest.mark.parametrize("graph_fn", [lambda: ring(16), lambda: grid2d(4, 4)])
+def test_jumps_shrink_mixing_time_on_sparse_graphs(graph_fn, mhlj_params):
+    """Paper §VI: tau_mix(MHLJ) < tau_mix(MH-IS) on sparse trap graphs."""
+    g = graph_fn()
+    lips, _ = _trap_instance(g.n)
+    t_is = mixing.mixing_time_tv(mh_importance(g, lips))
+    t_mhlj = mixing.mixing_time_tv(mhlj(g, lips, mhlj_params))
+    assert t_mhlj < t_is
+
+
+def test_no_entrapment_on_well_connected_graph(mhlj_params):
+    """Entrapment is a sparse-graph phenomenon (paper §IV): on a complete
+    graph the IS walk mixes fast even with extreme heterogeneity."""
+    g = complete(16)
+    lips, _ = _trap_instance(16)
+    assert mixing.mixing_time_tv(mh_importance(g, lips)) < 64
+
+
+def test_spectral_gap_ordering(mhlj_params):
+    g = ring(20)
+    lips, _ = _trap_instance(20)
+    gap_is = mixing.spectral_gap(mh_importance(g, lips))
+    gap_mhlj = mixing.spectral_gap(mhlj(g, lips, mhlj_params))
+    assert gap_mhlj > gap_is
+
+
+def test_mixing_time_bounds_bracket_empirical(small_ring, hetero_lipschitz):
+    p = mh_uniform(small_ring)
+    t_emp = mixing.mixing_time_tv(p, eps=0.25)
+    bounds = mixing.mixing_time_bounds(p, eps=0.25)
+    assert bounds["lower"] <= t_emp <= bounds["upper"] + 1
+
+
+def test_conductance_explains_trap():
+    g = ring(16)
+    lips, _ = _trap_instance()
+    phi_is = mixing.conductance(mh_importance(g, lips))
+    phi_uni = mixing.conductance(mh_uniform(g))
+    assert phi_is < phi_uni  # the IS chain has the tighter bottleneck
+
+
+def test_error_gap_scales_quadratically_in_pj(small_ring, hetero_lipschitz):
+    """Theorem 1's second term is O(p_J^2 ||P_IS - P_Levy||_1^2)."""
+    gaps = []
+    for p_j in (0.05, 0.1, 0.2):
+        t = theory.theorem1_terms(
+            small_ring, hetero_lipschitz, MHLJParams(p_j, 0.5, 3), num_iters=1000
+        )
+        gaps.append(t.gap_term)
+    # doubling p_j quadruples the gap term
+    np.testing.assert_allclose(gaps[1] / gaps[0], 4.0, rtol=1e-6)
+    np.testing.assert_allclose(gaps[2] / gaps[1], 4.0, rtol=1e-6)
+
+
+def test_perturbation_l1_bounded_by_n_squared(small_ring, hetero_lipschitz, mhlj_params):
+    pert = theory.perturbation_l1(small_ring, hetero_lipschitz, mhlj_params)
+    assert 0 < pert <= small_ring.n**2  # paper: "upper bounded by n^2"
+
+
+def test_needell_speedup_prediction(hetero_lipschitz):
+    rates = theory.needell_rates(hetero_lipschitz, num_iters=1000)
+    # heterogeneous: L_max >> L_bar ~ L_min => IS rate better than uniform
+    assert rates["importance"] < rates["uniform"]
+    assert rates["speedup_predicted"] > 1.0

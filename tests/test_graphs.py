@@ -1,0 +1,56 @@
+"""Graph substrate tests incl. hypothesis property checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graphs
+
+
+@pytest.mark.parametrize(
+    "builder,args",
+    [
+        (graphs.ring, (11,)),
+        (graphs.grid2d, (4, 5)),
+        (graphs.watts_strogatz, (24, 4, 0.1)),
+        (graphs.erdos_renyi, (20, 0.3)),
+        (graphs.star, (9,)),
+        (graphs.complete, (7,)),
+        (graphs.expander, (16, 4)),
+    ],
+)
+def test_builders_valid(builder, args):
+    g = builder(*args)
+    g.validate()  # symmetric, self-loops, connected, degrees consistent
+
+
+def test_ring_structure():
+    g = graphs.ring(8)
+    assert g.degrees.tolist() == [3] * 8  # two neighbors + self-loop
+    assert g.adj[0, 1] == 1 and g.adj[0, 7] == 1 and g.adj[0, 2] == 0
+
+
+def test_neighbor_padding_is_self():
+    g = graphs.star(6)
+    # leaves have degree 2 (hub + self); padding must repeat the node id
+    for v in range(1, 6):
+        row = g.neighbors[v]
+        deg = g.degrees[v]
+        assert set(row[:deg].tolist()) == {0, v}
+        assert all(x == v for x in row[deg:])
+
+
+@given(n=st.integers(4, 40), seed=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_er_graph_properties(n, seed):
+    g = graphs.erdos_renyi(n, 0.4, seed=seed)
+    g.validate()
+    assert g.n == n
+    assert g.max_degree <= n
+
+
+@given(rows=st.integers(2, 6), cols=st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_grid_node_count_and_degree_bounds(rows, cols):
+    g = graphs.grid2d(rows, cols)
+    assert g.n == rows * cols
+    assert int(g.degrees.max()) <= 5  # 4 grid neighbors + self

@@ -1,0 +1,130 @@
+"""Per-kernel validation (deliverable c): sweep shapes/dtypes and
+assert_allclose against the pure-jnp ref.py oracle.  Pallas kernels run in
+interpret mode on CPU (the ops.py wrappers select it automatically).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import mha, mha_ref
+from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_oracle
+from repro.kernels.ssd.ops import ssd, ssd_oracle
+from repro.kernels.walk_transition.ops import mhlj_step_batched, mhlj_step_oracle
+from repro.core.graphs import ring, watts_strogatz
+from repro.core import transition as trans_mod
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,nq,nkv,h,causal,window",
+    [
+        (1, 128, 4, 4, 64, True, 0),      # MHA
+        (2, 256, 8, 2, 64, True, 0),      # GQA 4:1
+        (1, 256, 4, 1, 128, True, 0),     # MQA (paligemma kv=1)
+        (2, 128, 4, 4, 64, False, 0),     # bidirectional (whisper encoder)
+        (1, 384, 4, 2, 64, True, 128),    # sliding window (long_500k variant)
+        (1, 160, 4, 4, 64, True, 0),      # non-multiple of block
+        (2, 150, 4, 4, 64, False, 0),     # non-multiple, bidirectional (pad mask)
+    ],
+)
+def test_flash_attention_matches_ref(b, s, nq, nkv, h, causal, window, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(k1, (b, s, nq, h), dtype)
+    k = rand(k2, (b, s, nkv, h), dtype)
+    v = rand(k3, (b, s, nkv, h), dtype)
+    out = mha(q, k, v, causal=causal, window=window, block_q=128, block_k=128)
+    ref = mha_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (2, 17, 256), (1, 8, 512), (3, 384)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = rand(k1, shape, dtype)
+    scale = rand(k2, shape[-1:], jnp.float32)
+    out = rmsnorm(x, scale)
+    ref = rmsnorm_oracle(x, scale)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ----------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,l,heads,groups,p,n,chunk",
+    [
+        (1, 128, 4, 1, 32, 16, 32),
+        (2, 96, 4, 2, 64, 32, 32),    # grouped B/C, L not multiple of chunk
+        (1, 256, 8, 1, 32, 64, 64),
+    ],
+)
+def test_ssd_matches_ref(b, l, heads, groups, p, n, chunk, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(2), 5)
+    xs = rand(keys[0], (b, l, heads, p), dtype)
+    dt = jax.nn.softplus(rand(keys[1], (b, l, heads), jnp.float32))
+    a = -jnp.exp(jax.random.normal(keys[2], (heads,)) * 0.3)
+    bs = rand(keys[3], (b, l, groups, n), dtype)
+    cs = rand(keys[4], (b, l, groups, n), dtype)
+    y, _ = ssd(xs, dt, a, bs, cs, chunk=chunk)
+    ref = ssd_oracle(xs, dt, a, bs, cs)
+    tol = 6e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ----------------------------------------------------------- walk transition
+@pytest.mark.parametrize("n,walkers", [(16, 8), (64, 32), (100, 128)])
+def test_walk_transition_matches_ref(n, walkers):
+    g = ring(n) if n != 100 else watts_strogatz(100, 4, 0.1, seed=0)
+    lips = np.ones(n)
+    lips[n // 2] = 40.0
+    p = trans_mod.mh_importance(g, lips)
+    row_probs = jnp.asarray(trans_mod.row_probs_padded(p, g), jnp.float32)
+    neighbors = jnp.asarray(g.neighbors)
+    degrees = jnp.asarray(g.degrees)
+    nodes = jnp.arange(walkers, dtype=jnp.int32) % n
+    key = jax.random.PRNGKey(3)
+    out = mhlj_step_batched(
+        key, nodes, row_probs, neighbors, degrees, p_j=0.2, p_d=0.5, r=3
+    )
+    ref = mhlj_step_oracle(
+        key, nodes, row_probs, neighbors, degrees, p_j=0.2, p_d=0.5, r=3
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # next nodes are valid node ids
+    assert bool((out >= 0).all()) and bool((out < n).all())
+
+
+def test_walk_transition_statistics():
+    """Batched kernel transition frequencies match the dense MHLJ matrix row."""
+    n = 12
+    g = ring(n)
+    lips = np.ones(n); lips[0] = 25.0
+    p_is = trans_mod.mh_importance(g, lips)
+    p_mhlj = trans_mod.mhlj(g, lips, trans_mod.MHLJParams(0.3, 0.5, 3))
+    row_probs = jnp.asarray(trans_mod.row_probs_padded(p_is, g), jnp.float32)
+    neighbors = jnp.asarray(g.neighbors)
+    degrees = jnp.asarray(g.degrees)
+    walkers = 40_000
+    start = 5
+    nodes = jnp.full((walkers,), start, jnp.int32)
+    out = mhlj_step_batched(
+        jax.random.PRNGKey(4), nodes, row_probs, neighbors, degrees,
+        p_j=0.3, p_d=0.5, r=3,
+    )
+    freq = np.bincount(np.asarray(out), minlength=n) / walkers
+    np.testing.assert_allclose(freq, p_mhlj[start], atol=0.012)

@@ -1,0 +1,111 @@
+"""End-to-end RW-SGD trainer behaviour (paper's experimental claims, small n)."""
+import numpy as np
+import pytest
+
+from repro.core import MHLJParams, complete, ring
+from repro.core import schedules
+from repro.data import make_heterogeneous_regression, make_homogeneous_regression
+from repro.walk_sgd import comm_report, run_rw_sgd
+
+
+def test_uniform_converges_homogeneous():
+    g = ring(32)
+    data = make_homogeneous_regression(32, dim=6, seed=0, x_star_scale=3.0)
+    res = run_rw_sgd("uniform", g, data, 2e-3, 30_000, seed=0)
+    assert res.mse[-1] < 0.15 * res.mse[0]
+
+
+def test_importance_beats_uniform_on_well_connected_hetero():
+    """Paper Fig 4b: on ER/complete graphs with heterogeneous data, IS wins."""
+    g = complete(32)
+    data = make_heterogeneous_regression(
+        32, dim=6, sigma_high_sq=100.0, p_high=0.05, seed=1, x_star_scale=3.0
+    )
+    gamma_u = 0.5 / data.lipschitz.max()
+    gamma_is = 0.5 / data.lipschitz.mean()
+    T = 15_000
+    mse_u = run_rw_sgd("uniform", g, data, gamma_u, T, seed=0).mse
+    mse_is = run_rw_sgd("importance", g, data, gamma_is, T, seed=0).mse
+    # compare early-phase area under curve (log scale robust): IS faster
+    assert np.log(mse_is[200:2000]).mean() < np.log(mse_u[200:2000]).mean()
+
+
+def test_entrapment_slows_importance_on_ring():
+    """Paper Fig 2+3: ring with one extreme-L node at the walk's start.
+
+    MH-IS exit probability from the trap is ~L_nb/L_high (detailed balance,
+    Eq. 8), so the walk freezes there; MHLJ's jumps break detailed balance
+    and escape.  Assertions verified robust over seeds 0-4 (ratio <= 0.2).
+    """
+    g = ring(64)
+    data = make_heterogeneous_regression(
+        64, dim=6, sigma_high_sq=1e3, high_nodes=np.array([0]), seed=3,
+        x_star_scale=3.0,
+    )
+    T = 20_000
+    gamma = 0.3 / data.lipschitz.mean()
+    res_is = run_rw_sgd("importance", g, data, gamma, T, seed=1, v0=0)
+    res_mhlj = run_rw_sgd(
+        "mhlj", g, data, gamma, T, mhlj_params=MHLJParams(0.1, 0.5, 3),
+        seed=1, v0=0,
+    )
+    # 1) entrapment: IS spends nearly all updates at the trap node; MHLJ escapes
+    assert (res_is.update_nodes == 0).mean() > 0.9
+    assert (res_mhlj.update_nodes == 0).mean() < 0.3
+    # 2) convergence: MHLJ's mid-phase objective far below entrapped IS
+    #    (median is robust to the high-L node's residual amplification)
+    med_is = np.median(res_is.mse[2000:10000])
+    med_mhlj = np.median(res_mhlj.mse[2000:10000])
+    assert med_mhlj < 0.5 * med_is
+
+
+def test_mhlj_comm_overhead_within_remark1():
+    g = ring(32)
+    data = make_heterogeneous_regression(32, dim=4, seed=0)
+    res = run_rw_sgd(
+        "mhlj", g, data, 1e-3, 20_000, mhlj_params=MHLJParams(0.1, 0.5, 3), seed=0
+    )
+    rep = comm_report(res.transitions, 0.1, 0.5, 3)
+    assert rep["within_bound"]
+    assert rep["transitions_per_update_measured"] == pytest.approx(
+        rep["transitions_per_update_exact"], abs=0.05
+    )
+
+
+def test_pj_annealing_removes_error_gap():
+    """Paper Fig 6 / Theorem 1 gap term, checked in closed form: the
+    asymptotic bias ||x~(p_J) - x_LS||^2 vanishes superlinearly as
+    p_J -> 0 (slope -> 2 on log-log), so annealing p_J removes the gap.
+    The closed form avoids the SGD endpoint noise that made the simulated
+    version seed-fragile (see examples/annealing_error_gap.py part 2 for
+    the seed-averaged simulation)."""
+    from repro.core.theory import error_gap_exact
+
+    n = 64
+    g = ring(n)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(n, 6)) * np.where(rng.random(n) < 0.1, 2.0, 1.0)[:, None]
+    targs = feats @ (3 * rng.normal(size=6)) + rng.normal(size=n)
+    lips = 2 * (feats**2).sum(1)
+    pjs = [0.2, 0.1, 0.05, 0.025, 0.0125]
+    gaps = [
+        error_gap_exact(g, feats, targs, lips, MHLJParams(pj, 0.5, 3)) for pj in pjs
+    ]
+    # strictly decreasing and eventually faster than linear in p_J
+    assert all(a > b for a, b in zip(gaps, gaps[1:]))
+    slopes = [
+        np.log(gaps[i] / gaps[i - 1]) / np.log(pjs[i] / pjs[i - 1])
+        for i in range(1, len(gaps))
+    ]
+    assert slopes[-1] > 1.5  # approaching the O(p_J^2) law
+    assert gaps[-1] < 0.05 * gaps[0]
+    # p_J = 0 has exactly zero gap (IS weights cancel the sampling bias)
+    assert error_gap_exact(g, feats, targs, lips, MHLJParams(0.0, 0.5, 3)) < 1e-18
+
+
+def test_simple_rw_baseline_runs():
+    g = ring(16)
+    data = make_homogeneous_regression(16, dim=4, seed=0)
+    res = run_rw_sgd("simple", g, data, 1e-3, 2_000, seed=0)
+    assert np.isfinite(res.mse).all()
+    assert res.transitions_per_update == 1.0

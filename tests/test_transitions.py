@@ -1,0 +1,139 @@
+"""Transition-matrix invariants (paper Eqs. 6-8) + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MHLJParams,
+    erdos_renyi,
+    expander,
+    grid2d,
+    levy_matrix,
+    levy_matrix_chained,
+    mh_importance,
+    mh_uniform,
+    mhlj,
+    ring,
+    simple_rw,
+    trunc_geom_pmf,
+)
+from repro.core import mixing
+from repro.core.transition import is_row_stochastic, row_probs_padded, supported_on_graph
+
+
+def _rand_lipschitz(n, seed=0, spread=100.0):
+    rng = np.random.default_rng(seed)
+    lips = rng.uniform(1.0, 2.0, n)
+    lips[rng.integers(0, n)] *= spread
+    return lips
+
+
+@pytest.mark.parametrize("graph", [ring(12), grid2d(4, 4), erdos_renyi(15, 0.4)])
+def test_all_designs_row_stochastic_and_supported(graph):
+    lips = _rand_lipschitz(graph.n)
+    for p in (simple_rw(graph), mh_uniform(graph), mh_importance(graph, lips)):
+        assert is_row_stochastic(p)
+        assert supported_on_graph(p, graph)
+    p = mhlj(graph, lips, MHLJParams(0.2, 0.5, 3))
+    assert is_row_stochastic(p)  # r-hop kernel: not 1-hop supported, by design
+
+
+def test_mh_uniform_stationary_is_uniform(small_ring):
+    pi = mixing.stationary_distribution(mh_uniform(small_ring))
+    np.testing.assert_allclose(pi, np.full(small_ring.n, 1 / small_ring.n), atol=1e-9)
+
+
+def test_mh_importance_stationary_is_pi_is(small_ring, hetero_lipschitz):
+    pi = mixing.stationary_distribution(mh_importance(small_ring, hetero_lipschitz))
+    np.testing.assert_allclose(
+        pi, hetero_lipschitz / hetero_lipschitz.sum(), atol=1e-9
+    )
+
+
+def test_simple_rw_stationary_proportional_to_degree(small_ring):
+    pi = mixing.stationary_distribution(simple_rw(small_ring))
+    deg = small_ring.degrees.astype(float)
+    np.testing.assert_allclose(pi, deg / deg.sum(), atol=1e-9)
+
+
+def test_detailed_balance_eq8(small_ring, hetero_lipschitz):
+    """Paper Eq. (8): L_i / L_j = P_IS(j,i) / P_IS(i,j) on edges."""
+    p = mh_importance(small_ring, hetero_lipschitz)
+    for i in range(small_ring.n):
+        for j in range(small_ring.n):
+            if i != j and small_ring.adj[i, j] and p[i, j] > 0:
+                np.testing.assert_allclose(
+                    hetero_lipschitz[i] / hetero_lipschitz[j],
+                    p[j, i] / p[i, j],
+                    rtol=1e-8,
+                )
+
+
+def test_mh_is_reversible_mhlj_is_not(small_ring, hetero_lipschitz, mhlj_params):
+    p_is = mh_importance(small_ring, hetero_lipschitz)
+    assert mixing.is_reversible(p_is)
+    p = mhlj(small_ring, hetero_lipschitz, mhlj_params)
+    assert not mixing.is_reversible(p)  # jumps break detailed balance (paper §V)
+
+
+def test_levy_matrix_forms_agree_on_regular_graph(small_ring):
+    """Adjacency-power and chained-hop forms coincide on regular graphs."""
+    a = levy_matrix(small_ring, 0.5, 3)
+    b = levy_matrix_chained(small_ring, 0.5, 3)
+    np.testing.assert_allclose(a, b, atol=1e-12)
+
+
+def test_levy_matrix_forms_differ_on_irregular_graph():
+    from repro.core import star
+
+    g = star(8)
+    a = levy_matrix(g, 0.5, 3)
+    b = levy_matrix_chained(g, 0.5, 3)
+    assert np.abs(a - b).max() > 1e-3  # documented discrepancy (levy.py docstring)
+
+
+def test_mhlj_is_mixture(small_ring, hetero_lipschitz, mhlj_params):
+    p = mhlj(small_ring, hetero_lipschitz, mhlj_params)
+    p_is = mh_importance(small_ring, hetero_lipschitz)
+    p_levy = levy_matrix_chained(small_ring, mhlj_params.p_d, mhlj_params.r)
+    np.testing.assert_allclose(
+        p, (1 - mhlj_params.p_j) * p_is + mhlj_params.p_j * p_levy, atol=1e-12
+    )
+
+
+@given(
+    p_d=st.floats(0.05, 0.95),
+    r=st.integers(1, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_trunc_geom_pmf_properties(p_d, r):
+    pmf = trunc_geom_pmf(p_d, r)
+    assert pmf.shape == (r,)
+    assert abs(pmf.sum() - 1.0) < 1e-9
+    assert np.all(np.diff(pmf) <= 1e-12)  # monotone decreasing
+
+
+@given(
+    n=st.integers(5, 24),
+    p_j=st.floats(0.0, 0.9),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=25, deadline=None)
+def test_mhlj_row_stochastic_property(n, p_j, seed):
+    g = erdos_renyi(n, 0.4, seed=seed)
+    lips = _rand_lipschitz(n, seed)
+    p = mhlj(g, lips, MHLJParams(p_j, 0.5, 3))
+    assert is_row_stochastic(p)
+    pi = mixing.stationary_distribution(p)
+    assert np.all(pi > 0) and abs(pi.sum() - 1) < 1e-8
+
+
+def test_row_probs_padded_matches_dense(small_ring, hetero_lipschitz):
+    p = mh_importance(small_ring, hetero_lipschitz)
+    padded = row_probs_padded(p, small_ring)
+    for v in range(small_ring.n):
+        dense_row = np.zeros(small_ring.n)
+        deg = small_ring.degrees[v]
+        for slot in range(deg):
+            dense_row[small_ring.neighbors[v, slot]] += padded[v, slot]
+        np.testing.assert_allclose(dense_row, p[v], atol=1e-6)

@@ -1,0 +1,106 @@
+"""Walk simulator correctness: empirical laws match analytic chains."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MHLJParams,
+    expected_transitions_per_update,
+    mh_importance,
+    mh_uniform,
+    mhlj,
+    remark1_bound,
+    ring,
+    row_probs_padded,
+)
+from repro.core import mixing, schedules
+from repro.core.walk import (
+    empirical_distribution,
+    graph_tensors,
+    walk_markov,
+    walk_markov_batched,
+    walk_mhlj,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = ring(16)
+    lips = np.ones(16)
+    lips[3] = 50.0
+    p_is = mh_importance(g, lips)
+    nbrs, degs = graph_tensors(g)
+    rp = jnp.asarray(row_probs_padded(p_is, g))
+    return g, lips, p_is, nbrs, degs, rp
+
+
+def test_markov_walk_reaches_stationary(setup):
+    g, lips, p_is, nbrs, degs, rp = setup
+    p_uni = mh_uniform(g)
+    rp_uni = jnp.asarray(row_probs_padded(p_uni, g))
+    traj = walk_markov(jax.random.PRNGKey(0), rp_uni, nbrs, 0, 40_000)
+    emp = empirical_distribution(np.asarray(traj), g.n, burn_in=4_000)
+    assert 0.5 * np.abs(emp - 1.0 / g.n).sum() < 0.05
+
+
+def test_is_walk_occupancy_matches_pi_is(setup):
+    g, lips, p_is, nbrs, degs, rp = setup
+    traj = walk_markov(jax.random.PRNGKey(1), rp, nbrs, 0, 60_000)
+    emp = empirical_distribution(np.asarray(traj), g.n, burn_in=6_000)
+    pi = lips / lips.sum()
+    assert 0.5 * np.abs(emp - pi).sum() < 0.08
+
+
+def test_mhlj_walk_matches_analytic_mixture(setup):
+    g, lips, p_is, nbrs, degs, rp = setup
+    params = MHLJParams(0.1, 0.5, 3)
+    nodes, _ = walk_mhlj(
+        jax.random.PRNGKey(2), rp, nbrs, degs, 0, 60_000, params.p_j, params.p_d, params.r
+    )
+    emp = empirical_distribution(np.asarray(nodes), g.n, burn_in=6_000)
+    pi = mixing.stationary_distribution(mhlj(g, lips, params))
+    assert 0.5 * np.abs(emp - pi).sum() < 0.08
+
+
+def test_remark1_transition_accounting(setup):
+    g, lips, p_is, nbrs, degs, rp = setup
+    p_j, p_d, r = 0.1, 0.5, 3
+    _, hops = walk_mhlj(jax.random.PRNGKey(3), rp, nbrs, degs, 0, 50_000, p_j, p_d, r)
+    measured = float(np.asarray(hops, dtype=np.float64).mean())
+    exact = expected_transitions_per_update(p_j, p_d, r)
+    bound = remark1_bound(p_j, p_d, r)
+    assert abs(measured - exact) < 0.02
+    assert measured <= bound + 0.02
+    assert exact <= bound + 1e-12
+
+
+def test_pj_zero_schedule_recovers_pure_mh(setup):
+    """With p_J=0 the MHLJ walk law equals the MH-IS walk law."""
+    g, lips, p_is, nbrs, degs, rp = setup
+    nodes, hops = walk_mhlj(jax.random.PRNGKey(4), rp, nbrs, degs, 0, 30_000, 0.0, 0.5, 3)
+    assert int(np.asarray(hops).max()) == 1  # never jumps
+    emp = empirical_distribution(np.asarray(nodes), g.n, burn_in=3_000)
+    pi = lips / lips.sum()
+    assert 0.5 * np.abs(emp - pi).sum() < 0.1
+
+
+def test_batched_walks_shapes(setup):
+    g, lips, p_is, nbrs, degs, rp = setup
+    v0s = jnp.arange(8, dtype=jnp.int32)
+    trajs = walk_markov_batched(jax.random.PRNGKey(5), rp, nbrs, v0s, 100)
+    assert trajs.shape == (8, 101)
+    assert bool((trajs[:, 0] == v0s).all())
+
+
+def test_annealed_schedule_walk(setup):
+    g, lips, p_is, nbrs, degs, rp = setup
+    # t0=500 keeps p_J ~ 0.3 over the early window, ~0.027 at the tail
+    sched = jnp.asarray(schedules.polynomial_decay(0.3, 5_000, t0=500))
+    nodes, hops = walk_mhlj(jax.random.PRNGKey(6), rp, nbrs, degs, 0, 5_000, sched, 0.5, 3)
+    # early phase jumps (mean hops ~ 1 + 0.3*(E[d]-1) ~ 1.21), late nearly never
+    early = float(np.asarray(hops[:500], dtype=np.float64).mean())
+    late = float(np.asarray(hops[-500:], dtype=np.float64).mean())
+    assert early > late
+    assert early > 1.08
+    assert late < 1.05
