@@ -2,16 +2,20 @@
 (CPU smoke scale; the production-mesh path is costed by the roofline bench).
 
 Measures steps/s of the jitted walk train step (reduced qwen config) per
-routing method, and decode tokens/s of the serving engine — the numbers a
-deployment would track.
+routing method, decode tokens/s of the serving engine, and the raw sampler
+throughput of the unified walk engine (transitions/s for a W-walk fleet,
+per backend) — the numbers a deployment would track.
 """
 from __future__ import annotations
 
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
+from repro.core import MHLJParams, WalkEngine, watts_strogatz
 from repro.launch.serve import Request, ServeEngine
 from repro.launch.train import run_training
 
@@ -21,6 +25,32 @@ PAPER_CLAIM = (
     "static routing (the transition adds O(1) device work, Remark 1 bounds "
     "the extra hops); serving sustains continuous batching."
 )
+
+
+def _sampler_throughput(backend: str, walks: int, steps: int, iters: int) -> dict:
+    """Transitions/s of one batched engine fleet on an orchestration graph."""
+    n = 512
+    g = watts_strogatz(n, 8, 0.1, seed=0)
+    rng = np.random.default_rng(0)
+    lips = jnp.asarray(np.exp(rng.normal(size=n)), jnp.float32)
+    eng = WalkEngine.from_graph(
+        g, MHLJParams(0.2, 0.5, 3), lipschitz=lips, backend=backend
+    )
+    v0s = jnp.arange(walks, dtype=jnp.int32) % n
+    run_fn = jax.jit(lambda key: eng.run(key, v0s, steps))
+    nodes, hops = run_fn(jax.random.PRNGKey(0))  # warm-up / compile
+    nodes.block_until_ready()
+    t0 = time.time()
+    for i in range(iters):
+        nodes, hops = run_fn(jax.random.PRNGKey(i + 1))
+    nodes.block_until_ready()
+    dt = time.time() - t0
+    return {
+        "walks": walks,
+        "steps": steps,
+        "transitions_per_sec": walks * steps * iters / dt,
+        "mean_hops_per_update": float(np.asarray(hops, np.float64).mean()),
+    }
 
 
 def run(quick: bool = False) -> dict:
@@ -38,6 +68,22 @@ def run(quick: bool = False) -> dict:
             "hops_per_update": res["transitions_per_update"],
         }
 
+    # raw walk-engine sampler throughput (the orchestration hot path).  The
+    # scan backend at fleet scale; the Pallas backend small off-TPU (interpret
+    # mode is an emulator — its numbers only prove the path runs end to end).
+    on_tpu = jax.default_backend() == "tpu"
+    out["sampler"] = {
+        "scan": _sampler_throughput(
+            "scan", walks=1024 if quick else 4096, steps=8, iters=2 if quick else 5
+        ),
+        "pallas": _sampler_throughput(
+            "pallas",
+            walks=4096 if on_tpu else 256,
+            steps=8 if on_tpu else 2,
+            iters=5 if on_tpu else 1,
+        ),
+    }
+
     engine = ServeEngine(cfg, batch_size=4, cache_len=128)
     rng = np.random.default_rng(0)
     for rid in range(8):
@@ -50,5 +96,8 @@ def run(quick: bool = False) -> dict:
         / out["train"]["uniform"]["steps_per_sec"],
         "serve_tokens_per_sec": stats["tokens_per_sec"],
         "slot_utilization": stats["slot_utilization"],
+        "sampler_transitions_per_sec": out["sampler"]["scan"][
+            "transitions_per_sec"
+        ],
     }
     return out

@@ -5,9 +5,11 @@ and average (walk_sgd/multi_walk.py).  Theorem 1's variance term scales
 like 1/W under averaging while the O(p_J^2) bias term does not — so
 averaging should cut the noisy component of the error, not the floor.
 
-This benchmark measures exactly that on the paper's regression setting:
-W independent MHLJ walks from different start nodes, models averaged at
-the end (one-shot local-SGD averaging), vs the single-walk baseline.
+This benchmark measures exactly that on the paper's regression setting,
+through the unified walk engine: each repetition trains all W walks in ONE
+``run_rw_sgd_multi`` scan (a single batched ``WalkEngine.step`` services
+every walk per iteration), models averaged at the end (one-shot local-SGD
+averaging), vs the single-walk baseline.
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import numpy as np
 
 from repro.core import MHLJParams, ring
 from repro.data import make_heterogeneous_regression
-from repro.walk_sgd import run_rw_sgd
+from repro.walk_sgd import run_rw_sgd_multi
 
 NAME = "multi_walk"
 PAPER_CLAIM = (
@@ -39,19 +41,18 @@ def run(quick: bool = False) -> dict:
     out_w = {}
     for w in (1, 2, 4, 8):
         final_mses = []
+        hops_per_update = []
         for rep in range(reps):
-            xs = []
-            for i in range(w):
-                res = run_rw_sgd(
-                    "mhlj", graph, data, gamma, T, mhlj_params=params,
-                    seed=1000 * rep + i, v0=int(rng.integers(0, n)),
-                )
-                xs.append(res.x_final)
-            x_avg = np.mean(xs, axis=0)
-            final_mses.append(data.mse(x_avg))
+            res = run_rw_sgd_multi(
+                "mhlj", graph, data, gamma, T, w, mhlj_params=params,
+                seed=1000 * rep, v0s=rng.integers(0, n, size=w),
+            )
+            final_mses.append(data.mse(res.x_avg))
+            hops_per_update.append(res.transitions_per_update)
         out_w[w] = {
             "mean_final_mse": float(np.mean(final_mses)),
             "std_final_mse": float(np.std(final_mses)),
+            "hops_per_update": float(np.mean(hops_per_update)),
         }
 
     floor = data.mse(data.optimum())

@@ -32,6 +32,7 @@ from repro.core.importance import (
     importance_distribution,
     importance_weights,
 )
+from repro.core.engine import WalkEngine, p_is_rows
 from repro.core.walk import (
     graph_tensors,
     walk_markov,
@@ -50,6 +51,7 @@ __all__ = [
     "expected_transitions_per_update", "remark1_bound",
     "linear_regression_lipschitz", "logistic_regression_lipschitz",
     "importance_distribution", "importance_weights",
+    "WalkEngine", "p_is_rows",
     "graph_tensors", "walk_markov", "walk_mhlj", "walk_markov_batched",
     "walk_mhlj_batched",
     "mixing", "entrapment", "theory", "schedules",

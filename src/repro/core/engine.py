@@ -1,0 +1,354 @@
+"""Batched MHLJ walk engine — THE single implementation of Algorithm 1.
+
+Every consumer of the paper's MHLJ transition (the §II.C simulators in
+``core.walk``, the regression trainer ``walk_sgd.trainer``, the pjit LLM
+orchestrator ``walk_sgd.llm_trainer.WalkContext``, the multi-walk runner
+``walk_sgd.multi_walk`` and the ``benchmarks/`` entry points) routes through
+this module, so the chain law that Theorem 1 attaches to is sampled by
+exactly one piece of code.
+
+Design
+------
+A transition for W parallel walks consumes a pre-drawn uniform block of
+shape ``(W, 3 + r)`` with slot layout::
+
+    [jump_flag, mh, distance, hop_1 .. hop_r]
+     U_JUMP     U_MH  U_DIST   U_HOP0 ..
+
+Each stochastic decision owns its own slot (the seed implementations shared
+one key/uniform between the MH draw and the jump machinery — benign for the
+marginal law because the branches are exclusive, but wrong as documented and
+a trap for anything consuming both branches).  The Bernoulli(p_J) jump
+decision is resolved *outside* the backends — slot ``U_JUMP`` arrives as a
+{0.0, 1.0} flag — which is what lets ``p_j`` be a traced scalar (Fig 6
+annealing schedules) while the Pallas kernel keeps only truly-static
+compile-time parameters.
+
+Backends (identical law, bitwise-identical outputs given the same key):
+
+* ``"scan"``   — pure JAX ``vmap`` over walks; also the oracle for kernel
+  tests.  Gathers only the W active P_IS rows, so it stays cheap for
+  single-walk training loops.
+* ``"pallas"`` — the ``kernels/walk_transition`` TPU kernel over the full
+  row table (graphs here are orchestration-scale); falls back to
+  ``interpret=True`` off-TPU.
+* ``"auto"``   — pallas on TPU, scan elsewhere.
+
+P_IS rows (Eq. 7) come either precomputed (``row_probs`` from
+``transition.row_probs_padded``) or on the fly from a live Lipschitz vector
+(the online-estimator path of ``llm_trainer``) via :func:`p_is_rows`, which
+needs only local information (deg(v), deg(u), L_v, L_u).
+
+Remark-1 accounting: every step returns the physical hop count taken per
+walk (1 for an MH move, d for a Lévy jump).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.levy import trunc_geom_icdf
+
+__all__ = [
+    "U_JUMP",
+    "U_MH",
+    "U_DIST",
+    "U_HOP0",
+    "num_uniforms",
+    "p_is_rows",
+    "mhlj_transition_math",
+    "WalkEngine",
+]
+
+# Uniform-block slot layout (shared with the Pallas kernel).
+U_JUMP, U_MH, U_DIST, U_HOP0 = 0, 1, 2, 3
+
+
+def num_uniforms(r: int) -> int:
+    """Columns of the pre-drawn uniform block for jump range ``r``."""
+    return U_HOP0 + r
+
+
+def p_is_rows(
+    neighbors: jnp.ndarray,
+    degrees: jnp.ndarray,
+    lipschitz: jnp.ndarray,
+    nodes: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """P_IS rows of Eq. (7) over padded neighbor lists, from local info only.
+
+    P(v,u) = min{1/deg(v), L_u / (deg(u) L_v)} for true neighbors u != v;
+    leftover mass goes to staying (spread over the self/pad slots, which all
+    alias node v, so the sampled law is exact).
+
+    ``nodes=None`` returns the full (n, max_deg) table (Pallas backend /
+    precomputation); ``nodes=(W,)`` returns only those W rows (scan backend).
+    """
+    if nodes is None:
+        nodes = jnp.arange(neighbors.shape[0], dtype=jnp.int32)
+    nbrs = neighbors[nodes]  # (W, max_deg)
+    deg_v = degrees[nodes].astype(jnp.float32)[:, None]
+    deg_u = degrees[nbrs].astype(jnp.float32)
+    l_v = lipschitz[nodes][:, None]
+    l_u = lipschitz[nbrs]
+    move = jnp.minimum(1.0 / deg_v, l_u / (deg_u * l_v))
+    is_self = nbrs == nodes[:, None]
+    move = jnp.where(is_self, 0.0, move)
+    p_stay = 1.0 - move.sum(axis=-1, keepdims=True)
+    n_self = jnp.maximum(is_self.sum(axis=-1, keepdims=True), 1)
+    probs = jnp.where(is_self, p_stay / n_self, move)
+    return jnp.maximum(probs, 0.0)
+
+
+def mhlj_transition_math(
+    nodes: jnp.ndarray,  # (W,) int32 current node per walk
+    rows: jnp.ndarray,  # (W, max_deg) P_IS row per walk (padded)
+    neighbors: jnp.ndarray,  # (n, max_deg) int32, pads = self id
+    degrees: jnp.ndarray,  # (n,) int32
+    uniforms: jnp.ndarray,  # (W, 3 + r); slot U_JUMP is a {0,1} flag
+    p_d: float,
+    r: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One Algorithm-1 transition for W walks — the canonical math.
+
+    The Pallas kernel mirrors this per-walk body statement for statement
+    (same CDF inversion, same :func:`trunc_geom_icdf`, same hop loop), and
+    the parity tests assert bitwise-equal outputs given the same uniforms.
+
+    Returns ``(next_nodes, hops)``, both ``(W,)`` int32; ``hops`` is the
+    Remark-1 physical transition count (1 for MH, d for a jump).
+    """
+    max_deg = neighbors.shape[1]
+
+    def one_walk(v, prow, u):
+        # MH-IS move: CDF inversion over the padded P_IS row.
+        cdf = jnp.cumsum(prow)
+        idx = jnp.sum((cdf < u[U_MH] * cdf[-1]).astype(jnp.int32))
+        idx = jnp.minimum(idx, max_deg - 1)
+        v_mh = neighbors[v, idx]
+
+        # Lévy jump: d ~ TruncGeom(p_d, r), then d uniform hops.
+        d = trunc_geom_icdf(u[U_DIST], p_d, r)
+
+        def hop(i, v_cur):
+            deg = degrees[v_cur]
+            hop_idx = jnp.minimum(
+                (u[U_HOP0 + i] * deg.astype(jnp.float32)).astype(jnp.int32),
+                deg - 1,
+            )
+            v_new = neighbors[v_cur, hop_idx]
+            return jnp.where(i < d, v_new, v_cur)
+
+        v_jump = jax.lax.fori_loop(0, r, hop, v)
+
+        do_jump = u[U_JUMP] > 0.5
+        v_next = jnp.where(do_jump, v_jump, v_mh)
+        hops = jnp.where(do_jump, d, jnp.int32(1))
+        return v_next, hops
+
+    return jax.vmap(one_walk)(nodes, rows, uniforms)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WalkEngine:
+    """Batched MHLJ sampler for W parallel walks with pluggable backends.
+
+    Construct once (``from_graph``) and call :meth:`step` inside jitted
+    training loops or :meth:`run` for whole trajectories.  All fields are
+    device arrays or static python scalars, so instances may also be built
+    inside a trace (the regression trainer does).
+    """
+
+    neighbors: jnp.ndarray  # (n, max_deg) int32, pads = self id
+    degrees: jnp.ndarray  # (n,) int32
+    p_j: Union[float, jnp.ndarray] = 0.1  # default jump prob (overridable per call)
+    p_d: float = 0.5
+    r: int = 3
+    row_probs: Optional[jnp.ndarray] = None  # (n, max_deg) precomputed P_IS
+    backend: str = "auto"  # "auto" | "scan" | "pallas"
+    block_w: int = 256
+    interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+
+    @classmethod
+    def from_graph(
+        cls,
+        graph,
+        params,
+        *,
+        row_probs: Optional[jnp.ndarray] = None,
+        lipschitz: Optional[jnp.ndarray] = None,
+        backend: str = "auto",
+        block_w: int = 256,
+        interpret: Optional[bool] = None,
+    ) -> "WalkEngine":
+        """Engine from a ``core.graphs.Graph`` + ``MHLJParams``.
+
+        Row source precedence: explicit ``row_probs`` table, else a table
+        precomputed from a *static* ``lipschitz`` vector, else live rows from
+        the ``lipschitz=`` argument of :meth:`step` / :meth:`run`.
+        """
+        neighbors = jnp.asarray(graph.neighbors)
+        degrees = jnp.asarray(graph.degrees)
+        if row_probs is None and lipschitz is not None:
+            row_probs = p_is_rows(
+                neighbors, degrees, jnp.asarray(lipschitz, jnp.float32)
+            )
+        return cls(
+            neighbors=neighbors,
+            degrees=degrees,
+            p_j=params.p_j,
+            p_d=params.p_d,
+            r=params.r,
+            row_probs=None if row_probs is None else jnp.asarray(row_probs),
+            backend=backend,
+            block_w=block_w,
+            interpret=interpret,
+        )
+
+    # -- backend resolution -------------------------------------------------
+
+    @property
+    def resolved_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        return "pallas" if jax.default_backend() == "tpu" else "scan"
+
+    @property
+    def resolved_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    # -- P_IS row plumbing --------------------------------------------------
+
+    def rows_table(self, lipschitz: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Full (n, max_deg) P_IS table (precomputed or live Eq.-7)."""
+        if self.row_probs is not None:
+            return self.row_probs
+        if lipschitz is None:
+            raise ValueError(
+                "engine has no precomputed row_probs; pass lipschitz= for "
+                "live Eq. (7) rows"
+            )
+        return p_is_rows(self.neighbors, self.degrees, lipschitz)
+
+    def rows_for(
+        self, nodes: jnp.ndarray, lipschitz: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """P_IS rows for the W active walk positions only."""
+        if self.row_probs is not None:
+            return self.row_probs[nodes]
+        if lipschitz is None:
+            raise ValueError(
+                "engine has no precomputed row_probs; pass lipschitz= for "
+                "live Eq. (7) rows"
+            )
+        return p_is_rows(self.neighbors, self.degrees, lipschitz, nodes=nodes)
+
+    # -- the transition -----------------------------------------------------
+
+    def step(
+        self,
+        key: jax.Array,
+        nodes: jnp.ndarray,
+        *,
+        p_j: Optional[Union[float, jnp.ndarray]] = None,
+        lipschitz: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """One batched MHLJ transition.
+
+        Args:
+          key: PRNG key (consumed wholly by this step).
+          nodes: (W,) int32 current positions, or a scalar for one walk.
+          p_j: jump probability override (python float or traced scalar);
+            defaults to the engine's ``p_j``.
+          lipschitz: (n,) live Lipschitz vector when the engine has no
+            precomputed rows.
+
+        Returns:
+          (next_nodes, hops) matching the shape of ``nodes``.
+        """
+        nodes = jnp.asarray(nodes, jnp.int32)
+        squeeze = nodes.ndim == 0
+        if squeeze:
+            nodes = nodes[None]
+        p_j_t = self.p_j if p_j is None else p_j
+        u = jax.random.uniform(
+            key, (nodes.shape[0], num_uniforms(self.r)), jnp.float32
+        )
+        flag = (u[:, U_JUMP] < p_j_t).astype(jnp.float32)
+        u = u.at[:, U_JUMP].set(flag)
+
+        if self.resolved_backend == "pallas":
+            # local import: kernels package imports back into this module
+            from repro.kernels.walk_transition.kernel import walk_transition
+
+            nxt, hops = walk_transition(
+                nodes,
+                self.rows_table(lipschitz),
+                self.neighbors,
+                self.degrees,
+                u,
+                p_d=self.p_d,
+                r=self.r,
+                block_w=self.block_w,
+                interpret=self.resolved_interpret,
+            )
+        else:
+            nxt, hops = mhlj_transition_math(
+                nodes,
+                self.rows_for(nodes, lipschitz),
+                self.neighbors,
+                self.degrees,
+                u,
+                self.p_d,
+                self.r,
+            )
+        if squeeze:
+            return nxt[0], hops[0]
+        return nxt, hops
+
+    def run(
+        self,
+        key: jax.Array,
+        v0s: jnp.ndarray,
+        num_steps: int,
+        *,
+        p_j: Optional[Union[float, jnp.ndarray]] = None,
+        lipschitz: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Whole trajectories for W walks (Algorithm 1's update sequence).
+
+        ``p_j`` may be a scalar or a (num_steps,) schedule (Fig 6 annealing).
+
+        Returns:
+          update_nodes: (W, num_steps) int32 — element t is the node holding
+            the model when update t runs (the first update runs at v0).
+          hops: (W, num_steps) int32 — Remark-1 physical transitions taken
+            after update t.
+          Scalar ``v0s`` drops the leading walk axis.
+        """
+        v0s = jnp.asarray(v0s, jnp.int32)
+        squeeze = v0s.ndim == 0
+        if squeeze:
+            v0s = v0s[None]
+        p_j_base = self.p_j if p_j is None else p_j
+        p_j_sched = jnp.broadcast_to(
+            jnp.asarray(p_j_base, jnp.float32), (num_steps,)
+        )
+        keys = jax.random.split(key, num_steps)
+
+        def body(v, xs):
+            k, pj = xs
+            v_next, hops = self.step(k, v, p_j=pj, lipschitz=lipschitz)
+            return v_next, (v, hops)
+
+        _, (update_nodes, hops) = jax.lax.scan(body, v0s, (keys, p_j_sched))
+        update_nodes = update_nodes.T  # (T, W) -> (W, T)
+        hops = hops.T
+        if squeeze:
+            return update_nodes[0], hops[0]
+        return update_nodes, hops

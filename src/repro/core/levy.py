@@ -22,6 +22,7 @@ is surfaced in tests and EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graphs import Graph
@@ -29,6 +30,7 @@ from repro.core.graphs import Graph
 __all__ = [
     "trunc_geom_pmf",
     "trunc_geom_mean",
+    "trunc_geom_icdf",
     "levy_weights",
     "levy_matrix",
     "levy_matrix_chained",
@@ -46,6 +48,21 @@ def trunc_geom_pmf(p_d: float, r: int) -> np.ndarray:
     pmf = p_d * (1.0 - p_d) ** (d - 1.0)
     pmf /= 1.0 - (1.0 - p_d) ** r
     return pmf
+
+
+def trunc_geom_icdf(u, p_d: float, r: int):
+    """Inverse CDF of TruncGeom(p_d, r): maps U(0,1) draws to d in {1..r}.
+
+    F(d) = (1 - (1-p_d)^d) / (1 - (1-p_d)^r), so
+    d = ceil(log1p(-u * Z) / log(1 - p_d)) with Z = 1 - (1-p_d)^r.
+
+    Pure ``jnp`` on scalars or arrays — this is the single distance-sampling
+    formula shared by every backend of :mod:`repro.core.engine` (including
+    the Pallas walk-transition kernel, where it traces into kernel code).
+    """
+    z = 1.0 - (1.0 - p_d) ** r
+    d = jnp.ceil(jnp.log1p(-u * z) / jnp.log(1.0 - p_d)).astype(jnp.int32)
+    return jnp.clip(d, 1, r)
 
 
 def trunc_geom_mean(p_d: float, r: int) -> float:

@@ -1,13 +1,19 @@
 """JAX random-walk simulators (paper §II.C + Algorithm 1).
 
-Two simulators, both ``jax.lax.scan``-based and jit/vmap-friendly:
+The MHLJ transition itself lives in :mod:`repro.core.engine` — the single
+source of truth for Algorithm 1 — and the simulators here are thin
+trajectory-shaped consumers of :class:`~repro.core.engine.WalkEngine`:
 
 * :func:`walk_markov` — a generic 1-hop time-homogeneous chain given padded
-  per-row probabilities (covers simple RW, MH-uniform, MH-IS).
-* :func:`walk_mhlj` — Algorithm 1 exactly: per iteration flip J~Ber(p_J);
-  J=0 -> one MH-IS hop; J=1 -> d~TruncGeom(p_d, r) uniform hops without
-  updates.  Returns the sequence of *update* nodes v_t plus the number of
-  physical transitions per iteration (Remark-1 accounting).
+  per-row probabilities (covers simple RW, MH-uniform, MH-IS).  Not an MHLJ
+  variant, so it does not route through the engine.
+* :func:`walk_mhlj` — Algorithm 1 exactly, via ``WalkEngine.run``: per
+  iteration flip J~Ber(p_J); J=0 -> one MH-IS hop; J=1 -> d~TruncGeom(p_d, r)
+  uniform hops without updates.  Returns the sequence of *update* nodes v_t
+  plus the number of physical transitions per iteration (Remark-1
+  accounting).
+* :func:`walk_mhlj_batched` — W parallel walks in one batched engine run
+  (a single vectorized transition per step, not W scans).
 
 ``p_j`` may be a scalar or a (T,) schedule array (Fig 6 annealing).
 
@@ -24,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import WalkEngine
 from repro.core.graphs import Graph
-from repro.core.levy import trunc_geom_pmf
 
 __all__ = [
     "graph_tensors",
@@ -46,12 +52,6 @@ def _categorical_padded(key, probs_row: jnp.ndarray) -> jnp.ndarray:
     logits = jnp.log(jnp.maximum(probs_row, 1e-38))
     logits = jnp.where(probs_row > 0, logits, -jnp.inf)
     return jax.random.categorical(key, logits)
-
-
-def _uniform_neighbor(key, neighbors_row: jnp.ndarray, degree: jnp.ndarray) -> jnp.ndarray:
-    """Uniform true-neighbor choice from a padded row."""
-    idx = jax.random.randint(key, (), 0, degree)
-    return neighbors_row[idx]
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps",))
@@ -88,7 +88,7 @@ def walk_mhlj(
     p_d: float,
     r: int,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Algorithm 1's node sequence.
+    """Algorithm 1's node sequence (single walk), via the unified engine.
 
     Returns:
       update_nodes: (num_steps,) int32 — v_t at which update t is applied
@@ -97,42 +97,15 @@ def walk_mhlj(
       transitions: (num_steps,) int32 — physical hops taken after update t
         (1 for an MH move, d for a jump) — Remark-1 accounting.
     """
-    p_j_sched = jnp.broadcast_to(jnp.asarray(p_j, dtype=jnp.float32), (num_steps,))
-    d_pmf = jnp.asarray(trunc_geom_pmf(p_d, r), dtype=jnp.float32)
-    d_logits = jnp.log(d_pmf)
-
-    def jump(key_j, v):
-        key_d, key_hops = jax.random.split(key_j)
-        d = 1 + jax.random.categorical(key_d, d_logits)  # in {1..r}
-        hop_keys = jax.random.split(key_hops, r)
-
-        def hop(i, state):
-            v_cur = state
-            v_new = _uniform_neighbor(hop_keys[i], neighbors[v_cur], degrees[v_cur])
-            return jnp.where(i < d, v_new, v_cur)
-
-        v_fin = jax.lax.fori_loop(0, r, hop, v)
-        return v_fin, d.astype(jnp.int32)
-
-    def mh_move(key_m, v):
-        idx = _categorical_padded(key_m, is_row_probs[v])
-        return neighbors[v, idx], jnp.int32(1)
-
-    def step(carry, inputs):
-        v = carry
-        key_t, p_j_t = inputs
-        key_b, key_mv = jax.random.split(key_t)
-        do_jump = jax.random.bernoulli(key_b, p_j_t)
-        v_jump, d_jump = jump(key_mv, v)
-        v_mh, d_mh = mh_move(key_mv, v)
-        v_next = jnp.where(do_jump, v_jump, v_mh)
-        hops = jnp.where(do_jump, d_jump, d_mh)
-        return v_next, (v, hops)
-
-    keys = jax.random.split(key, num_steps)
-    v0 = jnp.asarray(v0, dtype=jnp.int32)
-    _, (update_nodes, transitions) = jax.lax.scan(step, v0, (keys, p_j_sched))
-    return update_nodes, transitions
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_d=p_d,
+        r=r,
+        row_probs=is_row_probs,
+        backend="scan",
+    )
+    return engine.run(key, jnp.asarray(v0, jnp.int32), num_steps, p_j=p_j)
 
 
 def walk_markov_batched(key, row_probs, neighbors, v0s, num_steps):
@@ -143,17 +116,36 @@ def walk_markov_batched(key, row_probs, neighbors, v0s, num_steps):
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("num_steps", "r", "p_d", "backend")
+)
 def walk_mhlj_batched(
-    key, is_row_probs, neighbors, degrees, v0s, num_steps, p_j, p_d, r
+    key,
+    is_row_probs,
+    neighbors,
+    degrees,
+    v0s,
+    num_steps,
+    p_j,
+    p_d,
+    r,
+    backend: str = "auto",
 ):
-    """vmap Algorithm-1 walks; returns (w, num_steps) update nodes + hops."""
-    keys = jax.random.split(key, v0s.shape[0])
-    fn = functools.partial(
-        walk_mhlj, num_steps=num_steps, p_j=p_j, p_d=p_d, r=r
+    """W Algorithm-1 walks in one batched engine run.
+
+    One vectorized transition services all W walks per step (the Pallas
+    kernel on TPU, vmapped scan math elsewhere); returns (w, num_steps)
+    update nodes + hops.
+    """
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_d=p_d,
+        r=r,
+        row_probs=is_row_probs,
+        backend=backend,
     )
-    return jax.vmap(
-        lambda k, v0: fn(k, is_row_probs, neighbors, degrees, v0)
-    )(keys, v0s)
+    return engine.run(key, v0s, num_steps, p_j=p_j)
 
 
 def empirical_distribution(update_nodes: np.ndarray, n: int, burn_in: int = 0) -> np.ndarray:

@@ -8,7 +8,9 @@ ops.py (jit'd model-layout wrapper), ref.py (pure-jnp oracle):
 * rmsnorm         — fused rmsnorm(+scale)
 * walk_transition — batched MHLJ next-node sampling (the paper's hot spot
                     at large walk counts): CDF inversion over padded
-                    neighbor rows, Eq.-7 probabilities computed in-kernel
+                    neighbor rows.  The ``"pallas"`` backend of
+                    ``core.engine.WalkEngine`` — the single implementation
+                    of Algorithm 1 — mirrored by the engine's scan math
 
 CPU validation uses interpret=True; on TPU the compiled kernels run.
 """

@@ -1,24 +1,39 @@
 """Batched MHLJ transition Pallas TPU kernel — the paper's orchestration hot
 spot at scale (W parallel walks on a large silo graph, sampled every step).
+This is the ``"pallas"`` backend of :class:`repro.core.engine.WalkEngine`;
+its per-walk body mirrors ``engine.mhlj_transition_math`` statement for
+statement, and the parity tests assert bitwise-equal outputs.
 
 One grid step processes ``block_w`` walks.  Per walk:
   * MH-IS move: CDF inversion over the walk's padded P_IS neighbor row
-    (precomputed (n, max_deg) table, resident in VMEM — graphs here are
-    orchestration-scale, n <= a few thousand silos);
-  * Lévy jump: distance d <- TruncGeom(p_d, r) via closed-form inverse CDF,
-    then d uniform hops using the neighbors/degrees tables.
+    (precomputed or live (n, max_deg) table, resident in VMEM — graphs here
+    are orchestration-scale, n <= a few thousand silos);
+  * Lévy jump: distance d <- TruncGeom(p_d, r) via the shared closed-form
+    inverse CDF (``core.levy.trunc_geom_icdf``), then d uniform hops using
+    the neighbors/degrees tables.
 
 All per-walk work is scalar loads from VMEM tables (pl.dslice rows +
 static-column picks) — no vector gathers, which keeps the kernel TPU-legal.
+
+When W is not a multiple of ``block_w`` the walk axis is padded up to the
+next block multiple and the padded lanes sliced off afterwards, so large
+non-power-of-two fleets keep the intended grid instead of collapsing into
+one giant block.
 
 Inputs:
   nodes      (W,)  int32     current node per walk
   row_probs  (n, max_deg)    P_IS rows aligned with ``neighbors``
   neighbors  (n, max_deg)    int32 padded (pad = self id)
   degrees    (n, 1) int32
-  uniforms   (W, 2 + r)      pre-drawn U(0,1): [jump?, distance, hop_1..hop_r]
-Output:
+  uniforms   (W, 3 + r)      pre-drawn U(0,1) with slot layout
+                             [jump_flag, mh, distance, hop_1..hop_r];
+                             slot 0 arrives as a {0.0, 1.0} Bernoulli(p_J)
+                             flag resolved by the engine (this is what lets
+                             p_J be a traced annealing schedule while the
+                             kernel keeps only static compile-time params)
+Outputs:
   next_nodes (W,) int32
+  hops       (W,) int32      Remark-1 physical transitions (1 MH, d jump)
 """
 from __future__ import annotations
 
@@ -28,36 +43,34 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.engine import U_DIST, U_HOP0, U_JUMP, U_MH, num_uniforms
+from repro.core.levy import trunc_geom_icdf
+
 __all__ = ["walk_transition"]
 
 
 def _kernel(
-    nodes_ref, probs_ref, neigh_ref, deg_ref, u_ref, out_ref,
-    *, p_j: float, p_d: float, r: int, block_w: int, max_deg: int,
+    nodes_ref, probs_ref, neigh_ref, deg_ref, u_ref, out_ref, hops_ref,
+    *, p_d: float, r: int, block_w: int, max_deg: int,
 ):
     def one_walk(w, _):
         v = nodes_ref[w]
-        u_jump = u_ref[w, 0]
 
         # --- MH-IS move via CDF inversion over the padded neighbor row ----
         prow = pl.load(probs_ref, (pl.dslice(v, 1), slice(None)))[0]  # (max_deg,)
         cdf = jnp.cumsum(prow)
-        idx = jnp.sum((cdf < u_ref[w, 1] * cdf[-1]).astype(jnp.int32))
+        idx = jnp.sum((cdf < u_ref[w, U_MH] * cdf[-1]).astype(jnp.int32))
         idx = jnp.minimum(idx, max_deg - 1)
         nrow = pl.load(neigh_ref, (pl.dslice(v, 1), slice(None)))[0]
         v_mh = jnp.take(nrow, idx, axis=0)
 
-        # --- Levy jump: closed-form TruncGeom inverse CDF ------------------
-        # F(d) = (1-(1-p_d)^d) / (1-(1-p_d)^r);  d = ceil(log1p(-u*Z)/log(1-p_d))
-        z = 1.0 - (1.0 - p_d) ** r
-        log_q = jnp.log(1.0 - p_d)
-        d = jnp.ceil(jnp.log1p(-u_ref[w, 1] * z) / log_q).astype(jnp.int32)
-        d = jnp.clip(d, 1, r)
+        # --- Lévy jump: shared TruncGeom inverse CDF, then d uniform hops -
+        d = trunc_geom_icdf(u_ref[w, U_DIST], p_d, r)
 
         def hop(i, v_cur):
             deg = pl.load(deg_ref, (pl.dslice(v_cur, 1), slice(None)))[0, 0]
             hop_idx = jnp.minimum(
-                (u_ref[w, 2 + i] * deg.astype(jnp.float32)).astype(jnp.int32),
+                (u_ref[w, U_HOP0 + i] * deg.astype(jnp.float32)).astype(jnp.int32),
                 deg - 1,
             )
             row = pl.load(neigh_ref, (pl.dslice(v_cur, 1), slice(None)))[0]
@@ -66,38 +79,44 @@ def _kernel(
 
         v_jump = jax.lax.fori_loop(0, r, hop, v)
 
-        out_ref[w] = jnp.where(u_jump < p_j, v_jump, v_mh)
+        do_jump = u_ref[w, U_JUMP] > 0.5
+        out_ref[w] = jnp.where(do_jump, v_jump, v_mh)
+        hops_ref[w] = jnp.where(do_jump, d, jnp.int32(1))
         return _
 
     jax.lax.fori_loop(0, block_w, one_walk, 0)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("p_j", "p_d", "r", "block_w", "interpret")
+    jax.jit, static_argnames=("p_d", "r", "block_w", "interpret")
 )
 def walk_transition(
     nodes: jnp.ndarray,  # (W,) int32
     row_probs: jnp.ndarray,  # (n, max_deg) float32
     neighbors: jnp.ndarray,  # (n, max_deg) int32
     degrees: jnp.ndarray,  # (n,) int32
-    uniforms: jnp.ndarray,  # (W, 2 + r) float32
+    uniforms: jnp.ndarray,  # (W, 3 + r) float32, slot 0 = jump flag
     *,
-    p_j: float,
     p_d: float,
     r: int,
     block_w: int = 256,
     interpret: bool = False,
-) -> jnp.ndarray:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     w = nodes.shape[0]
     n, max_deg = neighbors.shape
+    n_u = num_uniforms(r)
     bw = min(block_w, w)
-    if w % bw:
-        bw = w
-    grid = (w // bw,)
+    # pad W up to a block multiple (padded lanes run a harmless MH move on
+    # node 0 and are sliced off below)
+    w_pad = -(-w // bw) * bw
+    if w_pad != w:
+        nodes = jnp.pad(nodes, (0, w_pad - w))
+        uniforms = jnp.pad(uniforms, ((0, w_pad - w), (0, 0)))
+    grid = (w_pad // bw,)
     table = lambda i: (0, 0)
-    return pl.pallas_call(
+    next_nodes, hops = pl.pallas_call(
         functools.partial(
-            _kernel, p_j=p_j, p_d=p_d, r=r, block_w=bw, max_deg=max_deg
+            _kernel, p_d=p_d, r=r, block_w=bw, max_deg=max_deg
         ),
         grid=grid,
         in_specs=[
@@ -105,9 +124,16 @@ def walk_transition(
             pl.BlockSpec((n, max_deg), table),
             pl.BlockSpec((n, max_deg), table),
             pl.BlockSpec((n, 1), table),
-            pl.BlockSpec((bw, 2 + r), lambda i: (i, 0)),
+            pl.BlockSpec((bw, n_u), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((w_pad,), jnp.int32),
+        ],
         interpret=interpret,
     )(nodes, row_probs, neighbors, degrees[:, None], uniforms)
+    return next_nodes[:w], hops[:w]

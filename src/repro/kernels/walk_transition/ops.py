@@ -1,4 +1,10 @@
-"""Jit'd wrapper for batched MHLJ transitions (multi-walk mode)."""
+"""Jit'd wrappers for batched MHLJ transitions (multi-walk mode).
+
+Both entry points are thin views over :class:`repro.core.engine.WalkEngine`
+— ``mhlj_step_batched`` forces the Pallas backend (interpret mode off-TPU),
+``mhlj_step_oracle`` forces the pure-JAX scan backend.  Given the same key
+they consume identical uniforms and must agree bitwise (test_kernels.py).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,12 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.walk_transition.kernel import walk_transition
-from repro.kernels.walk_transition.ref import walk_transition_ref
-
-
-def _is_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.core.engine import WalkEngine
 
 
 @functools.partial(jax.jit, static_argnames=("p_j", "p_d", "r"))
@@ -26,15 +27,28 @@ def mhlj_step_batched(
     p_d: float,
     r: int,
 ) -> jnp.ndarray:
-    u = jax.random.uniform(key, (nodes.shape[0], 2 + r), jnp.float32)
-    return walk_transition(
-        nodes, row_probs, neighbors, degrees, u,
-        p_j=p_j, p_d=p_d, r=r, interpret=not _is_tpu(),
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_j=p_j,
+        p_d=p_d,
+        r=r,
+        row_probs=row_probs,
+        backend="pallas",
     )
+    next_nodes, _ = engine.step(key, nodes)
+    return next_nodes
 
 
 def mhlj_step_oracle(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):
-    u = jax.random.uniform(key, (nodes.shape[0], 2 + r), jnp.float32)
-    return walk_transition_ref(
-        nodes, row_probs, neighbors, degrees, u, p_j=p_j, p_d=p_d, r=r
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_j=p_j,
+        p_d=p_d,
+        r=r,
+        row_probs=row_probs,
+        backend="scan",
     )
+    next_nodes, _ = engine.step(key, nodes)
+    return next_nodes

@@ -1,8 +1,14 @@
-"""Pure-jnp oracle for the walk-transition kernel (same pre-drawn uniforms)."""
+"""Pure-jnp oracle for the walk-transition kernel (same pre-drawn uniforms).
+
+The oracle *is* the engine's scan-backend math — re-exported here so the
+kernel directory keeps the kernel/ops/ref layout of its siblings while
+Algorithm 1 stays implemented exactly once (repro.core.engine).
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.core.engine import mhlj_transition_math
 
 
 def walk_transition_ref(
@@ -12,32 +18,10 @@ def walk_transition_ref(
     degrees: jnp.ndarray,
     uniforms: jnp.ndarray,
     *,
-    p_j: float,
     p_d: float,
     r: int,
-) -> jnp.ndarray:
-    def one(v, u):
-        prow = row_probs[v]
-        cdf = jnp.cumsum(prow)
-        idx = jnp.minimum(
-            jnp.sum((cdf < u[1] * cdf[-1]).astype(jnp.int32)), prow.shape[0] - 1
-        )
-        v_mh = neighbors[v, idx]
-
-        z = 1.0 - (1.0 - p_d) ** r
-        d = jnp.clip(
-            jnp.ceil(jnp.log1p(-u[1] * z) / jnp.log(1.0 - p_d)).astype(jnp.int32), 1, r
-        )
-
-        def hop(i, v_cur):
-            deg = degrees[v_cur]
-            hop_idx = jnp.minimum(
-                (u[2 + i] * deg.astype(jnp.float32)).astype(jnp.int32), deg - 1
-            )
-            v_new = neighbors[v_cur, hop_idx]
-            return jnp.where(i < d, v_new, v_cur)
-
-        v_jump = jax.lax.fori_loop(0, r, hop, v)
-        return jnp.where(u[0] < p_j, v_jump, v_mh)
-
-    return jax.vmap(one)(nodes, uniforms)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Same contract as ``kernel.walk_transition`` (slot 0 = jump flag)."""
+    return mhlj_transition_math(
+        nodes, row_probs[nodes], neighbors, degrees, uniforms, p_d, r
+    )

@@ -1,4 +1,16 @@
-from repro.walk_sgd.trainer import RWSGDResult, run_rw_sgd
+from repro.walk_sgd.trainer import (
+    MultiRWSGDResult,
+    RWSGDResult,
+    run_rw_sgd,
+    run_rw_sgd_multi,
+)
 from repro.walk_sgd.comm_model import CommModel, comm_report
 
-__all__ = ["RWSGDResult", "run_rw_sgd", "CommModel", "comm_report"]
+__all__ = [
+    "MultiRWSGDResult",
+    "RWSGDResult",
+    "run_rw_sgd",
+    "run_rw_sgd_multi",
+    "CommModel",
+    "comm_report",
+]

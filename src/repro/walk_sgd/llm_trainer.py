@@ -11,6 +11,10 @@ The MH-IS transition probabilities are computed ON THE FLY from the current
 Lipschitz vector (Eq. 7 needs only deg(v), deg(u), L_v, L_u — local
 information), which supports both the paper's static L_v and the online EMA
 estimator for losses without closed-form smoothness (DESIGN.md §2).
+
+The MHLJ transition itself is NOT implemented here: ``WalkContext`` is a
+thin adapter over :class:`repro.core.engine.WalkEngine`, the single source
+of truth for Algorithm 1 (live Eq.-7 rows via ``engine.p_is_rows``).
 """
 from __future__ import annotations
 
@@ -21,8 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import WalkEngine
 from repro.core.graphs import Graph
-from repro.core.levy import trunc_geom_pmf
 from repro.core.transition import MHLJParams
 from repro.models.base import Model
 from repro.optim.base import GradientTransformation, apply_updates, global_norm
@@ -62,53 +66,37 @@ class WalkContext:
 
     # -- transition machinery (all shapes static, jit-safe) -----------------
 
-    def _mh_is_row(self, v: jnp.ndarray, lipschitz: jnp.ndarray) -> jnp.ndarray:
-        """P_IS(v, .) over the padded neighbor row, from local info (Eq. 7)."""
-        nbrs = self.neighbors[v]  # (max_deg,)
-        deg_v = self.degrees[v].astype(jnp.float32)
-        deg_u = self.degrees[nbrs].astype(jnp.float32)
-        l_v = lipschitz[v]
-        l_u = lipschitz[nbrs]
-        move = jnp.minimum(1.0 / deg_v, l_u / (deg_u * l_v))
-        is_self = nbrs == v
-        move = jnp.where(is_self, 0.0, move)
-        p_stay = 1.0 - move.sum()
-        n_self = jnp.maximum(is_self.sum(), 1)
-        probs = jnp.where(is_self, p_stay / n_self, move)
-        return jnp.maximum(probs, 0.0)
-
-    def _mh_move(self, key, v, lipschitz):
-        probs = self._mh_is_row(v, lipschitz)
-        logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)), -jnp.inf)
-        idx = jax.random.categorical(key, logits)
-        return self.neighbors[v, idx], jnp.int32(1)
-
-    def _jump(self, key, v):
-        key_d, key_hops = jax.random.split(key)
-        d_logits = jnp.log(jnp.asarray(trunc_geom_pmf(self.p_d, self.r), jnp.float32))
-        d = 1 + jax.random.categorical(key_d, d_logits)
-        hop_keys = jax.random.split(key_hops, self.r)
-
-        def hop(i, v_cur):
-            idx = jax.random.randint(hop_keys[i], (), 0, self.degrees[v_cur])
-            v_new = self.neighbors[v_cur, idx]
-            return jnp.where(i < d, v_new, v_cur)
-
-        return jax.lax.fori_loop(0, self.r, hop, v), d.astype(jnp.int32)
+    def engine(self) -> WalkEngine:
+        """The unified Algorithm-1 sampler; rows come live from the current
+        Lipschitz vector (Eq. 7), so no table is precomputed here."""
+        return WalkEngine(
+            neighbors=self.neighbors,
+            degrees=self.degrees,
+            p_j=self.p_j,
+            p_d=self.p_d,
+            r=self.r,
+            backend="scan",
+        )
 
     def advance(self, state: dict) -> dict:
-        key, key_b, key_mv = jax.random.split(state["rng"], 3)
-        v = state["node"]
-        do_jump = jax.random.bernoulli(key_b, state.get("p_j", self.p_j))
-        v_jump, d_jump = self._jump(key_mv, v)
-        v_mh, d_mh = self._mh_move(key_mv, v, state["lipschitz"])
+        key, key_step = jax.random.split(state["rng"])
+        v_next, hops = self.engine().step(
+            key_step,
+            state["node"],
+            p_j=state.get("p_j", self.p_j),
+            lipschitz=state["lipschitz"],
+        )
         return {
             **state,
             "rng": key,
-            "node": jnp.where(do_jump, v_jump, v_mh).astype(jnp.int32),
-            "hops": state["hops"] + jnp.where(do_jump, d_jump, d_mh),
+            "node": v_next.astype(jnp.int32),
+            "hops": state["hops"] + hops,
             "updates": state["updates"] + 1,
         }
+
+    def advance_batched(self, states: dict) -> dict:
+        """Advance W stacked walk states (leading walk axis on every leaf)."""
+        return jax.vmap(self.advance)(states)
 
     def weight(self, state: dict) -> jnp.ndarray:
         """Importance weight w(v) = L_bar / L_v (Eq. 12), clipped when the
@@ -171,8 +159,14 @@ def make_train_step(
     model: Model,
     optimizer: GradientTransformation,
     walk: WalkContext,
+    advance_walk: bool = True,
 ) -> Callable:
-    """Jittable (params, opt_state, walk_state, batch) -> updated + metrics."""
+    """Jittable (params, opt_state, walk_state, batch) -> updated + metrics.
+
+    ``advance_walk=False`` leaves the walk position untouched so a caller
+    managing W stacked walks can advance them all in one batched engine
+    transition (``walk.advance_batched`` / ``multi_walk.make_multi_walk_step``).
+    """
 
     def train_step(params, opt_state, walk_state, batch):
         (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
@@ -184,7 +178,8 @@ def make_train_step(
             gn = global_norm(grads)
             fp = global_norm(params)
             walk_state = walk.update_lipschitz(walk_state, gn, fp)
-        walk_state = walk.advance(walk_state)
+        if advance_walk:
+            walk_state = walk.advance(walk_state)
         metrics = {"loss": loss, "weight": w, **aux}
         return params, opt_state, walk_state, metrics
 

@@ -13,9 +13,12 @@ the same perturbed chain).  Benchmarked against the faithful single walk in
 benchmarks/ (EXPERIMENTS.md §Perf "beyond-paper").
 
 Implementation: parameters/optimizer/walk states are stacked on a leading
-walk axis and the single-walk train step is vmapped; on the production mesh
-the walk axis is sharded over 'pod' so each pod executes exactly one walk.
-``average_params`` is the periodic all-reduce.
+walk axis and the single-walk train step is vmapped (with its per-walk
+advance disabled); all W walk positions then advance together through ONE
+batched transition of the unified Algorithm-1 sampler
+(``core.engine.WalkEngine`` via ``WalkContext.advance_batched``).  On the
+production mesh the walk axis is sharded over 'pod' so each pod executes
+exactly one walk.  ``average_params`` is the periodic all-reduce.
 """
 from __future__ import annotations
 
@@ -86,11 +89,12 @@ def make_multi_walk_step(
     ``avg_every > 0``, parameters are averaged across walks every
     ``avg_every`` steps (local-SGD style).
     """
-    single = make_train_step(model, optimizer, walk)
+    single = make_train_step(model, optimizer, walk, advance_walk=False)
     vstep = jax.vmap(single)
 
     def step(params_w, opt_w, walk_w, batches_w, step_idx):
         params_w, opt_w, walk_w, metrics = vstep(params_w, opt_w, walk_w, batches_w)
+        walk_w = walk.advance_batched(walk_w)
         if avg_every > 0:
             do_avg = (step_idx + 1) % avg_every == 0
             params_w = jax.tree_util.tree_map(

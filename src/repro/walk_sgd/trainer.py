@@ -10,28 +10,33 @@ importance-weighted stochastic gradient of the visited node's local loss
   method='mhlj'       Algorithm 1 (MH-IS + Levy jumps), weighted gradient
   method='simple'     simple random walk, plain gradient (degree-biased)
 
-This is the regression-scale engine used for the paper's figures; the
+The walk advances through :class:`repro.core.engine.WalkEngine` (the single
+implementation of the MHLJ transition); non-jump methods are the engine at
+p_J = 0.  :func:`run_rw_sgd_multi` runs W walks at once off one batched
+engine transition per step (the multi-walk benchmark path).
+
+This is the regression-scale trainer used for the paper's figures; the
 pjit-sharded LLM engine is ``walk_sgd.llm_trainer``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import transition as trans_mod
+from repro.core.engine import WalkEngine
 from repro.core.graphs import Graph
-from repro.core.levy import trunc_geom_pmf
 from repro.core.transition import MHLJParams
 from repro.core.walk import graph_tensors
 from repro.data.synthetic import RegressionData
 from repro.models import regression as reg
 
-__all__ = ["RWSGDResult", "run_rw_sgd"]
+__all__ = ["RWSGDResult", "MultiRWSGDResult", "run_rw_sgd", "run_rw_sgd_multi"]
 
 METHODS = ("uniform", "importance", "mhlj", "simple")
 
@@ -51,7 +56,7 @@ class RWSGDResult:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_steps", "r", "p_d", "use_weights", "use_jumps", "loss_grad"),
+    static_argnames=("num_steps", "r", "p_d", "use_weights", "loss_grad"),
 )
 def _run_scan(
     key,
@@ -69,28 +74,16 @@ def _run_scan(
     p_d: float,
     r: int,
     use_weights: bool,
-    use_jumps: bool,
     loss_grad,  # static callable: grad of per-node loss
 ):
-    d_logits = jnp.log(jnp.asarray(trunc_geom_pmf(p_d, r), jnp.float32)) if use_jumps else None
-
-    def mh_move(key_m, v):
-        probs = row_probs[v]
-        logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)), -jnp.inf)
-        idx = jax.random.categorical(key_m, logits)
-        return neighbors[v, idx], jnp.int32(1)
-
-    def jump(key_j, v):
-        key_d, key_hops = jax.random.split(key_j)
-        d = 1 + jax.random.categorical(key_d, d_logits)
-        hop_keys = jax.random.split(key_hops, r)
-
-        def hop(i, v_cur):
-            idx = jax.random.randint(hop_keys[i], (), 0, degrees[v_cur])
-            v_new = neighbors[v_cur, idx]
-            return jnp.where(i < d, v_new, v_cur)
-
-        return jax.lax.fori_loop(0, r, hop, v), d.astype(jnp.int32)
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_d=p_d,
+        r=r,
+        row_probs=row_probs,
+        backend="scan",
+    )
 
     def step(carry, inputs):
         x, v = carry
@@ -98,17 +91,7 @@ def _run_scan(
         g = loss_grad(x, features[v], targets[v])
         w = jnp.where(use_weights, weights[v], 1.0)
         x_new = x - gamma * w * g
-
-        key_b, key_mv = jax.random.split(key_t)
-        if use_jumps:
-            do_jump = jax.random.bernoulli(key_b, p_j_t)
-            v_jump, d_jump = jump(key_mv, v)
-            v_mh, d_mh = mh_move(key_mv, v)
-            v_next = jnp.where(do_jump, v_jump, v_mh)
-            hops = jnp.where(do_jump, d_jump, d_mh)
-        else:
-            v_next, hops = mh_move(key_mv, v)
-
+        v_next, hops = engine.step(key_t, v, p_j=p_j_t)
         mse = reg.mse_objective(x_new, features, targets)
         return (x_new, v_next), (mse, v, hops)
 
@@ -120,21 +103,15 @@ def _run_scan(
     return x_fin, jnp.concatenate([mse0[None], mses]), nodes, hops
 
 
-def run_rw_sgd(
+def _setup_method(
     method: str,
     graph: Graph,
     data: RegressionData,
-    gamma: float,
+    mhlj_params: Optional[MHLJParams],
+    p_j_schedule: Optional[np.ndarray],
     num_steps: int,
-    *,
-    mhlj_params: Optional[MHLJParams] = None,
-    p_j_schedule: Optional[np.ndarray] = None,
-    loss: str = "linear",
-    x0: Optional[np.ndarray] = None,
-    v0: int = 0,
-    seed: int = 0,
-) -> RWSGDResult:
-    """Run one RW-SGD training; returns the Fig-3 style MSE trace."""
+):
+    """Shared method dispatch: padded P rows, weights, p_J schedule, (p_d, r)."""
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
     lips = data.lipschitz
@@ -154,7 +131,6 @@ def run_rw_sgd(
         use_weights, use_jumps = True, True
 
     row_probs = jnp.asarray(trans_mod.row_probs_padded(p, graph))
-    neighbors, degrees = graph_tensors(graph)
     weights = jnp.asarray(lips.mean() / lips, jnp.float32)
 
     if use_jumps:
@@ -167,8 +143,30 @@ def run_rw_sgd(
         p_d, r = mhlj_params.p_d, mhlj_params.r
     else:
         p_j_sched = jnp.zeros((num_steps,), jnp.float32)
-        p_d, r = 0.5, 1  # unused
+        p_d, r = 0.5, 1  # engine never jumps at p_J = 0
 
+    return row_probs, weights, p_j_sched, p_d, r, use_weights
+
+
+def run_rw_sgd(
+    method: str,
+    graph: Graph,
+    data: RegressionData,
+    gamma: float,
+    num_steps: int,
+    *,
+    mhlj_params: Optional[MHLJParams] = None,
+    p_j_schedule: Optional[np.ndarray] = None,
+    loss: str = "linear",
+    x0: Optional[np.ndarray] = None,
+    v0: int = 0,
+    seed: int = 0,
+) -> RWSGDResult:
+    """Run one RW-SGD training; returns the Fig-3 style MSE trace."""
+    row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
+        method, graph, data, mhlj_params, p_j_schedule, num_steps
+    )
+    neighbors, degrees = graph_tensors(graph)
     grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
 
@@ -188,7 +186,6 @@ def run_rw_sgd(
         p_d,
         r,
         use_weights,
-        use_jumps,
         grad_fn,
     )
     return RWSGDResult(
@@ -196,5 +193,161 @@ def run_rw_sgd(
         update_nodes=np.asarray(nodes),
         transitions=np.asarray(hops),
         x_final=np.asarray(x_fin),
+        method=method,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-walk training (beyond-paper, benchmarks/multi_walk.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MultiRWSGDResult:
+    """W parallel walks trained in one scan off one batched engine step."""
+
+    mse: np.ndarray  # (W, T+1) per-walk objective traces
+    avg_mse: np.ndarray  # (T+1,) objective of the walk-averaged model
+    transitions: np.ndarray  # (W, T) physical hops (Remark 1)
+    x_final: np.ndarray  # (W, dim) per-walk models
+    method: str
+
+    @property
+    def x_avg(self) -> np.ndarray:
+        return self.x_final.mean(axis=0)
+
+    @property
+    def transitions_per_update(self) -> float:
+        return float(self.transitions.mean())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "r", "p_d", "use_weights", "loss_grad", "avg_every"),
+)
+def _run_scan_multi(
+    key,
+    x0s,  # (W, dim)
+    features,
+    targets,
+    weights,
+    row_probs,
+    neighbors,
+    degrees,
+    v0s,  # (W,)
+    num_steps: int,
+    gamma: float,
+    p_j_sched,
+    p_d: float,
+    r: int,
+    use_weights: bool,
+    loss_grad,
+    avg_every: int,
+):
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_d=p_d,
+        r=r,
+        row_probs=row_probs,
+        backend="auto",
+    )
+    grad_w = jax.vmap(loss_grad, in_axes=(0, 0, 0))
+
+    def step(carry, inputs):
+        xs, vs, t = carry
+        key_t, p_j_t = inputs
+        gs = grad_w(xs, features[vs], targets[vs])  # (W, dim)
+        ws = jnp.where(use_weights, weights[vs], 1.0)[:, None]
+        xs_new = xs - gamma * ws * gs
+        if avg_every > 0:
+            do_avg = (t + 1) % avg_every == 0
+            xs_new = jnp.where(do_avg, xs_new.mean(axis=0)[None], xs_new)
+        vs_next, hops = engine.step(key_t, vs, p_j=p_j_t)  # ONE batched call
+        mses = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
+            xs_new, features, targets
+        )
+        avg_mse = reg.mse_objective(xs_new.mean(axis=0), features, targets)
+        return (xs_new, vs_next, t + 1), (mses, avg_mse, hops)
+
+    keys = jax.random.split(key, num_steps)
+    (xs_fin, _, _), (mses, avg_mses, hops) = jax.lax.scan(
+        step, (x0s, v0s, jnp.int32(0)), (keys, p_j_sched)
+    )
+    mse0 = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
+        x0s, features, targets
+    )
+    avg0 = reg.mse_objective(x0s.mean(axis=0), features, targets)
+    return (
+        xs_fin,
+        jnp.concatenate([mse0[None], mses]).T,  # (W, T+1)
+        jnp.concatenate([avg0[None], avg_mses]),
+        hops.T,  # (W, T)
+    )
+
+
+def run_rw_sgd_multi(
+    method: str,
+    graph: Graph,
+    data: RegressionData,
+    gamma: float,
+    num_steps: int,
+    num_walks: int,
+    *,
+    mhlj_params: Optional[MHLJParams] = None,
+    p_j_schedule: Optional[np.ndarray] = None,
+    loss: str = "linear",
+    x0: Optional[np.ndarray] = None,
+    v0s: Optional[Sequence[int]] = None,
+    avg_every: int = 0,
+    seed: int = 0,
+) -> MultiRWSGDResult:
+    """W parallel RW-SGD trainings sharing one batched engine transition.
+
+    Each walk carries its own model; ``avg_every > 0`` averages the models
+    across walks every that many updates (local-SGD style).  All W
+    transitions per step are sampled by a single ``WalkEngine.step`` call —
+    the Pallas kernel on TPU — instead of W independent scans.
+    """
+    row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
+        method, graph, data, mhlj_params, p_j_schedule, num_steps
+    )
+    neighbors, degrees = graph_tensors(graph)
+
+    if v0s is None:
+        rng = np.random.default_rng(seed)
+        v0s = rng.choice(graph.n, size=num_walks, replace=num_walks > graph.n)
+    v0s = jnp.asarray(np.asarray(v0s, np.int32))
+    if v0s.shape != (num_walks,):
+        raise ValueError(f"v0s must have shape ({num_walks},), got {v0s.shape}")
+
+    grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
+    x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
+    x0s = jnp.broadcast_to(x0[None], (num_walks, data.dim))
+
+    xs_fin, mses, avg_mses, hops = _run_scan_multi(
+        jax.random.PRNGKey(seed),
+        x0s,
+        jnp.asarray(data.features, jnp.float32),
+        jnp.asarray(data.targets, jnp.float32),
+        weights,
+        row_probs,
+        neighbors,
+        degrees,
+        v0s,
+        num_steps,
+        gamma,
+        p_j_sched,
+        p_d,
+        r,
+        use_weights,
+        grad_fn,
+        avg_every,
+    )
+    return MultiRWSGDResult(
+        mse=np.asarray(mses),
+        avg_mse=np.asarray(avg_mses),
+        transitions=np.asarray(hops),
+        x_final=np.asarray(xs_fin),
         method=method,
     )

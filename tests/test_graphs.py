@@ -1,6 +1,8 @@
 """Graph substrate tests incl. hypothesis property checks."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graphs

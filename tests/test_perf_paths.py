@@ -37,6 +37,18 @@ def test_maybe_constrain_noop_without_mesh():
     np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def _activate_mesh(mesh):
+    """Version-appropriate mesh activation: ``jax.set_mesh`` /
+    ``jax.sharding.set_mesh`` on new JAX, the legacy ``with mesh:`` context
+    (thread resources) on older releases."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is None:
+        set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh  # Mesh is itself a context manager on older JAX
+
+
 def test_maybe_constrain_skips_indivisible_dims():
     """Under a real mesh, dims that don't divide the axis are dropped (the
     batch-1 decode regression guard) — values unchanged either way."""
@@ -46,7 +58,7 @@ def test_maybe_constrain_skips_indivisible_dims():
     def f(x):
         return A._maybe_constrain(x, ("model", None)) * 2.0
 
-    with jax.sharding.set_mesh(mesh):
+    with _activate_mesh(mesh):
         out = f(jnp.ones((3, 4)))  # 3 % 1 == 0 -> constrained fine
     np.testing.assert_allclose(np.asarray(out), 2 * np.ones((3, 4)))
 

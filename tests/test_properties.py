@@ -14,6 +14,9 @@ Lipschitz vectors:
   P9  importance weights w(v) = L_bar/L_v give an unbiased reweighted gradient
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graphs as g_mod

@@ -1,6 +1,8 @@
 """Transition-matrix invariants (paper Eqs. 6-8) + hypothesis properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
