@@ -1,7 +1,11 @@
-"""Paper Fig. 5: entrapment + MHLJ fix on 2-d grid and Watts-Strogatz.
+"""Paper Fig. 5 + trap-prone extensions: entrapment and the MHLJ fix on
+sparse topologies.
 
-Same protocol as Fig 3 on the paper's other sparse topologies:
-(a) 2-d grid (25x40 = 1000 nodes), (b) Watts-Strogatz(1000, 4, 0.1).
+Same protocol as Fig 3 on the paper's other sparse topologies —
+(a) 2-d grid (25x40 = 1000 nodes), (b) Watts-Strogatz(1000, 4, 0.1) — plus
+the graph families the entrapment literature actually studies: hub-heavy
+Barabasi-Albert, bottlenecked stochastic block models, and the dumbbell
+worst case.
 """
 from __future__ import annotations
 
@@ -10,23 +14,46 @@ import numpy as np
 from benchmarks.common import milestones
 from repro.core import MHLJParams
 from repro.core.entrapment import occupancy_concentration
-from repro.core.graphs import grid2d, watts_strogatz
-from repro.data import make_heterogeneous_regression
-from repro.walk_sgd import run_rw_sgd
+from repro.core.graphs import barabasi_albert, dumbbell, grid2d, sbm, watts_strogatz
 
 NAME = "fig5_sparse_graphs"
 PAPER_CLAIM = (
     "C4: the entrapment problem and the MHLJ fix replicate on 2-d grid and "
-    "Watts-Strogatz sparse networks (not ring-specific)."
+    "Watts-Strogatz sparse networks (not ring-specific), and extend to the "
+    "trap-prone families (Barabasi-Albert hubs, SBM bottlenecks, dumbbell)."
 )
 
 
-def run(quick: bool = False) -> dict:
-    T = 20_000 if quick else 40_000
-    if quick:
-        graphs = {"grid2d": grid2d(16, 16), "watts_strogatz": watts_strogatz(256, 4, 0.1, 0)}
-    else:
-        graphs = {"grid2d": grid2d(25, 40), "watts_strogatz": watts_strogatz(1000, 4, 0.1, 0)}
+def _graphs(scale: str) -> dict:
+    if scale == "smoke":
+        return {
+            "grid2d": grid2d(8, 8),
+            "sbm": sbm([32, 32], 0.3, 0.02, seed=0),
+        }
+    if scale == "quick":
+        return {
+            "grid2d": grid2d(16, 16),
+            "watts_strogatz": watts_strogatz(256, 4, 0.1, 0),
+            "barabasi_albert": barabasi_albert(256, 3, seed=0),
+            "sbm": sbm([64] * 4, 0.2, 0.01, seed=0),
+            "dumbbell": dumbbell(32, 16),
+        }
+    return {
+        "grid2d": grid2d(25, 40),
+        "watts_strogatz": watts_strogatz(1000, 4, 0.1, 0),
+        "barabasi_albert": barabasi_albert(1000, 3, seed=0),
+        "sbm": sbm([250] * 4, 0.1, 0.004, seed=0),
+        "dumbbell": dumbbell(64, 128),
+    }
+
+
+def run(quick: bool = False, scale: str | None = None) -> dict:
+    from repro.data import make_heterogeneous_regression
+    from repro.walk_sgd import run_rw_sgd
+
+    scale = scale or ("quick" if quick else "full")
+    T = {"smoke": 800, "quick": 20_000, "full": 40_000}[scale]
+    graphs = _graphs(scale)
     params = MHLJParams(0.1, 0.5, 3)
     out = {"T": T, "claim": PAPER_CLAIM}
     for tag, graph in graphs.items():
@@ -57,3 +84,8 @@ def run(quick: bool = False) -> dict:
         f"{tag}_mhlj_occ": out[tag]["mhlj"]["top_node_occupancy"] for tag in graphs
     }
     return out
+
+
+def run_smoke() -> dict:
+    """Tiny tier exercised by the tier-1 bench-smoke test."""
+    return run(scale="smoke")

@@ -1,0 +1,130 @@
+"""Large-graph MHLJ walk sweep — the scale axis of the ROADMAP north star.
+
+Sweeps batched MHLJ walks over trap-prone CSR topologies up to ~100k nodes
+and records steps/sec.  Everything on this path is O(E): graphs are built as
+edge lists (``layout="csr"``, no N×N adjacency ever exists), P_IS rows are
+the padded ``(n, max_deg)`` Eq.-7 table computed from local information
+only, and the engine's sparse layout gathers just the W active rows per
+step.  The JSON result lands in ``results/BENCH_large_graph.json`` (plus
+the harness's usual ``bench_large_graph_walk.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR
+from repro.core import MHLJParams, WalkEngine, p_is_rows
+from repro.core.graphs import barabasi_albert, dumbbell, grid2d, ring, sbm
+
+NAME = "large_graph_walk"
+PAPER_CLAIM = (
+    "Scale (beyond-paper): the sparse CSR engine sweeps MHLJ walks over "
+    "trap-prone graphs up to ~100k nodes in O(E) memory — no dense N×N "
+    "transition table is ever materialized."
+)
+
+PARAMS = MHLJParams(p_j=0.1, p_d=0.5, r=3)
+
+
+def _families(scale: str):
+    """(tag, builder) pairs per scale tier; every builder returns a CSRGraph."""
+    if scale == "smoke":
+        return [
+            ("ring", lambda: ring(1_500, layout="csr")),
+            ("sbm", lambda: sbm([400] * 3, 0.02, 0.002, seed=0, layout="csr")),
+        ]
+    if scale == "quick":
+        return [
+            ("ring", lambda: ring(8_000, layout="csr")),
+            ("grid2d", lambda: grid2d(64, 64, layout="csr")),
+            ("sbm", lambda: sbm([2_000] * 4, 0.005, 0.0002, seed=0, layout="csr")),
+            ("barabasi_albert", lambda: barabasi_albert(8_000, 3, seed=0, layout="csr")),
+            ("dumbbell", lambda: dumbbell(128, 4_000, layout="csr")),
+        ]
+    return [
+        ("ring", lambda: ring(100_000, layout="csr")),
+        ("grid2d", lambda: grid2d(316, 316, layout="csr")),
+        ("sbm", lambda: sbm([25_000] * 4, 0.0008, 0.00002, seed=0, layout="csr")),
+        ("barabasi_albert", lambda: barabasi_albert(30_000, 3, seed=0, layout="csr")),
+        ("dumbbell", lambda: dumbbell(256, 99_488, layout="csr")),
+    ]
+
+
+def _sweep_one(graph, num_walks: int, num_steps: int, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    lips = jnp.asarray(
+        np.exp(rng.normal(0.0, 1.0, graph.n)), jnp.float32
+    )  # heavy-tailed Lipschitz spread: realistic trap pressure
+    neighbors = jnp.asarray(graph.neighbors)
+    degrees = jnp.asarray(graph.degrees)
+    rows = p_is_rows(neighbors, degrees, lips)  # (n, max_deg): O(E) table
+    engine = WalkEngine(
+        neighbors=neighbors,
+        degrees=degrees,
+        p_j=PARAMS.p_j,
+        p_d=PARAMS.p_d,
+        r=PARAMS.r,
+        row_probs=rows,
+        backend="auto",  # pallas sparse tiles on TPU, scan elsewhere
+        layout="sparse",
+    )
+    v0s = jnp.asarray(rng.integers(0, graph.n, num_walks), jnp.int32)
+    key = jax.random.PRNGKey(seed)
+
+    nodes, hops = engine.run(key, v0s, num_steps)  # compile + warm
+    nodes.block_until_ready()
+    t0 = time.perf_counter()
+    nodes, hops = engine.run(jax.random.PRNGKey(seed + 1), v0s, num_steps)
+    nodes.block_until_ready()
+    dt = time.perf_counter() - t0
+
+    hops_np = np.asarray(hops, np.float64)
+    return {
+        "n": graph.n,
+        "nnz": graph.num_edges,
+        "max_degree": graph.max_degree,
+        "num_walks": num_walks,
+        "num_steps": num_steps,
+        "walk_steps_per_sec": float(num_walks * num_steps / dt),
+        "transitions_per_update": float(hops_np.mean()),
+        "csr_bytes": int(
+            graph.indptr.nbytes + graph.indices.nbytes
+            + graph.neighbors.nbytes + graph.degrees.nbytes
+        ),
+        "dense_table_bytes_avoided": int(graph.n) ** 2 * 8,
+    }
+
+
+def run(quick: bool = False, scale: str | None = None) -> dict:
+    scale = scale or ("quick" if quick else "full")
+    num_walks = {"smoke": 128, "quick": 1024, "full": 2048}[scale]
+    num_steps = {"smoke": 30, "quick": 100, "full": 200}[scale]
+    out = {"claim": PAPER_CLAIM, "scale": scale, "params": vars(PARAMS) | {}}
+    derived = {}
+    for tag, build in _families(scale):
+        t0 = time.perf_counter()
+        graph = build()
+        build_s = time.perf_counter() - t0
+        res = _sweep_one(graph, num_walks, num_steps, seed=7)
+        res["construction_sec"] = build_s
+        out[tag] = res
+        derived[f"{tag}_steps_per_sec"] = res["walk_steps_per_sec"]
+        derived[f"{tag}_n"] = res["n"]
+    out["derived"] = derived
+
+    if scale != "smoke":  # don't clobber real sweeps from the anti-rot tier
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, "BENCH_large_graph.json"), "w") as f:
+            json.dump(out, f, indent=2, default=float)
+    return out
+
+
+def run_smoke() -> dict:
+    """Tiny tier exercised by the tier-1 bench-smoke test."""
+    return run(scale="smoke")

@@ -21,6 +21,10 @@ from repro.configs import SHAPES_BY_NAME, get_arch
 from repro.launch.mesh import HW
 
 NAME = "roofline"
+PAPER_CLAIM = (
+    "System benchmark (beyond-paper): measured per-device throughput of the "
+    "model configs vs the analytic HBM/MXU roofline."
+)
 
 CAPTURE = os.path.join(RESULTS_DIR, "roofline.jsonl")
 CAPTURE_OPT = os.path.join(RESULTS_DIR, "roofline_opt.jsonl")

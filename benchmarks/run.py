@@ -1,12 +1,19 @@
 """Benchmark harness (deliverable d): one module per paper figure/claim plus
 the roofline and system benchmarks.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3_ring,...]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke] [--only fig3_ring,...]
 
 Each module exposes ``run(quick) -> dict`` (with a ``derived`` summary) and
 ``PAPER_CLAIM``; results land in results/bench_<name>.json and a CSV line
 ``name,us_per_call,derived...`` is printed per benchmark (us_per_call =
 wall time of the benchmark body).
+
+``--smoke`` is the anti-rot tier exercised by the tier-1 test suite
+(tests/test_bench_smoke.py): it verifies every module's harness contract
+(NAME / PAPER_CLAIM / run) and *executes* the modules that define a
+``run_smoke()`` tier at toy sizes — so a benchmark that stops importing or
+crashes on its first step fails CI instead of rotting silently.  Smoke
+results are not dumped to results/.
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ from benchmarks import (
     fig4_erdos_renyi,
     fig5_sparse_graphs,
     fig6_annealing,
+    large_graph_walk,
     llm_walk_throughput,
     multi_walk,
     roofline,
@@ -34,15 +42,49 @@ MODULES = [
     theorem1_remark1,
     multi_walk,
     llm_walk_throughput,
+    large_graph_walk,
     roofline,
 ]
+
+
+def smoke() -> int:
+    """Contract-check every module; execute the ones with a smoke tier."""
+    failures = 0
+    print("name,us_per_call,derived")
+    for mod in MODULES:
+        if not (
+            isinstance(getattr(mod, "NAME", None), str)
+            and isinstance(getattr(mod, "PAPER_CLAIM", None), str)
+            and callable(getattr(mod, "run", None))
+        ):
+            failures += 1
+            print(f"{getattr(mod, '__name__', mod)},0,FAILED: harness contract")
+            continue
+        if not callable(getattr(mod, "run_smoke", None)):
+            print(f"{mod.NAME},0,import-ok")
+            continue
+        try:
+            result, seconds = time_call(mod.run_smoke)
+            print(row(f"{mod.NAME}[smoke]", seconds, result.get("derived", {})))
+        except Exception as e:
+            failures += 1
+            print(f"{mod.NAME},0,FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return 1 if failures else 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sizes/iters")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="anti-rot tier: contract-check all modules, run toy sizes",
+    )
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     args = ap.parse_args()
+
+    if args.smoke:
+        return smoke()
 
     selected = MODULES
     if args.only:

@@ -1,6 +1,7 @@
 """Core contribution of the paper: random-walk transition design + MHLJ."""
 from repro.core.graphs import (
     Graph,
+    CSRGraph,
     ring,
     grid2d,
     watts_strogatz,
@@ -8,7 +9,12 @@ from repro.core.graphs import (
     star,
     complete,
     expander,
+    barabasi_albert,
+    sbm,
+    dumbbell,
+    lollipop,
     from_adjacency,
+    from_edges,
 )
 from repro.core.transition import (
     MHLJParams,
@@ -18,6 +24,9 @@ from repro.core.transition import (
     mh_importance,
     mhlj,
     row_probs_padded,
+    simple_rw_rows,
+    mh_uniform_rows,
+    mh_importance_rows,
 )
 from repro.core.levy import (
     trunc_geom_pmf,
@@ -32,7 +41,7 @@ from repro.core.importance import (
     importance_distribution,
     importance_weights,
 )
-from repro.core.engine import WalkEngine, p_is_rows
+from repro.core.engine import WalkEngine, p_is_rows, levy_jump_batched
 from repro.core.walk import (
     graph_tensors,
     walk_markov,
@@ -43,15 +52,17 @@ from repro.core.walk import (
 from repro.core import mixing, entrapment, theory, schedules
 
 __all__ = [
-    "Graph", "ring", "grid2d", "watts_strogatz", "erdos_renyi", "star",
-    "complete", "expander", "from_adjacency",
+    "Graph", "CSRGraph", "ring", "grid2d", "watts_strogatz", "erdos_renyi",
+    "star", "complete", "expander", "barabasi_albert", "sbm", "dumbbell",
+    "lollipop", "from_adjacency", "from_edges",
     "MHLJParams", "simple_rw", "mh", "mh_uniform", "mh_importance", "mhlj",
-    "row_probs_padded",
+    "row_probs_padded", "simple_rw_rows", "mh_uniform_rows",
+    "mh_importance_rows",
     "trunc_geom_pmf", "levy_matrix", "levy_matrix_chained",
     "expected_transitions_per_update", "remark1_bound",
     "linear_regression_lipschitz", "logistic_regression_lipschitz",
     "importance_distribution", "importance_weights",
-    "WalkEngine", "p_is_rows",
+    "WalkEngine", "p_is_rows", "levy_jump_batched",
     "graph_tensors", "walk_markov", "walk_mhlj", "walk_markov_batched",
     "walk_mhlj_batched",
     "mixing", "entrapment", "theory", "schedules",

@@ -29,9 +29,14 @@ Backends (identical law, bitwise-identical outputs given the same key):
 * ``"scan"``   — pure JAX ``vmap`` over walks; also the oracle for kernel
   tests.  Gathers only the W active P_IS rows, so it stays cheap for
   single-walk training loops.
-* ``"pallas"`` — the ``kernels/walk_transition`` TPU kernel over the full
-  row table (graphs here are orchestration-scale); falls back to
-  ``interpret=True`` off-TPU.
+* ``"pallas"`` — the ``kernels/walk_transition`` TPU kernels; falls back to
+  ``interpret=True`` off-TPU.  Row handling is governed by ``layout``:
+  ``"sparse"`` (default) gathers only the W active ``[block_w, max_deg]``
+  neighbor tiles and runs the MH CDF inversion in
+  ``walk_transition_sparse`` with the Lévy hop chain as O(W) XLA gathers —
+  working set O(W·max_deg + E), so 100k-node graphs fit; ``"dense"`` keeps
+  the original full-table-in-VMEM kernel for parity testing at
+  orchestration scale (n <= a few thousand).
 * ``"auto"``   — pallas on TPU, scan elsewhere.
 
 P_IS rows (Eq. 7) come either precomputed (``row_probs`` from
@@ -60,6 +65,8 @@ __all__ = [
     "num_uniforms",
     "p_is_rows",
     "mhlj_transition_math",
+    "combine_mh_jump",
+    "levy_jump_batched",
     "WalkEngine",
 ]
 
@@ -114,42 +121,75 @@ def mhlj_transition_math(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One Algorithm-1 transition for W walks — the canonical math.
 
-    The Pallas kernel mirrors this per-walk body statement for statement
-    (same CDF inversion, same :func:`trunc_geom_icdf`, same hop loop), and
-    the parity tests assert bitwise-equal outputs given the same uniforms.
+    The MH-IS move is a per-walk CDF inversion (vmapped); the Lévy branch
+    is :func:`levy_jump_batched`, shared verbatim with the sparse Pallas
+    path so the jump law exists exactly once in pure JAX.  The Pallas
+    kernels mirror this arithmetic (same CDF inversion, same
+    :func:`trunc_geom_icdf`, same hop-index formula), and the parity tests
+    assert bitwise-equal outputs given the same uniforms.
 
     Returns ``(next_nodes, hops)``, both ``(W,)`` int32; ``hops`` is the
     Remark-1 physical transition count (1 for MH, d for a jump).
     """
     max_deg = neighbors.shape[1]
 
-    def one_walk(v, prow, u):
+    def one_walk_mh(v, prow, u):
         # MH-IS move: CDF inversion over the padded P_IS row.
         cdf = jnp.cumsum(prow)
         idx = jnp.sum((cdf < u[U_MH] * cdf[-1]).astype(jnp.int32))
         idx = jnp.minimum(idx, max_deg - 1)
-        v_mh = neighbors[v, idx]
+        return neighbors[v, idx]
 
-        # Lévy jump: d ~ TruncGeom(p_d, r), then d uniform hops.
-        d = trunc_geom_icdf(u[U_DIST], p_d, r)
+    v_mh = jax.vmap(one_walk_mh)(nodes, rows, uniforms)
+    v_jump, d = levy_jump_batched(nodes, uniforms, neighbors, degrees, p_d, r)
+    return combine_mh_jump(v_mh, v_jump, d, uniforms)
 
-        def hop(i, v_cur):
-            deg = degrees[v_cur]
-            hop_idx = jnp.minimum(
-                (u[U_HOP0 + i] * deg.astype(jnp.float32)).astype(jnp.int32),
-                deg - 1,
-            )
-            v_new = neighbors[v_cur, hop_idx]
-            return jnp.where(i < d, v_new, v_cur)
 
-        v_jump = jax.lax.fori_loop(0, r, hop, v)
+def combine_mh_jump(
+    v_mh: jnp.ndarray, v_jump: jnp.ndarray, d: jnp.ndarray, uniforms: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Resolve the J~Ber(p_J) branch per walk — THE jump/MH combine.
 
-        do_jump = u[U_JUMP] > 0.5
-        v_next = jnp.where(do_jump, v_jump, v_mh)
-        hops = jnp.where(do_jump, d, jnp.int32(1))
-        return v_next, hops
+    Selects the jump or MH destination from the ``U_JUMP`` flag and
+    produces the Remark-1 hop count (1 for MH, d for a jump).  Shared by
+    every pure-JAX path (scan and sparse Pallas) so the branch convention
+    exists exactly once; the dense Pallas kernel mirrors it per walk.
+    """
+    do_jump = uniforms[:, U_JUMP] > 0.5
+    v_next = jnp.where(do_jump, v_jump, v_mh)
+    hops = jnp.where(do_jump, d, jnp.int32(1))
+    return v_next, hops
 
-    return jax.vmap(one_walk)(nodes, rows, uniforms)
+
+def levy_jump_batched(
+    nodes: jnp.ndarray,  # (W,) int32
+    uniforms: jnp.ndarray,  # (W, 3 + r)
+    neighbors: jnp.ndarray,  # (n, max_deg) int32
+    degrees: jnp.ndarray,  # (n,) int32
+    p_d: float,
+    r: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The Lévy branch of Algorithm 1 for W walks — THE jump implementation.
+
+    d ~ TruncGeom(p_d, r) then d uniform hops, expressed as W-wide XLA
+    gathers (no dense table, no per-walk scan).  Consumed by both the scan
+    backend (via :func:`mhlj_transition_math`) and the sparse Pallas path;
+    the dense Pallas kernel mirrors this arithmetic per walk.  Returns
+    ``(v_jump, d)``.
+    """
+    d = trunc_geom_icdf(uniforms[:, U_DIST], p_d, r)
+
+    def hop(i, v_cur):
+        deg = degrees[v_cur]
+        hop_idx = jnp.minimum(
+            (uniforms[:, U_HOP0 + i] * deg.astype(jnp.float32)).astype(jnp.int32),
+            deg - 1,
+        )
+        v_new = neighbors[v_cur, hop_idx]
+        return jnp.where(i < d, v_new, v_cur)
+
+    v_jump = jax.lax.fori_loop(0, r, hop, nodes)
+    return v_jump, d
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -169,6 +209,7 @@ class WalkEngine:
     r: int = 3
     row_probs: Optional[jnp.ndarray] = None  # (n, max_deg) precomputed P_IS
     backend: str = "auto"  # "auto" | "scan" | "pallas"
+    layout: str = "sparse"  # "sparse" | "dense" — pallas-backend row handling
     block_w: int = 256
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
 
@@ -181,14 +222,18 @@ class WalkEngine:
         row_probs: Optional[jnp.ndarray] = None,
         lipschitz: Optional[jnp.ndarray] = None,
         backend: str = "auto",
+        layout: str = "sparse",
         block_w: int = 256,
         interpret: Optional[bool] = None,
     ) -> "WalkEngine":
-        """Engine from a ``core.graphs.Graph`` + ``MHLJParams``.
+        """Engine from a ``core.graphs.Graph`` or ``CSRGraph`` + ``MHLJParams``.
 
-        Row source precedence: explicit ``row_probs`` table, else a table
-        precomputed from a *static* ``lipschitz`` vector, else live rows from
-        the ``lipschitz=`` argument of :meth:`step` / :meth:`run`.
+        Both graph classes expose the same padded ``neighbors``/``degrees``
+        tensors, so large CSR graphs plug in with no dense adjacency ever
+        materialized.  Row source precedence: explicit ``row_probs`` table,
+        else a table precomputed from a *static* ``lipschitz`` vector, else
+        live rows from the ``lipschitz=`` argument of :meth:`step` /
+        :meth:`run`.
         """
         neighbors = jnp.asarray(graph.neighbors)
         degrees = jnp.asarray(graph.degrees)
@@ -204,9 +249,16 @@ class WalkEngine:
             r=params.r,
             row_probs=None if row_probs is None else jnp.asarray(row_probs),
             backend=backend,
+            layout=layout,
             block_w=block_w,
             interpret=interpret,
         )
+
+    def __post_init__(self):
+        if self.backend not in ("auto", "scan", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.layout not in ("sparse", "dense"):
+            raise ValueError(f"unknown layout {self.layout!r}")
 
     # -- backend resolution -------------------------------------------------
 
@@ -225,7 +277,12 @@ class WalkEngine:
     # -- P_IS row plumbing --------------------------------------------------
 
     def rows_table(self, lipschitz: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        """Full (n, max_deg) P_IS table (precomputed or live Eq.-7)."""
+        """Full (n, max_deg) P_IS table (precomputed or live Eq.-7).
+
+        Only the dense layout consumes this; the sparse layout touches
+        :meth:`rows_for` exclusively, so an engine with live rows never
+        builds the whole table.
+        """
         if self.row_probs is not None:
             return self.row_probs
         if lipschitz is None:
@@ -282,7 +339,7 @@ class WalkEngine:
         flag = (u[:, U_JUMP] < p_j_t).astype(jnp.float32)
         u = u.at[:, U_JUMP].set(flag)
 
-        if self.resolved_backend == "pallas":
+        if self.resolved_backend == "pallas" and self.layout == "dense":
             # local import: kernels package imports back into this module
             from repro.kernels.walk_transition.kernel import walk_transition
 
@@ -297,6 +354,24 @@ class WalkEngine:
                 block_w=self.block_w,
                 interpret=self.resolved_interpret,
             )
+        elif self.resolved_backend == "pallas":
+            # sparse layout: gather only the W active rows/neighbor tiles —
+            # O(W·max_deg) working set, never the (n, max_deg) table
+            from repro.kernels.walk_transition.kernel import (
+                walk_transition_sparse,
+            )
+
+            v_mh = walk_transition_sparse(
+                self.rows_for(nodes, lipschitz),
+                self.neighbors[nodes],
+                u[:, U_MH],
+                block_w=self.block_w,
+                interpret=self.resolved_interpret,
+            )
+            v_jump, d = levy_jump_batched(
+                nodes, u, self.neighbors, self.degrees, self.p_d, self.r
+            )
+            nxt, hops = combine_mh_jump(v_mh, v_jump, d, u)
         else:
             nxt, hops = mhlj_transition_math(
                 nodes,

@@ -1,26 +1,40 @@
 """Graph substrate for random-walk decentralized learning.
 
 The paper studies sparse communication graphs (ring, 2-D grid, Watts-Strogatz,
-Erdos-Renyi).  Every node has a self-loop (paper §II.A).  We keep two
-representations:
+Erdos-Renyi); the entrapment literature adds hub/bottleneck topologies
+(Barabasi-Albert, stochastic block models, dumbbell, lollipop).  Every node
+has a self-loop (paper §II.A).  We keep three representations:
 
 * a dense adjacency matrix (numpy, ``float64``) used to *construct* transition
-  matrices and compute spectral quantities offline, and
-* a padded neighbor-list tensor (``jnp.int32`` of shape ``(n, max_deg)`` plus a
+  matrices and compute spectral quantities offline — only materialized for
+  :class:`Graph`, i.e. analysis-scale topologies;
+* a CSR pair ``(indptr, indices)`` — the O(E) ground truth of
+  :class:`CSRGraph`, the large-graph representation (no N×N array ever
+  exists on this path); and
+* a padded neighbor-list tensor (``int32`` of shape ``(n, max_deg)`` plus a
   degree vector) used *inside* jitted walk steps and the Pallas transition
-  kernel, where ragged structures are not representable.
+  kernels, where ragged structures are not representable.  Both graph
+  classes carry it, with identical ordering (ascending node id per row,
+  pads repeating the row's own id), so a walk sampled on ``g`` and on
+  ``g.to_csr()`` is bitwise identical.
 
-Construction is deterministic given a seed.
+Construction is deterministic given a seed.  Builders that admit an O(E)
+edge-list construction (``ring``, ``grid2d`` and the trap-prone families)
+take ``layout="dense" | "csr"``; the dense layout routes through
+``from_adjacency`` exactly as before, the csr layout never touches an N×N
+array.  Every construction path ends in a ``validate()`` call, so
+disconnected or asymmetric graphs fail loudly at build time.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 __all__ = [
     "Graph",
+    "CSRGraph",
     "ring",
     "grid2d",
     "watts_strogatz",
@@ -28,7 +42,12 @@ __all__ = [
     "star",
     "complete",
     "expander",
+    "barabasi_albert",
+    "sbm",
+    "dumbbell",
+    "lollipop",
     "from_adjacency",
+    "from_edges",
 ]
 
 
@@ -39,9 +58,10 @@ class Graph:
     Attributes:
       adj: (n, n) float64 {0,1} adjacency, symmetric, unit diagonal.
       neighbors: (n, max_deg) int32 padded neighbor lists.  Row v holds the
-        neighbor ids of v (including v itself, for the self-loop) followed by
-        padding that repeats v (so sampling a pad index is a harmless self-hop
-        and probability masks make pads unreachable anyway).
+        neighbor ids of v (including v itself, for the self-loop) in
+        ascending order followed by padding that repeats v (so sampling a
+        pad index is a harmless self-hop and probability masks make pads
+        unreachable anyway).
       degrees: (n,) int32 true degrees (including the self-loop).
       name: human-readable description.
     """
@@ -59,6 +79,11 @@ class Graph:
     def max_degree(self) -> int:
         return int(self.neighbors.shape[1])
 
+    @property
+    def num_edges(self) -> int:
+        """Directed edge count incl. self-loops (nnz of the adjacency)."""
+        return int(self.degrees.astype(np.int64).sum())
+
     def validate(self) -> None:
         a = self.adj
         if a.shape[0] != a.shape[1]:
@@ -75,6 +100,116 @@ class Graph:
         if not np.array_equal(deg, self.degrees.astype(np.int64)):
             raise ValueError("degree vector inconsistent with adjacency")
 
+    def to_csr(self) -> "CSRGraph":
+        """O(E) CSR view of this graph (shared padded-neighbor ordering)."""
+        rows, cols = np.nonzero(self.adj)  # row-major => sorted per row
+        counts = np.bincount(rows, minlength=self.n).astype(np.int64)
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        g = CSRGraph(
+            indptr=indptr,
+            indices=cols.astype(np.int32),
+            degrees=self.degrees.copy(),
+            neighbors=self.neighbors.copy(),
+            name=self.name,
+        )
+        g.validate()
+        return g
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """An undirected graph with self-loops in O(E) sparse form.
+
+    The large-graph counterpart of :class:`Graph`: no dense N×N array is
+    ever materialized.  Carries the same padded neighbor tensor (identical
+    ordering), so :class:`repro.core.engine.WalkEngine` consumes either
+    class interchangeably.
+
+    Attributes:
+      indptr: (n+1,) int64 CSR row pointers.
+      indices: (nnz,) int32 neighbor ids, ascending within each row,
+        including the self-loop.
+      degrees: (n,) int32 true degrees (== diff(indptr)).
+      neighbors: (n, max_deg) int32 padded neighbor lists (pads = row id).
+      name: human-readable description.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    degrees: np.ndarray
+    neighbors: np.ndarray
+    name: str = "csr-graph"
+
+    @property
+    def n(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.neighbors.shape[1])
+
+    @property
+    def num_edges(self) -> int:
+        """Directed edge count incl. self-loops (nnz of the CSR)."""
+        return int(self.indices.shape[0])
+
+    def row(self, v: int) -> np.ndarray:
+        """True (unpadded) neighbor ids of node v."""
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def validate(self) -> None:
+        n = self.n
+        deg = np.diff(self.indptr)
+        if not np.array_equal(deg, self.degrees.astype(np.int64)):
+            raise ValueError("degree vector inconsistent with indptr")
+        if int(deg.min(initial=1)) < 1:
+            raise ValueError("every node needs a self-loop (paper §II.A)")
+        if self.indices.shape[0] != int(self.indptr[-1]):
+            raise ValueError("indices length inconsistent with indptr")
+        src = np.repeat(np.arange(n, dtype=np.int64), deg)
+        dst = self.indices.astype(np.int64)
+        if np.any(dst < 0) or np.any(dst >= n):
+            raise ValueError("neighbor ids out of range")
+        codes = src * n + dst
+        if np.any(np.diff(codes) <= 0):
+            raise ValueError("CSR rows must be sorted and duplicate-free")
+        if not np.array_equal(np.sort(dst * n + src), codes):
+            raise ValueError("edge set must be symmetric (undirected graph)")
+        self_codes = np.arange(n, dtype=np.int64) * (n + 1)
+        pos = np.searchsorted(codes, self_codes)
+        if np.any(pos >= codes.shape[0]) or np.any(codes[pos] != self_codes):
+            raise ValueError("every node needs a self-loop (paper §II.A)")
+        if not _csr_is_connected(self.indptr, self.indices):
+            raise ValueError("graph must be connected")
+        expect = _pad_neighbor_lists(self.indptr, self.indices, self.degrees)
+        if not np.array_equal(expect, self.neighbors):
+            raise ValueError("padded neighbor tensor inconsistent with CSR")
+
+    def to_csr(self) -> "CSRGraph":
+        """Identity — lets callers normalize either graph class to CSR."""
+        return self
+
+    def to_dense(self) -> Graph:
+        """Materialize the dense :class:`Graph` (analysis-scale only)."""
+        n = self.n
+        adj = np.zeros((n, n), dtype=np.float64)
+        src = np.repeat(np.arange(n, dtype=np.int64), np.diff(self.indptr))
+        adj[src, self.indices.astype(np.int64)] = 1.0
+        g = Graph(
+            adj=adj,
+            neighbors=self.neighbors.copy(),
+            degrees=self.degrees.copy(),
+            name=self.name,
+        )
+        g.validate()
+        return g
+
+
+# ---------------------------------------------------------------------------
+# Construction machinery (dense + O(E) edge-list paths)
+# ---------------------------------------------------------------------------
+
 
 def _is_connected(adj: np.ndarray) -> bool:
     n = adj.shape[0]
@@ -88,6 +223,67 @@ def _is_connected(adj: np.ndarray) -> bool:
                 seen[u] = True
                 stack.append(int(u))
     return bool(seen.all())
+
+
+def _concat_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Vectorized concatenation of ``[arange(s, s+c) for s, c in zip(...)]``."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    out = np.ones(total, dtype=np.int64)
+    cum = np.cumsum(counts)
+    out[0] = starts[0]
+    out[cum[:-1]] = starts[1:] - (starts[:-1] + counts[:-1] - 1)
+    return np.cumsum(out)
+
+
+def _csr_is_connected(indptr: np.ndarray, indices: np.ndarray) -> bool:
+    """BFS over the CSR structure — O(E) total, no dense matrix."""
+    n = indptr.shape[0] - 1
+    seen = np.zeros(n, dtype=bool)
+    seen[0] = True
+    frontier = np.array([0], dtype=np.int64)
+    while frontier.size:
+        starts = indptr[frontier]
+        counts = indptr[frontier + 1] - starts
+        nbrs = indices[_concat_ranges(starts, counts)]
+        new = np.unique(nbrs[~seen[nbrs]])
+        seen[new] = True
+        frontier = new
+    return bool(seen.all())
+
+
+def _edges_to_csr(n: int, src: np.ndarray, dst: np.ndarray):
+    """Symmetrize + add self-loops + dedupe an edge list into sorted CSR.
+
+    Endpoints are assumed range-checked by ``from_edges``, the only caller.
+    """
+    keep = src != dst  # self-loops are added uniformly below
+    src, dst = src[keep], dst[keep]
+    loops = np.arange(n, dtype=np.int64)
+    a = np.concatenate([src, dst, loops])
+    b = np.concatenate([dst, src, loops])
+    codes = np.unique(a * n + b)  # sorted row-major == sorted CSR
+    rows = codes // n
+    indices = (codes % n).astype(np.int32)
+    degrees = np.bincount(rows, minlength=n).astype(np.int32)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(degrees, out=indptr[1:])
+    return indptr, indices, degrees
+
+
+def _pad_neighbor_lists(
+    indptr: np.ndarray, indices: np.ndarray, degrees: np.ndarray
+) -> np.ndarray:
+    """(n, max_deg) int32 padded rows from CSR; pads repeat the row id."""
+    n = indptr.shape[0] - 1
+    max_deg = int(degrees.max())
+    out = np.repeat(
+        np.arange(n, dtype=np.int32)[:, None], max_deg, axis=1
+    )
+    mask = np.arange(max_deg)[None, :] < degrees[:, None]
+    out[mask] = indices  # boolean assignment is row-major == CSR order
+    return out
 
 
 def from_adjacency(adj: np.ndarray, name: str = "graph") -> Graph:
@@ -108,33 +304,81 @@ def from_adjacency(adj: np.ndarray, name: str = "graph") -> Graph:
     return g
 
 
-def ring(n: int) -> Graph:
+def from_edges(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    *,
+    name: str = "graph",
+    layout: str = "csr",
+):
+    """Build a graph from an undirected edge list (self-loops added).
+
+    ``layout="csr"`` is the O(E) path — no N×N array is ever created;
+    ``layout="dense"`` routes through :func:`from_adjacency` for the
+    analysis stack.  Both validate on construction (connectivity included),
+    so an invalid edge set fails loudly here rather than corrupting a walk.
+    """
+    src = np.asarray(src, dtype=np.int64).ravel()
+    dst = np.asarray(dst, dtype=np.int64).ravel()
+    if src.shape != dst.shape:
+        raise ValueError("src/dst edge arrays must have the same length")
+    if src.size and (
+        min(src.min(), dst.min()) < 0 or max(src.max(), dst.max()) >= n
+    ):
+        raise ValueError("edge endpoints out of range")
+    if layout == "dense":
+        adj = np.zeros((n, n), dtype=np.float64)
+        adj[src, dst] = 1.0
+        return from_adjacency(adj, name=name)
+    if layout != "csr":
+        raise ValueError(f"layout must be 'dense' or 'csr', got {layout!r}")
+    indptr, indices, degrees = _edges_to_csr(n, src, dst)
+    return _csr_graph_from_arrays(indptr, indices, degrees, name, "csr")
+
+
+def _csr_graph_from_arrays(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    degrees: np.ndarray,
+    name: str,
+    layout: str,
+):
+    """Validated graph from already-built CSR arrays (no recomputation)."""
+    if layout not in ("dense", "csr"):
+        raise ValueError(f"layout must be 'dense' or 'csr', got {layout!r}")
+    g = CSRGraph(
+        indptr=indptr,
+        indices=indices,
+        degrees=degrees,
+        neighbors=_pad_neighbor_lists(indptr, indices, degrees),
+        name=name,
+    )
+    g.validate()
+    return g if layout == "csr" else g.to_dense()
+
+
+# ---------------------------------------------------------------------------
+# Paper topologies
+# ---------------------------------------------------------------------------
+
+
+def ring(n: int, layout: str = "dense"):
     """Ring of n nodes — the paper's canonical entrapment topology (Fig 2a)."""
     if n < 3:
         raise ValueError("ring needs n >= 3")
-    adj = np.zeros((n, n))
-    idx = np.arange(n)
-    adj[idx, (idx + 1) % n] = 1
-    adj[(idx + 1) % n, idx] = 1
-    return from_adjacency(adj, name=f"ring({n})")
+    idx = np.arange(n, dtype=np.int64)
+    return from_edges(n, idx, (idx + 1) % n, name=f"ring({n})", layout=layout)
 
 
-def grid2d(rows: int, cols: Optional[int] = None) -> Graph:
+def grid2d(rows: int, cols: Optional[int] = None, layout: str = "dense"):
     """2-D grid (paper Fig 5a uses ~1000 nodes)."""
     cols = cols or rows
     n = rows * cols
-    adj = np.zeros((n, n))
-
-    def nid(r, c):
-        return r * cols + c
-
-    for r in range(rows):
-        for c in range(cols):
-            if r + 1 < rows:
-                adj[nid(r, c), nid(r + 1, c)] = 1
-            if c + 1 < cols:
-                adj[nid(r, c), nid(r, c + 1)] = 1
-    return from_adjacency(adj, name=f"grid2d({rows}x{cols})")
+    ids = np.arange(n, dtype=np.int64).reshape(rows, cols)
+    src = np.concatenate([ids[:, :-1].ravel(), ids[:-1, :].ravel()])
+    dst = np.concatenate([ids[:, 1:].ravel(), ids[1:, :].ravel()])
+    return from_edges(n, src, dst, name=f"grid2d({rows}x{cols})", layout=layout)
 
 
 def watts_strogatz(n: int, k: int, p: float, seed: int = 0) -> Graph:
@@ -142,6 +386,9 @@ def watts_strogatz(n: int, k: int, p: float, seed: int = 0) -> Graph:
 
     Standard construction: ring lattice with k nearest neighbors (k even),
     each "forward" edge rewired with probability p (no self/multi edges).
+    Connectivity is checked *before* handing the adjacency to the validating
+    constructor, so an unlucky rewiring retries with the next seed instead
+    of raising out of ``from_adjacency``.
     """
     if k % 2 != 0 or k >= n:
         raise ValueError("watts_strogatz requires even k < n")
@@ -163,10 +410,9 @@ def watts_strogatz(n: int, k: int, p: float, seed: int = 0) -> Graph:
                 w = int(rng.choice(candidates))
                 adj[v, u] = adj[u, v] = 0
                 adj[v, w] = adj[w, v] = 1
-    g = from_adjacency(adj, name=f"ws({n},{k},{p})")
-    if not _is_connected(g.adj):  # extremely unlikely for paper params; retry
+    if not _is_connected(np.maximum(adj, np.eye(n))):  # unlikely; retry
         return watts_strogatz(n, k, p, seed=seed + 1)
-    return g
+    return from_adjacency(adj, name=f"ws({n},{k},{p})")  # validates
 
 
 def erdos_renyi(n: int, p: float, seed: int = 0) -> Graph:
@@ -177,7 +423,7 @@ def erdos_renyi(n: int, p: float, seed: int = 0) -> Graph:
         adj = np.triu(upper, k=1).astype(np.float64)
         adj = adj + adj.T
         if _is_connected(np.maximum(adj, np.eye(n))):
-            return from_adjacency(adj, name=f"er({n},{p})")
+            return from_adjacency(adj, name=f"er({n},{p})")  # validates
     raise RuntimeError(f"could not sample a connected ER({n},{p}) in 64 tries")
 
 
@@ -213,4 +459,175 @@ def expander(n: int, d: int = 6, seed: int = 0) -> Graph:
     idx = np.arange(n)
     adj[idx, (idx + 1) % n] = 1
     adj[(idx + 1) % n, idx] = 1
-    return from_adjacency(adj, name=f"expander({n},{d})")
+    return from_adjacency(adj, name=f"expander({n},{d})")  # validates
+
+
+# ---------------------------------------------------------------------------
+# Trap-prone families from the entrapment literature (O(E) constructions)
+# ---------------------------------------------------------------------------
+
+
+def barabasi_albert(n: int, m: int, seed: int = 0, layout: str = "dense"):
+    """Barabasi-Albert preferential attachment: hubs = degree-bias traps.
+
+    Each new node attaches to ``m`` distinct existing nodes chosen with
+    probability proportional to current degree (repeated-node-list trick).
+    Connected by construction.  O(n m) time and memory.
+    """
+    if not (1 <= m < n):
+        raise ValueError("barabasi_albert requires 1 <= m < n")
+    rng = np.random.default_rng(seed)
+    src: list = []
+    dst: list = []
+    repeated: list = []
+    targets = list(range(m))
+    for v in range(m, n):
+        src.extend([v] * len(targets))
+        dst.extend(targets)
+        repeated.extend(targets)
+        repeated.extend([v] * m)
+        chosen: set = set()
+        while len(chosen) < m:
+            picks = rng.integers(0, len(repeated), size=2 * m)
+            for p in picks:
+                chosen.add(repeated[p])
+                if len(chosen) == m:
+                    break
+        targets = sorted(chosen)
+    return from_edges(
+        n,
+        np.asarray(src, np.int64),
+        np.asarray(dst, np.int64),
+        name=f"ba({n},{m})",
+        layout=layout,
+    )
+
+
+def _tri_decode(codes: np.ndarray, s: int):
+    """Decode c in [0, s(s-1)/2) to the c-th pair (i, j), i < j, row-major."""
+    c = codes.astype(np.float64)
+    i = np.floor((2 * s - 1 - np.sqrt((2 * s - 1) ** 2 - 8 * c)) / 2).astype(
+        np.int64
+    )
+
+    def rowstart(k):
+        return k * s - k * (k + 1) // 2
+
+    i[codes < rowstart(i)] -= 1  # fix sqrt rounding either way
+    i[codes >= rowstart(i + 1)] += 1
+    j = codes - rowstart(i) + i + 1
+    return i, j
+
+
+def _sample_distinct_codes(rng, pairs: int, count: int) -> np.ndarray:
+    """``count`` distinct uniform draws from [0, pairs) without ever
+    allocating O(pairs) (the permutation path of ``choice(replace=False)``):
+    draw with replacement and top up the deficit until all are distinct."""
+    codes = np.unique(rng.integers(0, pairs, size=count))
+    while codes.size < count:
+        extra = rng.integers(0, pairs, size=count - codes.size)
+        codes = np.unique(np.concatenate([codes, extra]))
+    return codes
+
+
+def sbm(
+    block_sizes: Sequence[int],
+    p_in: float,
+    p_out: float,
+    seed: int = 0,
+    layout: str = "dense",
+):
+    """Stochastic block model with tunable inter-cluster bottlenecks.
+
+    Dense intra-block connectivity (``p_in``) with a thin ``p_out`` cut
+    between blocks — the canonical conductance-bottleneck topology where
+    a random walk gets trapped inside a cluster.  Edges are sampled
+    sparsely per block pair — a Binomial(pairs, p) count, then that many
+    *distinct* uniform pair codes — so each pair is present i.i.d. with
+    the exact requested probability while construction stays O(E), never
+    O(N^2); resamples until connected.
+    """
+    sizes = np.asarray(block_sizes, dtype=np.int64)
+    if sizes.ndim != 1 or sizes.size < 1 or np.any(sizes < 1):
+        raise ValueError("block_sizes must be a non-empty list of positive ints")
+    for q, tag in ((p_in, "p_in"), (p_out, "p_out")):
+        if not (0.0 <= q <= 1.0):
+            raise ValueError(f"{tag} must be in [0,1], got {q}")
+    n = int(sizes.sum())
+    offs = np.zeros(sizes.size, dtype=np.int64)
+    np.cumsum(sizes[:-1], out=offs[1:])
+    name = f"sbm({list(map(int, sizes))},{p_in},{p_out})"
+    for attempt in range(64):
+        rng = np.random.default_rng(seed + 9973 * attempt)
+        src_parts, dst_parts = [], []
+        for a in range(sizes.size):
+            s_a = int(sizes[a])
+            pairs = s_a * (s_a - 1) // 2
+            if pairs and p_in > 0:
+                count = rng.binomial(pairs, p_in)
+                if count:
+                    codes = _sample_distinct_codes(rng, pairs, count)
+                    i, j = _tri_decode(codes, s_a)
+                    src_parts.append(i + offs[a])
+                    dst_parts.append(j + offs[a])
+            for b in range(a + 1, sizes.size):
+                s_b = int(sizes[b])
+                count = rng.binomial(s_a * s_b, p_out)
+                if count:
+                    codes = _sample_distinct_codes(rng, s_a * s_b, count)
+                    src_parts.append(codes // s_b + offs[a])
+                    dst_parts.append(codes % s_b + offs[b])
+        src = np.concatenate(src_parts) if src_parts else np.empty(0, np.int64)
+        dst = np.concatenate(dst_parts) if dst_parts else np.empty(0, np.int64)
+        # pre-check connectivity on the O(E) CSR structure so a disconnected
+        # draw resamples instead of raising out of the validating
+        # constructor; the arrays are then reused, not recomputed
+        indptr, indices, degrees = _edges_to_csr(n, src, dst)
+        if _csr_is_connected(indptr, indices):
+            return _csr_graph_from_arrays(indptr, indices, degrees, name, layout)
+    raise RuntimeError(f"could not sample a connected {name} in 64 tries")
+
+
+def dumbbell(clique_n: int, path_len: int = 1, layout: str = "dense"):
+    """Two ``clique_n``-cliques joined by a ``path_len``-node path.
+
+    The textbook worst case for random-walk escape times: the bridge is a
+    single-edge bottleneck, so a walk entering one bell is trapped for
+    Omega(clique_n^2) expected steps.  ``path_len=0`` joins the cliques by
+    a direct edge.
+    """
+    if clique_n < 3:
+        raise ValueError("dumbbell needs clique_n >= 3")
+    if path_len < 0:
+        raise ValueError("dumbbell needs path_len >= 0")
+    n = 2 * clique_n + path_len
+    iu, ju = np.triu_indices(clique_n, k=1)
+    off_b = clique_n + path_len
+    chain = np.concatenate(
+        [[clique_n - 1], np.arange(clique_n, off_b), [off_b]]
+    )
+    src = np.concatenate([iu, iu + off_b, chain[:-1]])
+    dst = np.concatenate([ju, ju + off_b, chain[1:]])
+    return from_edges(
+        n, src, dst, name=f"dumbbell({clique_n},{path_len})", layout=layout
+    )
+
+
+def lollipop(clique_n: int, path_len: int, layout: str = "dense"):
+    """A ``clique_n``-clique with a ``path_len``-node path hanging off it.
+
+    Maximizes hitting time clique -> path tip (the classical Theta(n^3)
+    lollipop bound) — the sharpest single-walk entrapment stressor.
+    """
+    if clique_n < 3:
+        raise ValueError("lollipop needs clique_n >= 3")
+    if path_len < 1:
+        raise ValueError("lollipop needs path_len >= 1")
+    n = clique_n + path_len
+    iu, ju = np.triu_indices(clique_n, k=1)
+    chain = np.concatenate([[clique_n - 1], np.arange(clique_n, n)])
+    src = np.concatenate([iu, chain[:-1]])
+    dst = np.concatenate([ju, chain[1:]])
+    return from_edges(
+        n, src, dst, name=f"lollipop({clique_n},{path_len})", layout=layout
+    )

@@ -30,6 +30,9 @@ __all__ = [
     "mhlj",
     "MHLJParams",
     "row_probs_padded",
+    "simple_rw_rows",
+    "mh_uniform_rows",
+    "mh_importance_rows",
     "is_row_stochastic",
     "supported_on_graph",
 ]
@@ -154,6 +157,70 @@ def supported_on_graph(p: np.ndarray, graph: Graph, atol: float = 1e-12) -> bool
     """
     off_support = p * (1.0 - np.minimum(graph.adj, 1.0))
     return bool(np.abs(off_support).max() <= atol)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (padded-row) counterparts — O(E), no dense N×N matrix
+# ---------------------------------------------------------------------------
+#
+# These compute the SAME 1-hop kernels as the dense builders above, but
+# directly on the padded neighbor tensor of a ``Graph`` or ``CSRGraph``
+# (everything is local: deg(v), deg(u), L_v, L_u).  Convention: each true
+# neighbor slot (including the single self slot) carries its probability,
+# leftover MH mass lands on the self slot, pads carry exactly 0 — so CDF
+# inversion and ``walk_markov``'s categorical both realize the exact law.
+
+
+def _padded_masks(graph):
+    nbrs = np.asarray(graph.neighbors)
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    n, max_deg = nbrs.shape
+    is_pad = np.arange(max_deg)[None, :] >= deg[:, None]
+    is_self = (nbrs == np.arange(n, dtype=nbrs.dtype)[:, None]) & ~is_pad
+    return nbrs, deg, is_pad, is_self
+
+
+def _mh_rows_local(graph, target_weight: np.ndarray) -> np.ndarray:
+    """Padded MH rows for Q = simple RW and pi ∝ ``target_weight`` (Eq. 6).
+
+    P(v,u) = (1/deg_v) min{1, deg_v w_u / (deg_u w_v)} for true neighbors
+    u != v; leftover mass goes to the self slot.
+    """
+    nbrs, deg, is_pad, is_self = _padded_masks(graph)
+    w = np.asarray(target_weight, dtype=np.float64)
+    deg_v = deg[:, None].astype(np.float64)
+    deg_u = deg[nbrs].astype(np.float64)
+    move = np.minimum(1.0 / deg_v, w[nbrs] / (deg_u * w[:, None]))
+    move = np.where(is_pad | is_self, 0.0, move)
+    p_self = 1.0 - move.sum(axis=1, keepdims=True)
+    out = np.where(is_self, p_self, move)
+    out = np.maximum(out, 0.0)
+    return (out / out.sum(axis=1, keepdims=True)).astype(np.float32)
+
+
+def simple_rw_rows(graph) -> np.ndarray:
+    """Padded rows of the simple RW: 1/deg(v) on every true neighbor slot."""
+    _, deg, is_pad, _ = _padded_masks(graph)
+    out = np.where(is_pad, 0.0, 1.0 / deg[:, None].astype(np.float64))
+    return out.astype(np.float32)
+
+
+def mh_uniform_rows(graph) -> np.ndarray:
+    """Padded MH rows targeting uniform pi: P(v,u) = min{1/deg_v, 1/deg_u}."""
+    return _mh_rows_local(graph, np.ones(graph.n))
+
+
+def mh_importance_rows(graph, lipschitz: np.ndarray) -> np.ndarray:
+    """Padded P_IS rows of Eq. (7) from local info only (numpy twin of
+    ``engine.p_is_rows``, with leftover mass on the self slot)."""
+    lipschitz = np.asarray(lipschitz, dtype=np.float64)
+    if lipschitz.shape != (graph.n,):
+        raise ValueError(
+            f"lipschitz must have shape ({graph.n},), got {lipschitz.shape}"
+        )
+    if np.any(lipschitz <= 0):
+        raise ValueError("Lipschitz constants must be strictly positive")
+    return _mh_rows_local(graph, lipschitz)
 
 
 def row_probs_padded(p: np.ndarray, graph: Graph) -> np.ndarray:

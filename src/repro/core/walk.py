@@ -31,7 +31,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import WalkEngine
-from repro.core.graphs import Graph
 
 __all__ = [
     "graph_tensors",
@@ -42,8 +41,13 @@ __all__ = [
 ]
 
 
-def graph_tensors(graph: Graph) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Device tensors (neighbors int32 (n,max_deg), degrees int32 (n,))."""
+def graph_tensors(graph) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device tensors (neighbors int32 (n,max_deg), degrees int32 (n,)).
+
+    Accepts a dense :class:`~repro.core.graphs.Graph` or an O(E)
+    :class:`~repro.core.graphs.CSRGraph` — both carry the same padded
+    neighbor tensors, so every simulator here runs on either.
+    """
     return jnp.asarray(graph.neighbors), jnp.asarray(graph.degrees)
 
 

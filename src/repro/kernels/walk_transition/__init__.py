@@ -1,5 +1,21 @@
-from repro.kernels.walk_transition.kernel import walk_transition
-from repro.kernels.walk_transition.ops import mhlj_step_batched, mhlj_step_oracle
+from repro.kernels.walk_transition.kernel import (
+    walk_transition,
+    walk_transition_sparse,
+)
+from repro.kernels.walk_transition.ops import (
+    mhlj_step_batched,
+    mhlj_step_dense,
+    mhlj_step_oracle,
+    mhlj_step_sparse,
+)
 from repro.kernels.walk_transition.ref import walk_transition_ref
 
-__all__ = ["walk_transition", "mhlj_step_batched", "mhlj_step_oracle", "walk_transition_ref"]
+__all__ = [
+    "walk_transition",
+    "walk_transition_sparse",
+    "mhlj_step_batched",
+    "mhlj_step_dense",
+    "mhlj_step_oracle",
+    "mhlj_step_sparse",
+    "walk_transition_ref",
+]

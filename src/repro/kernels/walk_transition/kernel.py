@@ -1,8 +1,20 @@
-"""Batched MHLJ transition Pallas TPU kernel — the paper's orchestration hot
+"""Batched MHLJ transition Pallas TPU kernels — the paper's orchestration hot
 spot at scale (W parallel walks on a large silo graph, sampled every step).
-This is the ``"pallas"`` backend of :class:`repro.core.engine.WalkEngine`;
-its per-walk body mirrors ``engine.mhlj_transition_math`` statement for
+These back the ``"pallas"`` backend of :class:`repro.core.engine.WalkEngine`;
+the per-walk bodies mirror ``engine.mhlj_transition_math`` statement for
 statement, and the parity tests assert bitwise-equal outputs.
+
+Two kernels:
+
+* :func:`walk_transition` — the ``layout="dense"`` path: the full
+  ``(n, max_deg)`` P_IS/neighbor tables live in VMEM and every per-walk row
+  is a dynamic-slice load.  Exact but caps n at a few thousand (VMEM).
+* :func:`walk_transition_sparse` — the ``layout="sparse"`` MH-move kernel:
+  the engine gathers only the W active rows into ``[block_w, max_deg]``
+  tiles (an O(W·max_deg) working set, independent of n), the kernel runs a
+  fully vectorized CDF inversion per tile, and the Lévy hop chain is left
+  to the engine's O(W) XLA gathers.  This is what lets 100k-node graphs run
+  with O(E) memory — no full table ever reaches kernel memory.
 
 One grid step processes ``block_w`` walks.  Per walk:
   * MH-IS move: CDF inversion over the walk's padded P_IS neighbor row
@@ -46,7 +58,7 @@ from jax.experimental import pallas as pl
 from repro.core.engine import U_DIST, U_HOP0, U_JUMP, U_MH, num_uniforms
 from repro.core.levy import trunc_geom_icdf
 
-__all__ = ["walk_transition"]
+__all__ = ["walk_transition", "walk_transition_sparse"]
 
 
 def _kernel(
@@ -137,3 +149,64 @@ def walk_transition(
         interpret=interpret,
     )(nodes, row_probs, neighbors, degrees[:, None], uniforms)
     return next_nodes[:w], hops[:w]
+
+
+# ---------------------------------------------------------------------------
+# Sparse-layout MH-move kernel (pre-gathered neighbor tiles)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_kernel(probs_ref, neigh_ref, u_ref, out_ref, *, block_w, max_deg):
+    """CDF inversion over a [block_w, max_deg] tile, fully vectorized.
+
+    Same arithmetic as the per-walk body of ``mhlj_transition_math``
+    (cumsum, ``cdf < u * cdf[-1]`` count, clamp) so outputs stay bitwise
+    equal to the scan backend; the neighbor pick is a one-hot reduction
+    instead of a gather to stay TPU-legal.
+    """
+    prow = probs_ref[...]  # (block_w, max_deg) f32
+    cdf = jnp.cumsum(prow, axis=1)
+    u = u_ref[...]  # (block_w, 1) f32
+    idx = jnp.sum((cdf < u * cdf[:, max_deg - 1][:, None]).astype(jnp.int32), axis=1)
+    idx = jnp.minimum(idx, max_deg - 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_w, max_deg), 1)
+    picked = jnp.where(cols == idx[:, None], neigh_ref[...], 0)
+    out_ref[...] = jnp.sum(picked, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def walk_transition_sparse(
+    rows: jnp.ndarray,  # (W, max_deg) float32 — P_IS rows of the W walks
+    neigh_rows: jnp.ndarray,  # (W, max_deg) int32 — their padded neighbor rows
+    u_mh: jnp.ndarray,  # (W,) float32 — the U_MH uniform per walk
+    *,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """MH-IS move for W walks from gathered [block_w, max_deg] tiles.
+
+    Returns ``v_mh`` (W,) int32.  ``max_deg`` need not be a multiple of any
+    block size — each tile spans the full (possibly odd) neighbor axis.
+    The Lévy branch is composed outside (``engine.levy_jump_batched``).
+    """
+    w, max_deg = rows.shape
+    bw = min(block_w, w)
+    w_pad = -(-w // bw) * bw
+    if w_pad != w:
+        # padded lanes: all-zero rows -> idx 0 -> neighbor 0, sliced off below
+        rows = jnp.pad(rows, ((0, w_pad - w), (0, 0)))
+        neigh_rows = jnp.pad(neigh_rows, ((0, w_pad - w), (0, 0)))
+        u_mh = jnp.pad(u_mh, (0, w_pad - w))
+    v_mh = pl.pallas_call(
+        functools.partial(_sparse_kernel, block_w=bw, max_deg=max_deg),
+        grid=(w_pad // bw,),
+        in_specs=[
+            pl.BlockSpec((bw, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((bw, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((bw, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w_pad,), jnp.int32),
+        interpret=interpret,
+    )(rows, neigh_rows, u_mh[:, None])
+    return v_mh[:w]

@@ -1,9 +1,12 @@
 """Jit'd wrappers for batched MHLJ transitions (multi-walk mode).
 
-Both entry points are thin views over :class:`repro.core.engine.WalkEngine`
-— ``mhlj_step_batched`` forces the Pallas backend (interpret mode off-TPU),
+All entry points are thin views over :class:`repro.core.engine.WalkEngine`
+— ``mhlj_step_batched`` forces the Pallas backend in its sparse tile layout
+(interpret mode off-TPU), ``mhlj_step_sparse`` is its explicit alias,
+``mhlj_step_dense`` forces the full-table dense kernel, and
 ``mhlj_step_oracle`` forces the pure-JAX scan backend.  Given the same key
-they consume identical uniforms and must agree bitwise (test_kernels.py).
+they all consume identical uniforms and must agree bitwise
+(test_kernels.py / test_sparse_engine.py).
 """
 from __future__ import annotations
 
@@ -15,7 +18,7 @@ import jax.numpy as jnp
 from repro.core.engine import WalkEngine
 
 
-@functools.partial(jax.jit, static_argnames=("p_j", "p_d", "r"))
+@functools.partial(jax.jit, static_argnames=("p_j", "p_d", "r", "layout"))
 def mhlj_step_batched(
     key: jax.Array,
     nodes: jnp.ndarray,
@@ -26,6 +29,7 @@ def mhlj_step_batched(
     p_j: float,
     p_d: float,
     r: int,
+    layout: str = "sparse",
 ) -> jnp.ndarray:
     engine = WalkEngine(
         neighbors=neighbors,
@@ -35,9 +39,27 @@ def mhlj_step_batched(
         r=r,
         row_probs=row_probs,
         backend="pallas",
+        layout=layout,
     )
     next_nodes, _ = engine.step(key, nodes)
     return next_nodes
+
+
+def mhlj_step_sparse(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):
+    """Sparse-tile Pallas path, explicitly (== the default of
+    ``mhlj_step_batched``)."""
+    return mhlj_step_batched(
+        key, nodes, row_probs, neighbors, degrees,
+        p_j=p_j, p_d=p_d, r=r, layout="sparse",
+    )
+
+
+def mhlj_step_dense(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):
+    """Full-table dense-layout Pallas kernel (parity testing only)."""
+    return mhlj_step_batched(
+        key, nodes, row_probs, neighbors, degrees,
+        p_j=p_j, p_d=p_d, r=r, layout="dense",
+    )
 
 
 def mhlj_step_oracle(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):

@@ -111,26 +111,47 @@ def _setup_method(
     p_j_schedule: Optional[np.ndarray],
     num_steps: int,
 ):
-    """Shared method dispatch: padded P rows, weights, p_J schedule, (p_d, r)."""
+    """Shared method dispatch: padded P rows, weights, p_J schedule, (p_d, r).
+
+    ``graph`` may be a dense :class:`~repro.core.graphs.Graph` (rows come
+    from the dense transition builders, exactly as the paper's analysis
+    stack computes them) or a :class:`~repro.core.graphs.CSRGraph` (rows
+    come from the O(E) local builders — same law, no N×N matrix), so the
+    trainer runs unchanged on 100k-node topologies.
+    """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
     lips = data.lipschitz
+    dense = getattr(graph, "adj", None) is not None
     if method == "uniform":
-        p = trans_mod.mh_uniform(graph)
         use_weights, use_jumps = False, False
+        rows = (
+            trans_mod.row_probs_padded(trans_mod.mh_uniform(graph), graph)
+            if dense
+            else trans_mod.mh_uniform_rows(graph)
+        )
     elif method == "simple":
-        p = trans_mod.simple_rw(graph)
         use_weights, use_jumps = False, False
-    elif method == "importance":
-        p = trans_mod.mh_importance(graph, lips)
-        use_weights, use_jumps = True, False
-    else:  # mhlj
-        mhlj_params = mhlj_params or MHLJParams()
-        mhlj_params.validate()
-        p = trans_mod.mh_importance(graph, lips)  # MH part; jumps sampled live
-        use_weights, use_jumps = True, True
+        rows = (
+            trans_mod.row_probs_padded(trans_mod.simple_rw(graph), graph)
+            if dense
+            else trans_mod.simple_rw_rows(graph)
+        )
+    else:  # importance / mhlj share the P_IS rows; jumps sampled live
+        use_weights = True
+        use_jumps = method == "mhlj"
+        if use_jumps:
+            mhlj_params = mhlj_params or MHLJParams()
+            mhlj_params.validate()
+        rows = (
+            trans_mod.row_probs_padded(
+                trans_mod.mh_importance(graph, lips), graph
+            )
+            if dense
+            else trans_mod.mh_importance_rows(graph, lips)
+        )
 
-    row_probs = jnp.asarray(trans_mod.row_probs_padded(p, graph))
+    row_probs = jnp.asarray(rows)
     weights = jnp.asarray(lips.mean() / lips, jnp.float32)
 
     if use_jumps:
@@ -162,7 +183,10 @@ def run_rw_sgd(
     v0: int = 0,
     seed: int = 0,
 ) -> RWSGDResult:
-    """Run one RW-SGD training; returns the Fig-3 style MSE trace."""
+    """Run one RW-SGD training; returns the Fig-3 style MSE trace.
+
+    ``graph`` may be a dense ``Graph`` or an O(E) ``CSRGraph``.
+    """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )

@@ -1,0 +1,38 @@
+"""Anti-rot gate for the benchmark harness.
+
+Runs ``python -m benchmarks.run --smoke`` as a subprocess: every benchmark
+module must satisfy the harness contract (NAME / PAPER_CLAIM / run) and the
+modules with a smoke tier (fig5_sparse_graphs, large_graph_walk) must
+actually execute at toy sizes.  A benchmark that stops importing, loses its
+contract, or crashes on its first step fails tier 1 here instead of rotting
+until someone runs the full suite.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_benchmarks_smoke_tier_passes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=540,
+    )
+    assert proc.returncode == 0, (
+        f"--smoke failed (rc={proc.returncode})\n"
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    out = proc.stdout
+    # the executed smoke tiers must have reported derived metrics
+    assert "large_graph_walk[smoke]" in out
+    assert "fig5_sparse_graphs[smoke]" in out
+    assert "FAILED" not in out

@@ -73,6 +73,7 @@ def test_backends_bitwise_equal_including_padded_grid(setup):
         np.testing.assert_array_equal(np.asarray(h_s), np.asarray(h_p))
 
 
+@pytest.mark.slow
 def test_backends_match_dense_chain_chi_square(setup):
     """Empirical one-step update-node law of both backends vs the dense
     MHLJ matrix chain, chi-square at ~4-sigma."""
@@ -92,6 +93,7 @@ def test_backends_match_dense_chain_chi_square(setup):
         assert stat < crit, f"{backend}: chi2={stat:.1f} >= {crit:.1f} (dof={dof})"
 
 
+@pytest.mark.slow
 def test_scan_pallas_empirical_distributions_agree(setup):
     """Two-sample chi-square between the backends' own empirical update-node
     distributions (independent keys, so not just bitwise identity)."""

@@ -1,0 +1,122 @@
+"""Empirical vs theoretical stationary distributions (total variation).
+
+Long-run occupancy of the simulated chains must match the theoretical
+``pi`` of the corresponding transition matrix:
+
+* simple RW:  pi(v) ∝ deg(v)                (closed form, reversible)
+* MH-uniform: pi = uniform                  (MH construction target)
+* MHLJ:       pi = left Perron vector of the dense ``mhlj()`` chain
+              (the chained-Levy exact law of Algorithm 1)
+
+Walks start from exact ``pi`` draws, so the chains are stationary from
+t=0 and the only error is (correlated) sampling noise; tolerances leave
+~3x headroom over the observed TV at these sample sizes.  Graphs cover
+the paper's topologies and the new trap-prone families (ring, star, SBM
+bottleneck, dumbbell).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MHLJParams,
+    dumbbell,
+    mh_uniform,
+    mhlj,
+    mixing,
+    ring,
+    sbm,
+    simple_rw,
+    star,
+    simple_rw_rows,
+    mh_uniform_rows,
+    walk_markov_batched,
+    walk_mhlj_batched,
+    row_probs_padded,
+    mh_importance,
+)
+from repro.core.walk import empirical_distribution, graph_tensors
+
+pytestmark = pytest.mark.slow
+
+NUM_WALKS = 256
+NUM_STEPS = 800
+TV_TOL = 0.08
+
+
+def _graphs():
+    return {
+        "ring": ring(24),
+        "star": star(16),
+        "sbm": sbm([12, 12], 0.6, 0.06, seed=1),
+        "dumbbell": dumbbell(8, 4),
+    }
+
+
+def _pi_starts(pi, num_walks, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice(pi.size, size=num_walks, p=pi), jnp.int32)
+
+
+def _occupancy_markov(g, rows, pi, seed):
+    nbrs, _ = graph_tensors(g)
+    v0s = _pi_starts(pi, NUM_WALKS, seed)
+    traj = walk_markov_batched(
+        jax.random.PRNGKey(seed), jnp.asarray(rows), nbrs, v0s, NUM_STEPS
+    )
+    return empirical_distribution(np.asarray(traj), g.n)
+
+
+@pytest.mark.parametrize("tag", ["ring", "star", "sbm", "dumbbell"])
+def test_simple_rw_occupancy_matches_degree_pi(tag):
+    g = _graphs()[tag]
+    pi = np.asarray(g.degrees, np.float64)
+    pi /= pi.sum()
+    emp = _occupancy_markov(g, simple_rw_rows(g), pi, seed=10)
+    tv = mixing.tv_distance(emp, pi)
+    assert tv < TV_TOL, f"{tag}: TV(emp, deg-pi)={tv:.3f}"
+    # closed form agrees with the dense chain's Perron vector
+    pi_dense = mixing.stationary_distribution(simple_rw(g))
+    assert mixing.tv_distance(pi, pi_dense) < 1e-8
+
+
+@pytest.mark.parametrize("tag", ["ring", "star", "sbm", "dumbbell"])
+def test_mh_uniform_occupancy_is_uniform(tag):
+    g = _graphs()[tag]
+    pi = np.full(g.n, 1.0 / g.n)
+    emp = _occupancy_markov(g, mh_uniform_rows(g), pi, seed=11)
+    tv = mixing.tv_distance(emp, pi)
+    assert tv < TV_TOL, f"{tag}: TV(emp, uniform)={tv:.3f}"
+
+
+@pytest.mark.parametrize("tag", ["ring", "star", "sbm", "dumbbell"])
+def test_mhlj_update_occupancy_matches_chain_pi(tag):
+    """The engine's update-node sequence is stationary for the dense
+    chained-Levy MHLJ matrix — on every trap-prone family."""
+    g = _graphs()[tag]
+    rng = np.random.default_rng(42)
+    lips = np.exp(rng.normal(0.0, 0.8, g.n))
+    params = MHLJParams(0.2, 0.5, 3)
+    pi = mixing.stationary_distribution(mhlj(g, lips, params))
+    rp = jnp.asarray(row_probs_padded(mh_importance(g, lips), g))
+    nbrs, degs = graph_tensors(g)
+    v0s = _pi_starts(pi, NUM_WALKS, seed=12)
+    update_nodes, _ = walk_mhlj_batched(
+        jax.random.PRNGKey(12), rp, nbrs, degs, v0s, NUM_STEPS,
+        params.p_j, params.p_d, params.r, backend="scan",
+    )
+    emp = empirical_distribution(np.asarray(update_nodes), g.n)
+    tv = mixing.tv_distance(emp, pi)
+    assert tv < TV_TOL, f"{tag}: TV(emp, mhlj-pi)={tv:.3f}"
+
+
+def test_occupancy_test_has_power():
+    """Sanity: on the star graph the simple-RW occupancy is FAR from
+    uniform (hub pi ~ 1/2), so the TV tolerance above is discriminative."""
+    g = star(16)
+    pi_deg = np.asarray(g.degrees, np.float64)
+    pi_deg /= pi_deg.sum()
+    emp = _occupancy_markov(g, simple_rw_rows(g), pi_deg, seed=13)
+    uniform = np.full(g.n, 1.0 / g.n)
+    assert mixing.tv_distance(emp, uniform) > 3 * TV_TOL
