@@ -1,12 +1,24 @@
 """Large-graph MHLJ walk sweep — the scale axis of the ROADMAP north star.
 
 Sweeps batched MHLJ walks over trap-prone CSR topologies up to ~100k nodes
-and records steps/sec.  Everything on this path is O(E): graphs are built as
-edge lists (``layout="csr"``, no N×N adjacency ever exists), P_IS rows are
-the padded ``(n, max_deg)`` Eq.-7 table computed from local information
-only, and the engine's sparse layout gathers just the W active rows per
-step.  The JSON result lands in ``results/BENCH_large_graph.json`` (plus
-the harness's usual ``bench_large_graph_walk.json``).
+and records steps/sec **per engine layout**: the padded-CSR sparse layout
+(rows padded to the global ``max_deg``) against the degree-bucketed ragged
+layout (rows padded per power-of-two bucket, Lévy hops gathered from the
+flat CSR).  On hub-heavy families (Barabási–Albert) the padded layout's
+resident tables cost O(n·max_deg) — one degree-~10³ hub inflates every
+row — while the bucketed layout stays O(E + Σ_b n_b·width_b); the per-run
+``resident_table_bytes`` field records exactly that footprint, and the
+per-family ``bucketed_table_shrink`` / ``bucketed_step_speedup`` deriveds
+summarize the win (docs/benchmarks.md tells the story).
+
+Everything on this path is O(E): graphs are built as edge lists
+(``layout="csr"``, no N×N adjacency ever exists) and P_IS rows are the
+Eq.-7 law computed from local information only.  The smoke tier sweeps
+**every registered engine layout** (``repro.core.engine.LAYOUTS``,
+including the dense parity layout) so a rotted layout fails tier-1, not
+just the default.  The JSON result lands in
+``results/BENCH_large_graph.json`` (plus the harness's usual
+``bench_large_graph_walk.json``).
 """
 from __future__ import annotations
 
@@ -19,14 +31,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS_DIR
-from repro.core import MHLJParams, WalkEngine, p_is_rows
+from repro.core import LAYOUTS, MHLJParams, WalkEngine
 from repro.core.graphs import barabasi_albert, dumbbell, grid2d, ring, sbm
 
 NAME = "large_graph_walk"
 PAPER_CLAIM = (
     "Scale (beyond-paper): the sparse CSR engine sweeps MHLJ walks over "
-    "trap-prone graphs up to ~100k nodes in O(E) memory — no dense N×N "
-    "transition table is ever materialized."
+    "trap-prone graphs up to ~100k nodes in O(E) memory, and the "
+    "degree-bucketed layout removes the O(n·max_deg) padded-table wall on "
+    "hub-heavy topologies — no dense N×N transition table is ever "
+    "materialized."
 )
 
 PARAMS = MHLJParams(p_j=0.1, p_d=0.5, r=3)
@@ -51,28 +65,36 @@ def _families(scale: str):
         ("ring", lambda: ring(100_000, layout="csr")),
         ("grid2d", lambda: grid2d(316, 316, layout="csr")),
         ("sbm", lambda: sbm([25_000] * 4, 0.0008, 0.00002, seed=0, layout="csr")),
-        ("barabasi_albert", lambda: barabasi_albert(30_000, 3, seed=0, layout="csr")),
+        ("barabasi_albert", lambda: barabasi_albert(100_000, 3, seed=0, layout="csr")),
         ("dumbbell", lambda: dumbbell(256, 99_488, layout="csr")),
     ]
 
 
-def _sweep_one(graph, num_walks: int, num_steps: int, seed: int) -> dict:
+def _resident_table_bytes(engine: WalkEngine) -> int:
+    """Bytes of per-layout resident row/neighbor state (the thing the
+    bucketed layout shrinks); degrees/uniform plumbing are common to all."""
+    total = int(engine.degrees.nbytes)
+    for field in (engine.neighbors, engine.row_probs, engine.indptr,
+                  engine.indices, engine.node_bucket, engine.node_slot):
+        if field is not None:
+            total += int(field.nbytes)
+    for group in (engine.bucket_neighbors, engine.bucket_rows):
+        if group is not None:
+            total += sum(int(a.nbytes) for a in group)
+    return total
+
+
+def _sweep_one(
+    graph, num_walks: int, num_steps: int, seed: int, layout: str,
+    backend: str = "auto",
+) -> dict:
     rng = np.random.default_rng(seed)
     lips = jnp.asarray(
         np.exp(rng.normal(0.0, 1.0, graph.n)), jnp.float32
     )  # heavy-tailed Lipschitz spread: realistic trap pressure
-    neighbors = jnp.asarray(graph.neighbors)
-    degrees = jnp.asarray(graph.degrees)
-    rows = p_is_rows(neighbors, degrees, lips)  # (n, max_deg): O(E) table
-    engine = WalkEngine(
-        neighbors=neighbors,
-        degrees=degrees,
-        p_j=PARAMS.p_j,
-        p_d=PARAMS.p_d,
-        r=PARAMS.r,
-        row_probs=rows,
-        backend="auto",  # pallas sparse tiles on TPU, scan elsewhere
-        layout="sparse",
+    g = graph.to_bucketed() if layout == "bucketed" else graph
+    engine = WalkEngine.from_graph(
+        g, PARAMS, lipschitz=lips, backend=backend, layout=layout
     )
     v0s = jnp.asarray(rng.integers(0, graph.n, num_walks), jnp.int32)
     key = jax.random.PRNGKey(seed)
@@ -86,17 +108,17 @@ def _sweep_one(graph, num_walks: int, num_steps: int, seed: int) -> dict:
 
     hops_np = np.asarray(hops, np.float64)
     return {
+        "layout": layout,
         "n": graph.n,
         "nnz": graph.num_edges,
         "max_degree": graph.max_degree,
+        "bucket_widths": list(g.bucket_widths) if layout == "bucketed" else None,
         "num_walks": num_walks,
         "num_steps": num_steps,
         "walk_steps_per_sec": float(num_walks * num_steps / dt),
         "transitions_per_update": float(hops_np.mean()),
-        "csr_bytes": int(
-            graph.indptr.nbytes + graph.indices.nbytes
-            + graph.neighbors.nbytes + graph.degrees.nbytes
-        ),
+        "resident_table_bytes": _resident_table_bytes(engine),
+        "csr_bytes": int(graph.indptr.nbytes + graph.indices.nbytes),
         "dense_table_bytes_avoided": int(graph.n) ** 2 * 8,
     }
 
@@ -105,17 +127,40 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
     scale = scale or ("quick" if quick else "full")
     num_walks = {"smoke": 128, "quick": 1024, "full": 2048}[scale]
     num_steps = {"smoke": 30, "quick": 100, "full": 200}[scale]
+    # smoke exercises EVERY registered layout (anti-rot); the real sweeps
+    # compare the two production layouts (dense is a small-n parity layout).
+    # Smoke must force backend="pallas": under "auto" an off-TPU run
+    # resolves to scan and the layouts' kernels would never execute, so a
+    # rotted kernel could pass CI.  Off-TPU the pallas backend runs in
+    # interpret mode — slow, hence the tiny smoke sizes.
+    layouts = LAYOUTS if scale == "smoke" else ("sparse", "bucketed")
+    backend = "pallas" if scale == "smoke" else "auto"
     out = {"claim": PAPER_CLAIM, "scale": scale, "params": vars(PARAMS) | {}}
     derived = {}
     for tag, build in _families(scale):
         t0 = time.perf_counter()
         graph = build()
         build_s = time.perf_counter() - t0
-        res = _sweep_one(graph, num_walks, num_steps, seed=7)
-        res["construction_sec"] = build_s
-        out[tag] = res
-        derived[f"{tag}_steps_per_sec"] = res["walk_steps_per_sec"]
-        derived[f"{tag}_n"] = res["n"]
+        fam: dict = {"construction_sec": build_s}
+        for layout in layouts:
+            fam[layout] = _sweep_one(
+                graph, num_walks, num_steps, seed=7, layout=layout,
+                backend=backend,
+            )
+            derived[f"{tag}_{layout}_steps_per_sec"] = (
+                fam[layout]["walk_steps_per_sec"]
+            )
+        if "sparse" in fam and "bucketed" in fam:
+            fam["bucketed_step_speedup"] = (
+                fam["bucketed"]["walk_steps_per_sec"]
+                / fam["sparse"]["walk_steps_per_sec"]
+            )
+            fam["bucketed_table_shrink"] = (
+                fam["sparse"]["resident_table_bytes"]
+                / fam["bucketed"]["resident_table_bytes"]
+            )
+            derived[f"{tag}_bucketed_table_shrink"] = fam["bucketed_table_shrink"]
+        out[tag] = fam
     out["derived"] = derived
 
     if scale != "smoke":  # don't clobber real sweeps from the anti-rot tier
@@ -126,5 +171,6 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
 
 
 def run_smoke() -> dict:
-    """Tiny tier exercised by the tier-1 bench-smoke test."""
+    """Tiny tier exercised by the tier-1 bench-smoke test: every registered
+    engine layout takes real steps here, so a broken layout fails CI."""
     return run(scale="smoke")

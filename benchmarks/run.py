@@ -12,8 +12,11 @@ wall time of the benchmark body).
 (tests/test_bench_smoke.py): it verifies every module's harness contract
 (NAME / PAPER_CLAIM / run) and *executes* the modules that define a
 ``run_smoke()`` tier at toy sizes — so a benchmark that stops importing or
-crashes on its first step fails CI instead of rotting silently.  Smoke
-results are not dumped to results/.
+crashes on its first step fails CI instead of rotting silently.  The
+large-graph smoke tier additionally takes real walk steps through every
+registered engine layout (``repro.core.engine.LAYOUTS`` — sparse, dense,
+bucketed), so a layout cannot rot while the default one keeps passing.
+Smoke results are not dumped to results/.
 """
 from __future__ import annotations
 

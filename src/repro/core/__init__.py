@@ -2,6 +2,8 @@
 from repro.core.graphs import (
     Graph,
     CSRGraph,
+    BucketedCSRGraph,
+    DegreeBucket,
     ring,
     grid2d,
     watts_strogatz,
@@ -27,6 +29,9 @@ from repro.core.transition import (
     simple_rw_rows,
     mh_uniform_rows,
     mh_importance_rows,
+    simple_rw_rows_bucketed,
+    mh_uniform_rows_bucketed,
+    mh_importance_rows_bucketed,
 )
 from repro.core.levy import (
     trunc_geom_pmf,
@@ -41,7 +46,14 @@ from repro.core.importance import (
     importance_distribution,
     importance_weights,
 )
-from repro.core.engine import WalkEngine, p_is_rows, levy_jump_batched
+from repro.core.engine import (
+    LAYOUTS,
+    WalkEngine,
+    p_is_rows,
+    p_is_rows_block,
+    mh_cdf_invert,
+    levy_jump_batched,
+)
 from repro.core.walk import (
     graph_tensors,
     walk_markov,
@@ -52,17 +64,20 @@ from repro.core.walk import (
 from repro.core import mixing, entrapment, theory, schedules
 
 __all__ = [
-    "Graph", "CSRGraph", "ring", "grid2d", "watts_strogatz", "erdos_renyi",
+    "Graph", "CSRGraph", "BucketedCSRGraph", "DegreeBucket", "ring",
+    "grid2d", "watts_strogatz", "erdos_renyi",
     "star", "complete", "expander", "barabasi_albert", "sbm", "dumbbell",
     "lollipop", "from_adjacency", "from_edges",
     "MHLJParams", "simple_rw", "mh", "mh_uniform", "mh_importance", "mhlj",
     "row_probs_padded", "simple_rw_rows", "mh_uniform_rows",
-    "mh_importance_rows",
+    "mh_importance_rows", "simple_rw_rows_bucketed",
+    "mh_uniform_rows_bucketed", "mh_importance_rows_bucketed",
     "trunc_geom_pmf", "levy_matrix", "levy_matrix_chained",
     "expected_transitions_per_update", "remark1_bound",
     "linear_regression_lipschitz", "logistic_regression_lipschitz",
     "importance_distribution", "importance_weights",
-    "WalkEngine", "p_is_rows", "levy_jump_batched",
+    "LAYOUTS", "WalkEngine", "p_is_rows", "p_is_rows_block",
+    "mh_cdf_invert", "levy_jump_batched",
     "graph_tensors", "walk_markov", "walk_mhlj", "walk_markov_batched",
     "walk_mhlj_batched",
     "mixing", "entrapment", "theory", "schedules",

@@ -34,15 +34,30 @@ Backends (identical law, bitwise-identical outputs given the same key):
   ``"sparse"`` (default) gathers only the W active ``[block_w, max_deg]``
   neighbor tiles and runs the MH CDF inversion in
   ``walk_transition_sparse`` with the Lévy hop chain as O(W) XLA gathers —
-  working set O(W·max_deg + E), so 100k-node graphs fit; ``"dense"`` keeps
-  the original full-table-in-VMEM kernel for parity testing at
-  orchestration scale (n <= a few thousand).
-* ``"auto"``   — pallas on TPU, scan elsewhere.
+  working set O(W·max_deg + E), so 100k-node graphs fit; ``"bucketed"``
+  dispatches the same tile kernel per degree bucket of a
+  ``graphs.BucketedCSRGraph`` (widths 8, 16, … instead of ``max_deg``)
+  with the Lévy hops gathered straight from the CSR arrays, dropping the
+  resident tables from O(n·max_deg) to O(E + Σ_b n_b·width_b) — the
+  hub-heavy-graph path; ``"dense"`` keeps the original full-table-in-VMEM
+  kernel for parity testing at orchestration scale (n <= a few thousand).
+  The registered layouts live in :data:`LAYOUTS`.
+* ``"auto"``   — pallas on TPU, scan elsewhere.  The scan backend also
+  services the bucketed layout (pure-jnp per-bucket dispatch), so the
+  bucketed path runs everywhere the engine runs.
 
 P_IS rows (Eq. 7) come either precomputed (``row_probs`` from
-``transition.row_probs_padded``) or on the fly from a live Lipschitz vector
-(the online-estimator path of ``llm_trainer``) via :func:`p_is_rows`, which
-needs only local information (deg(v), deg(u), L_v, L_u).
+``transition.row_probs_padded`` / ``transition.mh_importance_rows``, or a
+per-bucket tuple from ``transition.mh_importance_rows_bucketed``) or on
+the fly from a live Lipschitz vector (the online-estimator path of
+``llm_trainer``) via :func:`p_is_rows`, which needs only local information
+(deg(v), deg(u), L_v, L_u).  Rows follow the padded-row convention of
+``core.transition``: every true neighbor slot (including the single self
+slot) carries its probability, leftover MH mass lands on the self slot,
+pads carry exactly 0.  Because pads are exact zeros, a row truncated to
+its degree bucket's width has the same CDF prefix bit for bit — the
+property that makes ``layout="bucketed"`` agree with the other layouts
+per key (see docs/layouts.md).
 
 Remark-1 accounting: every step returns the physical hop count taken per
 walk (1 for an MH move, d for a Lévy jump).
@@ -62,8 +77,12 @@ __all__ = [
     "U_MH",
     "U_DIST",
     "U_HOP0",
+    "LAYOUTS",
     "num_uniforms",
     "p_is_rows",
+    "p_is_rows_block",
+    "mh_cdf_invert",
+    "combine_bucketed",
     "mhlj_transition_math",
     "combine_mh_jump",
     "levy_jump_batched",
@@ -72,6 +91,11 @@ __all__ = [
 
 # Uniform-block slot layout (shared with the Pallas kernel).
 U_JUMP, U_MH, U_DIST, U_HOP0 = 0, 1, 2, 3
+
+# Registered row layouts of the pallas backend.  Anything listed here is
+# exercised by the benchmark anti-rot tier (benchmarks/run.py --smoke), so a
+# new layout cannot silently rot out of tier-1 coverage.
+LAYOUTS = ("sparse", "dense", "bucketed")
 
 
 def num_uniforms(r: int) -> int:
@@ -88,26 +112,86 @@ def p_is_rows(
     """P_IS rows of Eq. (7) over padded neighbor lists, from local info only.
 
     P(v,u) = min{1/deg(v), L_u / (deg(u) L_v)} for true neighbors u != v;
-    leftover mass goes to staying (spread over the self/pad slots, which all
-    alias node v, so the sampled law is exact).
+    leftover mass goes to the single true self slot, pads carry exactly 0
+    (the shared padded-row convention of ``core.transition``, which keeps
+    bucket-width row truncations bitwise-exact).
 
     ``nodes=None`` returns the full (n, max_deg) table (Pallas backend /
     precomputation); ``nodes=(W,)`` returns only those W rows (scan backend).
     """
     if nodes is None:
         nodes = jnp.arange(neighbors.shape[0], dtype=jnp.int32)
-    nbrs = neighbors[nodes]  # (W, max_deg)
-    deg_v = degrees[nodes].astype(jnp.float32)[:, None]
+    return p_is_rows_block(
+        neighbors[nodes], nodes, degrees[nodes], degrees, lipschitz
+    )
+
+
+def p_is_rows_block(
+    nbrs: jnp.ndarray,  # (W, width) padded neighbor block
+    self_ids: jnp.ndarray,  # (W,) owning node id per row
+    deg_v: jnp.ndarray,  # (W,) true degree per row
+    degrees: jnp.ndarray,  # (n,) full degree vector (neighbor lookups)
+    lipschitz: jnp.ndarray,  # (n,)
+) -> jnp.ndarray:
+    """Eq.-7 rows on an arbitrary padded neighbor block — THE live-row math.
+
+    Shared by the full-width path (:func:`p_is_rows`) and the per-bucket
+    dispatch of ``layout="bucketed"``; ``width`` may be anything ≥ the
+    rows' true degrees.  Pads carry exactly 0 and leftover mass lands on
+    the self slot, mirroring ``transition._mh_rows_block``.
+    """
+    width = nbrs.shape[1]
+    deg_vf = deg_v.astype(jnp.float32)[:, None]
     deg_u = degrees[nbrs].astype(jnp.float32)
-    l_v = lipschitz[nodes][:, None]
+    l_v = lipschitz[self_ids][:, None]
     l_u = lipschitz[nbrs]
-    move = jnp.minimum(1.0 / deg_v, l_u / (deg_u * l_v))
-    is_self = nbrs == nodes[:, None]
-    move = jnp.where(is_self, 0.0, move)
+    move = jnp.minimum(1.0 / deg_vf, l_u / (deg_u * l_v))
+    is_pad = (
+        jax.lax.broadcasted_iota(jnp.int32, nbrs.shape, 1)
+        >= deg_v.astype(jnp.int32)[:, None]
+    )
+    is_self = (nbrs == self_ids[:, None]) & ~is_pad
+    move = jnp.where(is_self | is_pad, 0.0, move)
     p_stay = 1.0 - move.sum(axis=-1, keepdims=True)
-    n_self = jnp.maximum(is_self.sum(axis=-1, keepdims=True), 1)
-    probs = jnp.where(is_self, p_stay / n_self, move)
+    probs = jnp.where(is_self, p_stay, move)
     return jnp.maximum(probs, 0.0)
+
+
+def mh_cdf_invert(
+    rows: jnp.ndarray,  # (W, width) padded probability rows
+    neigh_rows: jnp.ndarray,  # (W, width) matching padded neighbor rows
+    u_mh: jnp.ndarray,  # (W,) the U_MH uniform per walk
+) -> jnp.ndarray:
+    """THE MH-move CDF inversion over padded rows; returns ``v_mh`` (W,).
+
+    Vectorized over any row width (``max_deg`` for the sparse/scan paths, a
+    bucket width for the bucketed dispatch).  The Pallas tile kernel
+    (``walk_transition_sparse``) and the dense kernel's per-walk body
+    mirror this arithmetic statement for statement, and the parity tests
+    assert bitwise-equal outputs.
+    """
+    width = rows.shape[1]
+    cdf = jnp.cumsum(rows, axis=1)
+    idx = jnp.sum(
+        (cdf < u_mh[:, None] * cdf[:, -1:]).astype(jnp.int32), axis=1
+    )
+    idx = jnp.minimum(idx, width - 1)
+    return jnp.take_along_axis(neigh_rows, idx[:, None], axis=1)[:, 0]
+
+
+def combine_bucketed(
+    bucket_ids: jnp.ndarray, results_by_bucket
+) -> jnp.ndarray:
+    """THE bucket-merge rule: walk w keeps result of bucket ``bucket_ids[w]``.
+
+    Every per-bucket dispatcher (the engine's scan fallback, the Pallas
+    ``walk_transition_bucketed`` and the ``ref`` oracle) routes through
+    this, so the keep-own-bucket convention exists exactly once.
+    """
+    merged = None
+    for b, vm in enumerate(results_by_bucket):
+        merged = vm if merged is None else jnp.where(bucket_ids == b, vm, merged)
+    return merged
 
 
 def mhlj_transition_math(
@@ -131,16 +215,7 @@ def mhlj_transition_math(
     Returns ``(next_nodes, hops)``, both ``(W,)`` int32; ``hops`` is the
     Remark-1 physical transition count (1 for MH, d for a jump).
     """
-    max_deg = neighbors.shape[1]
-
-    def one_walk_mh(v, prow, u):
-        # MH-IS move: CDF inversion over the padded P_IS row.
-        cdf = jnp.cumsum(prow)
-        idx = jnp.sum((cdf < u[U_MH] * cdf[-1]).astype(jnp.int32))
-        idx = jnp.minimum(idx, max_deg - 1)
-        return neighbors[v, idx]
-
-    v_mh = jax.vmap(one_walk_mh)(nodes, rows, uniforms)
+    v_mh = mh_cdf_invert(rows, neighbors[nodes], uniforms[:, U_MH])
     v_jump, d = levy_jump_batched(nodes, uniforms, neighbors, degrees, p_d, r)
     return combine_mh_jump(v_mh, v_jump, d, uniforms)
 
@@ -164,18 +239,27 @@ def combine_mh_jump(
 def levy_jump_batched(
     nodes: jnp.ndarray,  # (W,) int32
     uniforms: jnp.ndarray,  # (W, 3 + r)
-    neighbors: jnp.ndarray,  # (n, max_deg) int32
+    neighbors: Optional[jnp.ndarray],  # (n, max_deg) int32, or None with csr=
     degrees: jnp.ndarray,  # (n,) int32
     p_d: float,
     r: int,
+    *,
+    csr: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """The Lévy branch of Algorithm 1 for W walks — THE jump implementation.
 
     d ~ TruncGeom(p_d, r) then d uniform hops, expressed as W-wide XLA
-    gathers (no dense table, no per-walk scan).  Consumed by both the scan
-    backend (via :func:`mhlj_transition_math`) and the sparse Pallas path;
-    the dense Pallas kernel mirrors this arithmetic per walk.  Returns
-    ``(v_jump, d)``.
+    gathers (no dense table, no per-walk scan).  Consumed by the scan
+    backend (via :func:`mhlj_transition_math`), the sparse Pallas path and
+    the bucketed path; the dense Pallas kernel mirrors this arithmetic per
+    walk.  Returns ``(v_jump, d)``.
+
+    The k-th neighbor of ``v`` comes from the padded table
+    (``neighbors[v, k]``) or, when ``csr=(indptr, indices)`` is given, from
+    the flat CSR arrays (``indices[indptr[v] + k]``).  Hop indices always
+    satisfy ``k < deg(v)``, where both sources hold the identical value —
+    so the bucketed layout (which never materializes the padded table)
+    samples the same jump bit for bit.
     """
     d = trunc_geom_icdf(uniforms[:, U_DIST], p_d, r)
 
@@ -185,7 +269,11 @@ def levy_jump_batched(
             (uniforms[:, U_HOP0 + i] * deg.astype(jnp.float32)).astype(jnp.int32),
             deg - 1,
         )
-        v_new = neighbors[v_cur, hop_idx]
+        if csr is None:
+            v_new = neighbors[v_cur, hop_idx]
+        else:
+            indptr, indices = csr
+            v_new = indices[indptr[v_cur] + hop_idx]
         return jnp.where(i < d, v_new, v_cur)
 
     v_jump = jax.lax.fori_loop(0, r, hop, nodes)
@@ -199,19 +287,31 @@ class WalkEngine:
     Construct once (``from_graph``) and call :meth:`step` inside jitted
     training loops or :meth:`run` for whole trajectories.  All fields are
     device arrays or static python scalars, so instances may also be built
-    inside a trace (the regression trainer does).
+    inside a trace (the regression trainer does).  Engines are registered
+    as pytrees (array fields are leaves; backend/layout/shape statics are
+    aux data), so an engine may also be passed *through* a ``jax.jit``
+    boundary as an argument — the trainer does exactly that, which is what
+    lets every layout (padded or bucketed) ride the same jitted loop.
     """
 
-    neighbors: jnp.ndarray  # (n, max_deg) int32, pads = self id
+    neighbors: Optional[jnp.ndarray]  # (n, max_deg) int32, pads = self id;
+    #   None on the bucketed layout, which never materializes the table
     degrees: jnp.ndarray  # (n,) int32
     p_j: Union[float, jnp.ndarray] = 0.1  # default jump prob (overridable per call)
     p_d: float = 0.5
     r: int = 3
     row_probs: Optional[jnp.ndarray] = None  # (n, max_deg) precomputed P_IS
     backend: str = "auto"  # "auto" | "scan" | "pallas"
-    layout: str = "sparse"  # "sparse" | "dense" — pallas-backend row handling
+    layout: str = "sparse"  # engine.LAYOUTS — pallas-backend row handling
     block_w: int = 256
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+    # -- bucketed-layout state (None on the padded layouts) -----------------
+    indptr: Optional[jnp.ndarray] = None  # (n+1,) int32 CSR row pointers
+    indices: Optional[jnp.ndarray] = None  # (nnz,) int32 CSR neighbor ids
+    node_bucket: Optional[jnp.ndarray] = None  # (n,) int32 bucket id per node
+    node_slot: Optional[jnp.ndarray] = None  # (n,) int32 row within bucket
+    bucket_neighbors: Optional[Tuple[jnp.ndarray, ...]] = None  # (n_b, w_b)
+    bucket_rows: Optional[Tuple[jnp.ndarray, ...]] = None  # (n_b, w_b) P_IS
 
     @classmethod
     def from_graph(
@@ -219,22 +319,78 @@ class WalkEngine:
         graph,
         params,
         *,
-        row_probs: Optional[jnp.ndarray] = None,
+        row_probs=None,
         lipschitz: Optional[jnp.ndarray] = None,
         backend: str = "auto",
-        layout: str = "sparse",
+        layout: Optional[str] = None,
         block_w: int = 256,
         interpret: Optional[bool] = None,
     ) -> "WalkEngine":
-        """Engine from a ``core.graphs.Graph`` or ``CSRGraph`` + ``MHLJParams``.
+        """Engine from any ``core.graphs`` class + ``MHLJParams``.
 
-        Both graph classes expose the same padded ``neighbors``/``degrees``
-        tensors, so large CSR graphs plug in with no dense adjacency ever
-        materialized.  Row source precedence: explicit ``row_probs`` table,
-        else a table precomputed from a *static* ``lipschitz`` vector, else
-        live rows from the ``lipschitz=`` argument of :meth:`step` /
-        :meth:`run`.
+        ``Graph`` and ``CSRGraph`` expose the same padded
+        ``neighbors``/``degrees`` tensors, so large CSR graphs plug in with
+        no dense adjacency ever materialized; a ``BucketedCSRGraph``
+        selects ``layout="bucketed"`` automatically (and any graph is
+        converted when that layout is requested explicitly).  Row source
+        precedence: explicit ``row_probs`` (an (n, max_deg) table, or a
+        per-bucket tuple for the bucketed layout — a full table is
+        column-truncated per bucket, which is bitwise-exact), else rows
+        precomputed from a *static* ``lipschitz`` vector, else live rows
+        from the ``lipschitz=`` argument of :meth:`step` / :meth:`run`.
         """
+        is_bucketed = hasattr(graph, "buckets")
+        if layout is None:
+            layout = "bucketed" if is_bucketed else "sparse"
+        if layout == "bucketed":
+            bg = graph if is_bucketed else graph.to_csr().to_bucketed()
+            degrees = jnp.asarray(bg.degrees)
+            bucket_neighbors = tuple(
+                jnp.asarray(b.neighbors) for b in bg.buckets
+            )
+            if row_probs is not None:
+                if isinstance(row_probs, (tuple, list)):
+                    bucket_rows = tuple(jnp.asarray(x) for x in row_probs)
+                else:  # (n, max_deg) table: exact per-bucket truncation
+                    table = jnp.asarray(row_probs)
+                    bucket_rows = tuple(
+                        table[jnp.asarray(b.node_ids)][:, : b.width]
+                        for b in bg.buckets
+                    )
+            elif lipschitz is not None:
+                lips = jnp.asarray(lipschitz, jnp.float32)
+                bucket_rows = tuple(
+                    p_is_rows_block(
+                        jnp.asarray(b.neighbors),
+                        jnp.asarray(b.node_ids),
+                        degrees[jnp.asarray(b.node_ids)],
+                        degrees,
+                        lips,
+                    )
+                    for b in bg.buckets
+                )
+            else:
+                bucket_rows = None
+            return cls(
+                neighbors=None,
+                degrees=degrees,
+                p_j=params.p_j,
+                p_d=params.p_d,
+                r=params.r,
+                row_probs=None,
+                backend=backend,
+                layout="bucketed",
+                block_w=block_w,
+                interpret=interpret,
+                indptr=jnp.asarray(bg.indptr, jnp.int32),
+                indices=jnp.asarray(bg.indices, jnp.int32),
+                node_bucket=jnp.asarray(bg.node_bucket),
+                node_slot=jnp.asarray(bg.node_slot),
+                bucket_neighbors=bucket_neighbors,
+                bucket_rows=bucket_rows,
+            )
+        if is_bucketed:
+            graph = graph.to_csr()  # padded layouts need the full tensors
         neighbors = jnp.asarray(graph.neighbors)
         degrees = jnp.asarray(graph.degrees)
         if row_probs is None and lipschitz is not None:
@@ -257,7 +413,7 @@ class WalkEngine:
     def __post_init__(self):
         if self.backend not in ("auto", "scan", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
-        if self.layout not in ("sparse", "dense"):
+        if self.layout not in LAYOUTS:
             raise ValueError(f"unknown layout {self.layout!r}")
 
     # -- backend resolution -------------------------------------------------
@@ -283,6 +439,11 @@ class WalkEngine:
         :meth:`rows_for` exclusively, so an engine with live rows never
         builds the whole table.
         """
+        if self.layout == "bucketed":
+            raise ValueError(
+                "the bucketed layout has no full-width row table; rows live "
+                "per degree bucket (bucket_rows)"
+            )
         if self.row_probs is not None:
             return self.row_probs
         if lipschitz is None:
@@ -296,6 +457,11 @@ class WalkEngine:
         self, nodes: jnp.ndarray, lipschitz: Optional[jnp.ndarray] = None
     ) -> jnp.ndarray:
         """P_IS rows for the W active walk positions only."""
+        if self.layout == "bucketed":
+            raise ValueError(
+                "the bucketed layout has no full-width rows; per-bucket "
+                "tiles come from _bucket_tiles (bucket_rows / live Eq. 7)"
+            )
         if self.row_probs is not None:
             return self.row_probs[nodes]
         if lipschitz is None:
@@ -304,6 +470,42 @@ class WalkEngine:
                 "live Eq. (7) rows"
             )
         return p_is_rows(self.neighbors, self.degrees, lipschitz, nodes=nodes)
+
+    def _bucket_tiles(
+        self, nodes: jnp.ndarray, lipschitz: Optional[jnp.ndarray] = None
+    ):
+        """Per-bucket (P_IS rows, neighbor tiles) for the W active walks.
+
+        For each degree bucket b the W walks gather a ``(W, width_b)`` tile
+        from the bucket's storage; a walk outside bucket b is pointed at
+        the bucket's row 0 — a harmless dummy whose result the caller
+        discards via the per-walk bucket mask.  Returns
+        ``(bucket_id, rows_by_bucket, tiles_by_bucket)``.
+        """
+        if self.bucket_rows is None and lipschitz is None:
+            raise ValueError(
+                "engine has no precomputed bucket rows; pass lipschitz= for "
+                "live Eq. (7) rows"
+            )
+        bid = self.node_bucket[nodes]
+        slot = self.node_slot[nodes]
+        deg_v = self.degrees[nodes]
+        rows_by_bucket, tiles_by_bucket = [], []
+        for b, nbrs_b in enumerate(self.bucket_neighbors):
+            local = jnp.where(bid == b, slot, 0)
+            tiles = nbrs_b[local]  # (W, width_b)
+            if self.bucket_rows is not None:
+                rows = self.bucket_rows[b][local]
+            else:
+                # live Eq.-7 rows at bucket width; out-of-bucket lanes mix a
+                # dummy tile with their own degree — finite garbage, masked
+                # away by the caller
+                rows = p_is_rows_block(
+                    tiles, nodes, deg_v, self.degrees, lipschitz
+                )
+            rows_by_bucket.append(rows)
+            tiles_by_bucket.append(tiles)
+        return bid, tuple(rows_by_bucket), tuple(tiles_by_bucket)
 
     # -- the transition -----------------------------------------------------
 
@@ -339,7 +541,39 @@ class WalkEngine:
         flag = (u[:, U_JUMP] < p_j_t).astype(jnp.float32)
         u = u.at[:, U_JUMP].set(flag)
 
-        if self.resolved_backend == "pallas" and self.layout == "dense":
+        if self.layout == "bucketed":
+            # per-bucket MH dispatch + CSR-gathered Lévy hops: resident
+            # state is O(E + Σ_b n_b·width_b); no (n, max_deg) table exists
+            bid, rows_by_bucket, tiles_by_bucket = self._bucket_tiles(
+                nodes, lipschitz
+            )
+            if self.resolved_backend == "pallas":
+                from repro.kernels.walk_transition.kernel import (
+                    walk_transition_bucketed,
+                )
+
+                v_mh = walk_transition_bucketed(
+                    bid,
+                    rows_by_bucket,
+                    tiles_by_bucket,
+                    u[:, U_MH],
+                    block_w=self.block_w,
+                    interpret=self.resolved_interpret,
+                )
+            else:  # scan fallback: same per-bucket math, pure jnp
+                v_mh = combine_bucketed(
+                    bid,
+                    [
+                        mh_cdf_invert(rows, tiles, u[:, U_MH])
+                        for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
+                    ],
+                )
+            v_jump, d = levy_jump_batched(
+                nodes, u, None, self.degrees, self.p_d, self.r,
+                csr=(self.indptr, self.indices),
+            )
+            nxt, hops = combine_mh_jump(v_mh, v_jump, d, u)
+        elif self.resolved_backend == "pallas" and self.layout == "dense":
             # local import: kernels package imports back into this module
             from repro.kernels.walk_transition.kernel import walk_transition
 
@@ -427,3 +661,37 @@ class WalkEngine:
         if squeeze:
             return update_nodes[0], hops[0]
         return update_nodes, hops
+
+
+# -- pytree registration ----------------------------------------------------
+#
+# Array state (any layout's tensors, plus the possibly-traced p_j) flattens
+# to leaves; compile-time knobs ride as hashable aux data.  This lets an
+# engine cross a jit boundary as a plain argument — walk_sgd.trainer passes
+# one engine object into its scanned training loop, so padded and bucketed
+# layouts share the identical jitted code path.
+
+_ENGINE_DATA_FIELDS = (
+    "neighbors", "degrees", "p_j", "row_probs",
+    "indptr", "indices", "node_bucket", "node_slot",
+    "bucket_neighbors", "bucket_rows",
+)
+_ENGINE_META_FIELDS = ("p_d", "r", "backend", "layout", "block_w", "interpret")
+
+
+def _engine_flatten(e: WalkEngine):
+    children = tuple(getattr(e, f) for f in _ENGINE_DATA_FIELDS)
+    aux = tuple(getattr(e, f) for f in _ENGINE_META_FIELDS)
+    return children, aux
+
+
+def _engine_unflatten(aux, children) -> WalkEngine:
+    return WalkEngine(
+        **dict(zip(_ENGINE_DATA_FIELDS, children)),
+        **dict(zip(_ENGINE_META_FIELDS, aux)),
+    )
+
+
+jax.tree_util.register_pytree_node(
+    WalkEngine, _engine_flatten, _engine_unflatten
+)

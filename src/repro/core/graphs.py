@@ -10,13 +10,20 @@ has a self-loop (paper §II.A).  We keep three representations:
   :class:`Graph`, i.e. analysis-scale topologies;
 * a CSR pair ``(indptr, indices)`` — the O(E) ground truth of
   :class:`CSRGraph`, the large-graph representation (no N×N array ever
-  exists on this path); and
+  exists on this path);
 * a padded neighbor-list tensor (``int32`` of shape ``(n, max_deg)`` plus a
   degree vector) used *inside* jitted walk steps and the Pallas transition
   kernels, where ragged structures are not representable.  Both graph
   classes carry it, with identical ordering (ascending node id per row,
   pads repeating the row's own id), so a walk sampled on ``g`` and on
-  ``g.to_csr()`` is bitwise identical.
+  ``g.to_csr()`` is bitwise identical; and
+* a degree-bucketed ragged form, :class:`BucketedCSRGraph`
+  (``CSRGraph.to_bucketed()``): rows grouped into power-of-two degree
+  buckets, each bucket padded only to its own width — so a degree-1000 hub
+  inflates its bucket, not all n rows.  Bucket rows are column-truncations
+  of the shared padded rows (same ordering, same pad convention), which is
+  what makes walks on the bucketed layout bitwise-identical to the padded
+  layouts (see ``docs/layouts.md``).
 
 Construction is deterministic given a seed.  Builders that admit an O(E)
 edge-list construction (``ring``, ``grid2d`` and the trap-prone families)
@@ -35,6 +42,8 @@ import numpy as np
 __all__ = [
     "Graph",
     "CSRGraph",
+    "DegreeBucket",
+    "BucketedCSRGraph",
     "ring",
     "grid2d",
     "watts_strogatz",
@@ -159,29 +168,7 @@ class CSRGraph:
         return self.indices[self.indptr[v] : self.indptr[v + 1]]
 
     def validate(self) -> None:
-        n = self.n
-        deg = np.diff(self.indptr)
-        if not np.array_equal(deg, self.degrees.astype(np.int64)):
-            raise ValueError("degree vector inconsistent with indptr")
-        if int(deg.min(initial=1)) < 1:
-            raise ValueError("every node needs a self-loop (paper §II.A)")
-        if self.indices.shape[0] != int(self.indptr[-1]):
-            raise ValueError("indices length inconsistent with indptr")
-        src = np.repeat(np.arange(n, dtype=np.int64), deg)
-        dst = self.indices.astype(np.int64)
-        if np.any(dst < 0) or np.any(dst >= n):
-            raise ValueError("neighbor ids out of range")
-        codes = src * n + dst
-        if np.any(np.diff(codes) <= 0):
-            raise ValueError("CSR rows must be sorted and duplicate-free")
-        if not np.array_equal(np.sort(dst * n + src), codes):
-            raise ValueError("edge set must be symmetric (undirected graph)")
-        self_codes = np.arange(n, dtype=np.int64) * (n + 1)
-        pos = np.searchsorted(codes, self_codes)
-        if np.any(pos >= codes.shape[0]) or np.any(codes[pos] != self_codes):
-            raise ValueError("every node needs a self-loop (paper §II.A)")
-        if not _csr_is_connected(self.indptr, self.indices):
-            raise ValueError("graph must be connected")
+        _validate_csr_core(self.indptr, self.indices, self.degrees)
         expect = _pad_neighbor_lists(self.indptr, self.indices, self.degrees)
         if not np.array_equal(expect, self.neighbors):
             raise ValueError("padded neighbor tensor inconsistent with CSR")
@@ -189,6 +176,55 @@ class CSRGraph:
     def to_csr(self) -> "CSRGraph":
         """Identity — lets callers normalize either graph class to CSR."""
         return self
+
+    def to_bucketed(self, min_width: int = 8) -> "BucketedCSRGraph":
+        """Degree-bucketed ragged view (power-of-two bucket widths).
+
+        Nodes are grouped by ``min(max(min_width, 2^ceil(log2(deg))),
+        max_degree)`` and each bucket's neighbor rows are padded only to the
+        bucket width, so hub rows stop inflating the whole graph: storage
+        drops from O(n·max_deg) to O(Σ_b n_b·width_b) ≤ O(2E + n·min_width).
+        Bucket rows are column-truncations of this graph's padded rows, so
+        walks on the bucketed layout stay bitwise-identical per key.
+        """
+        if min_width < 1:
+            raise ValueError("min_width must be >= 1")
+        deg = self.degrees.astype(np.int64)
+        max_deg = int(deg.max())
+        pow2 = 2 ** np.ceil(np.log2(np.maximum(deg, 1))).astype(np.int64)
+        width_of = np.minimum(np.maximum(pow2, min_width), max_deg)
+        widths = np.unique(width_of)
+        node_bucket = np.searchsorted(widths, width_of).astype(np.int32)
+        node_slot = np.empty(self.n, dtype=np.int32)
+        buckets = []
+        for b, w in enumerate(widths):
+            ids = np.nonzero(node_bucket == b)[0]  # ascending node ids
+            node_slot[ids] = np.arange(ids.size, dtype=np.int32)
+            buckets.append(
+                DegreeBucket(
+                    width=int(w),
+                    node_ids=ids.astype(np.int32),
+                    neighbors=_pad_neighbor_lists(
+                        self.indptr, self.indices, self.degrees,
+                        node_ids=ids, width=int(w),
+                    ),
+                )
+            )
+        # No full validate() here: the CSR core was validated when this
+        # graph was constructed, and the bucket invariants (partition,
+        # ascending ids, slot order, width bounds, truncation) hold by
+        # construction above — re-checking would re-sort and re-pad every
+        # row a second time on the large-graph build path.  validate()
+        # remains the from-scratch audit for hand-built instances/tests.
+        return BucketedCSRGraph(
+            indptr=self.indptr.copy(),
+            indices=self.indices.copy(),
+            degrees=self.degrees.copy(),
+            node_bucket=node_bucket,
+            node_slot=node_slot,
+            buckets=tuple(buckets),
+            name=self.name,
+        )
 
     def to_dense(self) -> Graph:
         """Materialize the dense :class:`Graph` (analysis-scale only)."""
@@ -204,6 +240,130 @@ class CSRGraph:
         )
         g.validate()
         return g
+
+
+@dataclasses.dataclass(frozen=True)
+class DegreeBucket:
+    """One degree bucket of a :class:`BucketedCSRGraph`.
+
+    Attributes:
+      width: padded row width of this bucket (every member's degree ≤ width).
+      node_ids: (n_b,) int32 member node ids, ascending.
+      neighbors: (n_b, width) int32 padded neighbor rows — each row is the
+        column-truncation of the member's full padded row (same ordering,
+        pads repeat the node's own id).
+    """
+
+    width: int
+    node_ids: np.ndarray
+    neighbors: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketedCSRGraph:
+    """Degree-bucketed ragged layout for hub-heavy graphs.
+
+    The padded-neighbor contract costs O(n·max_deg): one degree-1000 hub in
+    a 100k-node Barabási–Albert graph inflates all 100k rows.  Here rows
+    are grouped into power-of-two degree buckets and padded per bucket, so
+    total storage is O(E + Σ_b n_b·width_b) while each bucket row stays a
+    column-truncation of the shared padded row — the property that keeps
+    ``layout="bucketed"`` walks bitwise-identical to the other layouts.
+    Built via :meth:`CSRGraph.to_bucketed`; ``to_csr()`` round-trips.
+
+    Attributes:
+      indptr/indices/degrees: the O(E) CSR core, identical to the source
+        :class:`CSRGraph`.
+      node_bucket: (n,) int32 bucket id per node.
+      node_slot: (n,) int32 row index of the node inside its bucket.
+      buckets: tuple of :class:`DegreeBucket`, widths strictly increasing.
+      name: human-readable description.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    degrees: np.ndarray
+    node_bucket: np.ndarray
+    node_slot: np.ndarray
+    buckets: tuple
+    name: str = "bucketed-csr-graph"
+
+    @property
+    def n(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max())
+
+    @property
+    def num_edges(self) -> int:
+        """Directed edge count incl. self-loops (nnz of the CSR)."""
+        return int(self.indices.shape[0])
+
+    @property
+    def bucket_widths(self) -> tuple:
+        return tuple(b.width for b in self.buckets)
+
+    def row(self, v: int) -> np.ndarray:
+        """True (unpadded) neighbor ids of node v."""
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def validate(self) -> None:
+        _validate_csr_core(self.indptr, self.indices, self.degrees)
+        widths = np.asarray(self.bucket_widths, dtype=np.int64)
+        if widths.size == 0 or np.any(np.diff(widths) <= 0):
+            raise ValueError("bucket widths must be non-empty and increasing")
+        deg = self.degrees.astype(np.int64)
+        seen = np.zeros(self.n, dtype=np.int64)
+        for b, bk in enumerate(self.buckets):
+            ids = bk.node_ids.astype(np.int64)
+            if np.any(np.diff(ids) <= 0):
+                raise ValueError("bucket node_ids must be ascending")
+            seen[ids] += 1
+            if not np.array_equal(self.node_bucket[ids], np.full(ids.size, b)):
+                raise ValueError("node_bucket inconsistent with bucket members")
+            if not np.array_equal(
+                self.node_slot[ids], np.arange(ids.size, dtype=np.int64)
+            ):
+                raise ValueError("node_slot inconsistent with bucket order")
+            if np.any(deg[ids] > bk.width):
+                raise ValueError("bucket member degree exceeds bucket width")
+            if b > 0 and np.any(deg[ids] <= self.buckets[b - 1].width):
+                raise ValueError(
+                    "bucket member would fit in a smaller bucket"
+                )
+            expect = _pad_neighbor_lists(
+                self.indptr, self.indices, self.degrees,
+                node_ids=ids, width=bk.width,
+            )
+            if not np.array_equal(expect, bk.neighbors):
+                raise ValueError("bucket neighbor rows inconsistent with CSR")
+        if not np.all(seen == 1):
+            raise ValueError("buckets must partition the node set")
+
+    def to_csr(self) -> CSRGraph:
+        """Round-trip back to the padded CSR layout (exact inverse of
+        :meth:`CSRGraph.to_bucketed`)."""
+        g = CSRGraph(
+            indptr=self.indptr.copy(),
+            indices=self.indices.copy(),
+            degrees=self.degrees.copy(),
+            neighbors=_pad_neighbor_lists(
+                self.indptr, self.indices, self.degrees
+            ),
+            name=self.name,
+        )
+        g.validate()
+        return g
+
+    def to_bucketed(self, min_width: int = 8) -> "BucketedCSRGraph":
+        """Identity — lets callers normalize either graph class to bucketed."""
+        return self
+
+    def to_dense(self) -> Graph:
+        """Materialize the dense :class:`Graph` (analysis-scale only)."""
+        return self.to_csr().to_dense()
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +413,37 @@ def _csr_is_connected(indptr: np.ndarray, indices: np.ndarray) -> bool:
     return bool(seen.all())
 
 
+def _validate_csr_core(
+    indptr: np.ndarray, indices: np.ndarray, degrees: np.ndarray
+) -> None:
+    """Structural CSR checks shared by :class:`CSRGraph` and
+    :class:`BucketedCSRGraph`: degree consistency, sortedness, symmetry,
+    self-loops, connectivity.  Raises ``ValueError`` on the first failure."""
+    n = indptr.shape[0] - 1
+    deg = np.diff(indptr)
+    if not np.array_equal(deg, degrees.astype(np.int64)):
+        raise ValueError("degree vector inconsistent with indptr")
+    if int(deg.min(initial=1)) < 1:
+        raise ValueError("every node needs a self-loop (paper §II.A)")
+    if indices.shape[0] != int(indptr[-1]):
+        raise ValueError("indices length inconsistent with indptr")
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    dst = indices.astype(np.int64)
+    if np.any(dst < 0) or np.any(dst >= n):
+        raise ValueError("neighbor ids out of range")
+    codes = src * n + dst
+    if np.any(np.diff(codes) <= 0):
+        raise ValueError("CSR rows must be sorted and duplicate-free")
+    if not np.array_equal(np.sort(dst * n + src), codes):
+        raise ValueError("edge set must be symmetric (undirected graph)")
+    self_codes = np.arange(n, dtype=np.int64) * (n + 1)
+    pos = np.searchsorted(codes, self_codes)
+    if np.any(pos >= codes.shape[0]) or np.any(codes[pos] != self_codes):
+        raise ValueError("every node needs a self-loop (paper §II.A)")
+    if not _csr_is_connected(indptr, indices):
+        raise ValueError("graph must be connected")
+
+
 def _edges_to_csr(n: int, src: np.ndarray, dst: np.ndarray):
     """Symmetrize + add self-loops + dedupe an edge list into sorted CSR.
 
@@ -273,16 +464,28 @@ def _edges_to_csr(n: int, src: np.ndarray, dst: np.ndarray):
 
 
 def _pad_neighbor_lists(
-    indptr: np.ndarray, indices: np.ndarray, degrees: np.ndarray
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    degrees: np.ndarray,
+    node_ids: Optional[np.ndarray] = None,
+    width: Optional[int] = None,
 ) -> np.ndarray:
-    """(n, max_deg) int32 padded rows from CSR; pads repeat the row id."""
-    n = indptr.shape[0] - 1
-    max_deg = int(degrees.max())
-    out = np.repeat(
-        np.arange(n, dtype=np.int32)[:, None], max_deg, axis=1
-    )
-    mask = np.arange(max_deg)[None, :] < degrees[:, None]
-    out[mask] = indices  # boolean assignment is row-major == CSR order
+    """Padded neighbor rows from CSR; pads repeat the row's own id.
+
+    Default: the full ``(n, max_deg)`` tensor.  With ``node_ids``/``width``
+    only those rows are materialized at the requested width — the bucketed
+    layout uses this to pad each degree bucket to its own width instead of
+    the global ``max_deg``.  Row contents are identical either way (a
+    bucket row is a column-truncation of the full padded row), which is
+    the ordering contract every walk layout shares.
+    """
+    if node_ids is None:
+        node_ids = np.arange(indptr.shape[0] - 1, dtype=np.int64)
+    deg = np.asarray(degrees, dtype=np.int64)[node_ids]
+    width = int(deg.max()) if width is None else int(width)
+    out = np.repeat(node_ids.astype(np.int32)[:, None], width, axis=1)
+    mask = np.arange(width)[None, :] < deg[:, None]
+    out[mask] = indices[_concat_ranges(indptr[node_ids], deg)]
     return out
 
 
@@ -315,9 +518,11 @@ def from_edges(
     """Build a graph from an undirected edge list (self-loops added).
 
     ``layout="csr"`` is the O(E) path — no N×N array is ever created;
-    ``layout="dense"`` routes through :func:`from_adjacency` for the
-    analysis stack.  Both validate on construction (connectivity included),
-    so an invalid edge set fails loudly here rather than corrupting a walk.
+    ``layout="bucketed"`` additionally converts to the degree-bucketed
+    ragged layout (:meth:`CSRGraph.to_bucketed`), and ``layout="dense"``
+    routes through :func:`from_adjacency` for the analysis stack.  All
+    validate on construction (connectivity included), so an invalid edge
+    set fails loudly here rather than corrupting a walk.
     """
     src = np.asarray(src, dtype=np.int64).ravel()
     dst = np.asarray(dst, dtype=np.int64).ravel()
@@ -331,10 +536,12 @@ def from_edges(
         adj = np.zeros((n, n), dtype=np.float64)
         adj[src, dst] = 1.0
         return from_adjacency(adj, name=name)
-    if layout != "csr":
-        raise ValueError(f"layout must be 'dense' or 'csr', got {layout!r}")
+    if layout not in ("csr", "bucketed"):
+        raise ValueError(
+            f"layout must be 'dense', 'csr' or 'bucketed', got {layout!r}"
+        )
     indptr, indices, degrees = _edges_to_csr(n, src, dst)
-    return _csr_graph_from_arrays(indptr, indices, degrees, name, "csr")
+    return _csr_graph_from_arrays(indptr, indices, degrees, name, layout)
 
 
 def _csr_graph_from_arrays(
@@ -345,8 +552,10 @@ def _csr_graph_from_arrays(
     layout: str,
 ):
     """Validated graph from already-built CSR arrays (no recomputation)."""
-    if layout not in ("dense", "csr"):
-        raise ValueError(f"layout must be 'dense' or 'csr', got {layout!r}")
+    if layout not in ("dense", "csr", "bucketed"):
+        raise ValueError(
+            f"layout must be 'dense', 'csr' or 'bucketed', got {layout!r}"
+        )
     g = CSRGraph(
         indptr=indptr,
         indices=indices,
@@ -355,7 +564,9 @@ def _csr_graph_from_arrays(
         name=name,
     )
     g.validate()
-    return g if layout == "csr" else g.to_dense()
+    if layout == "dense":
+        return g.to_dense()
+    return g.to_bucketed() if layout == "bucketed" else g
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,9 @@ __all__ = [
     "simple_rw_rows",
     "mh_uniform_rows",
     "mh_importance_rows",
+    "simple_rw_rows_bucketed",
+    "mh_uniform_rows_bucketed",
+    "mh_importance_rows_bucketed",
     "is_row_stochastic",
     "supported_on_graph",
 ]
@@ -169,28 +172,39 @@ def supported_on_graph(p: np.ndarray, graph: Graph, atol: float = 1e-12) -> bool
 # neighbor slot (including the single self slot) carries its probability,
 # leftover MH mass lands on the self slot, pads carry exactly 0 — so CDF
 # inversion and ``walk_markov``'s categorical both realize the exact law.
+#
+# All builders route through the ``_*_block`` helpers, which operate on an
+# arbitrary padded neighbor block ``(rows, width)``.  Because pads carry
+# exactly 0 and float sums over trailing exact zeros are unchanged, a row
+# computed at bucket width is the column-truncation of the same row at
+# ``max_deg`` — the bitwise bridge between the padded and bucketed layouts
+# (see docs/layouts.md).
 
 
-def _padded_masks(graph):
-    nbrs = np.asarray(graph.neighbors)
-    deg = np.asarray(graph.degrees, dtype=np.int64)
-    n, max_deg = nbrs.shape
-    is_pad = np.arange(max_deg)[None, :] >= deg[:, None]
-    is_self = (nbrs == np.arange(n, dtype=nbrs.dtype)[:, None]) & ~is_pad
-    return nbrs, deg, is_pad, is_self
+def _block_masks(nbrs: np.ndarray, self_ids: np.ndarray, deg_v: np.ndarray):
+    width = nbrs.shape[1]
+    is_pad = np.arange(width)[None, :] >= deg_v[:, None]
+    is_self = (nbrs == self_ids[:, None].astype(nbrs.dtype)) & ~is_pad
+    return is_pad, is_self
 
 
-def _mh_rows_local(graph, target_weight: np.ndarray) -> np.ndarray:
-    """Padded MH rows for Q = simple RW and pi ∝ ``target_weight`` (Eq. 6).
+def _mh_rows_block(
+    nbrs: np.ndarray,  # (rows, width) padded neighbor block
+    self_ids: np.ndarray,  # (rows,) owning node id per row
+    deg_v: np.ndarray,  # (rows,) true degree per row
+    degrees: np.ndarray,  # (n,) full degree vector (neighbor lookups)
+    target_weight: np.ndarray,  # (n,) pi ∝ target_weight
+) -> np.ndarray:
+    """MH rows (Eq. 6, Q = simple RW) on an arbitrary padded block.
 
     P(v,u) = (1/deg_v) min{1, deg_v w_u / (deg_u w_v)} for true neighbors
-    u != v; leftover mass goes to the self slot.
+    u != v; leftover mass goes to the self slot, pads carry exactly 0.
     """
-    nbrs, deg, is_pad, is_self = _padded_masks(graph)
+    is_pad, is_self = _block_masks(nbrs, self_ids, deg_v)
     w = np.asarray(target_weight, dtype=np.float64)
-    deg_v = deg[:, None].astype(np.float64)
-    deg_u = deg[nbrs].astype(np.float64)
-    move = np.minimum(1.0 / deg_v, w[nbrs] / (deg_u * w[:, None]))
+    deg_vf = deg_v[:, None].astype(np.float64)
+    deg_u = degrees[nbrs].astype(np.float64)
+    move = np.minimum(1.0 / deg_vf, w[nbrs] / (deg_u * w[self_ids][:, None]))
     move = np.where(is_pad | is_self, 0.0, move)
     p_self = 1.0 - move.sum(axis=1, keepdims=True)
     out = np.where(is_self, p_self, move)
@@ -198,21 +212,33 @@ def _mh_rows_local(graph, target_weight: np.ndarray) -> np.ndarray:
     return (out / out.sum(axis=1, keepdims=True)).astype(np.float32)
 
 
+def _simple_rw_block(nbrs: np.ndarray, deg_v: np.ndarray) -> np.ndarray:
+    """Simple-RW rows on a padded block: 1/deg_v on true slots, pads 0."""
+    width = nbrs.shape[1]
+    is_pad = np.arange(width)[None, :] >= deg_v[:, None]
+    out = np.where(is_pad, 0.0, 1.0 / deg_v[:, None].astype(np.float64))
+    return out.astype(np.float32)
+
+
+def _graph_locals(graph):
+    nbrs = np.asarray(graph.neighbors)
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    return nbrs, np.arange(graph.n, dtype=np.int64), deg
+
+
 def simple_rw_rows(graph) -> np.ndarray:
     """Padded rows of the simple RW: 1/deg(v) on every true neighbor slot."""
-    _, deg, is_pad, _ = _padded_masks(graph)
-    out = np.where(is_pad, 0.0, 1.0 / deg[:, None].astype(np.float64))
-    return out.astype(np.float32)
+    nbrs, _, deg = _graph_locals(graph)
+    return _simple_rw_block(nbrs, deg)
 
 
 def mh_uniform_rows(graph) -> np.ndarray:
     """Padded MH rows targeting uniform pi: P(v,u) = min{1/deg_v, 1/deg_u}."""
-    return _mh_rows_local(graph, np.ones(graph.n))
+    nbrs, ids, deg = _graph_locals(graph)
+    return _mh_rows_block(nbrs, ids, deg, deg, np.ones(graph.n))
 
 
-def mh_importance_rows(graph, lipschitz: np.ndarray) -> np.ndarray:
-    """Padded P_IS rows of Eq. (7) from local info only (numpy twin of
-    ``engine.p_is_rows``, with leftover mass on the self slot)."""
+def _check_lipschitz(graph, lipschitz) -> np.ndarray:
     lipschitz = np.asarray(lipschitz, dtype=np.float64)
     if lipschitz.shape != (graph.n,):
         raise ValueError(
@@ -220,7 +246,53 @@ def mh_importance_rows(graph, lipschitz: np.ndarray) -> np.ndarray:
         )
     if np.any(lipschitz <= 0):
         raise ValueError("Lipschitz constants must be strictly positive")
-    return _mh_rows_local(graph, lipschitz)
+    return lipschitz
+
+
+def mh_importance_rows(graph, lipschitz: np.ndarray) -> np.ndarray:
+    """Padded P_IS rows of Eq. (7) from local info only (numpy twin of
+    ``engine.p_is_rows``, with leftover mass on the self slot)."""
+    lipschitz = _check_lipschitz(graph, lipschitz)
+    nbrs, ids, deg = _graph_locals(graph)
+    return _mh_rows_block(nbrs, ids, deg, deg, lipschitz)
+
+
+# -- degree-bucketed counterparts (tuple of per-bucket (n_b, width_b)) ------
+#
+# Same three 1-hop kernels for a ``BucketedCSRGraph``: one array per degree
+# bucket, aligned with ``bucket.neighbors``.  Each bucket array is the
+# column-truncation of the corresponding padded-builder rows (same block
+# math, same zero-pad convention), so ``layout="bucketed"`` samples the
+# identical CDF per key.
+
+
+def simple_rw_rows_bucketed(graph) -> tuple:
+    """Per-bucket simple-RW rows for a :class:`BucketedCSRGraph`."""
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    return tuple(
+        _simple_rw_block(b.neighbors, deg[b.node_ids]) for b in graph.buckets
+    )
+
+
+def _mh_rows_bucketed(graph, target_weight: np.ndarray) -> tuple:
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    return tuple(
+        _mh_rows_block(
+            b.neighbors, b.node_ids.astype(np.int64),
+            deg[b.node_ids], deg, target_weight,
+        )
+        for b in graph.buckets
+    )
+
+
+def mh_uniform_rows_bucketed(graph) -> tuple:
+    """Per-bucket MH-uniform rows for a :class:`BucketedCSRGraph`."""
+    return _mh_rows_bucketed(graph, np.ones(graph.n))
+
+
+def mh_importance_rows_bucketed(graph, lipschitz: np.ndarray) -> tuple:
+    """Per-bucket P_IS rows of Eq. (7) for a :class:`BucketedCSRGraph`."""
+    return _mh_rows_bucketed(graph, _check_lipschitz(graph, lipschitz))
 
 
 def row_probs_padded(p: np.ndarray, graph: Graph) -> np.ndarray:

@@ -46,8 +46,16 @@ def graph_tensors(graph) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
     Accepts a dense :class:`~repro.core.graphs.Graph` or an O(E)
     :class:`~repro.core.graphs.CSRGraph` — both carry the same padded
-    neighbor tensors, so every simulator here runs on either.
+    neighbor tensors, so every simulator here runs on either.  A
+    :class:`~repro.core.graphs.BucketedCSRGraph` deliberately has no full
+    padded tensor; build the engine from it directly
+    (``WalkEngine.from_graph``) instead of materializing one here.
     """
+    if not hasattr(graph, "neighbors"):
+        raise TypeError(
+            "graph has no padded neighbor tensor (bucketed layout?); use "
+            "WalkEngine.from_graph(graph, ...) or graph.to_csr() instead"
+        )
     return jnp.asarray(graph.neighbors), jnp.asarray(graph.degrees)
 
 

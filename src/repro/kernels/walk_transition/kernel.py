@@ -4,7 +4,7 @@ These back the ``"pallas"`` backend of :class:`repro.core.engine.WalkEngine`;
 the per-walk bodies mirror ``engine.mhlj_transition_math`` statement for
 statement, and the parity tests assert bitwise-equal outputs.
 
-Two kernels:
+Three entry points:
 
 * :func:`walk_transition` — the ``layout="dense"`` path: the full
   ``(n, max_deg)`` P_IS/neighbor tables live in VMEM and every per-walk row
@@ -15,6 +15,13 @@ Two kernels:
   fully vectorized CDF inversion per tile, and the Lévy hop chain is left
   to the engine's O(W) XLA gathers.  This is what lets 100k-node graphs run
   with O(E) memory — no full table ever reaches kernel memory.
+* :func:`walk_transition_bucketed` — the ``layout="bucketed"`` MH-move
+  dispatch: one :func:`walk_transition_sparse` launch per degree bucket at
+  that bucket's width (tiles ``[block_w, width_b]`` with width_b = 8, 16,
+  …), each walk keeping the result of its own bucket's pass.  Hub rows
+  only pay their own bucket's width, so hub-heavy graphs stop paying
+  O(max_deg) per low-degree walk; the CDF inversion itself still exists
+  exactly once (``_sparse_kernel``).
 
 One grid step processes ``block_w`` walks.  Per walk:
   * MH-IS move: CDF inversion over the walk's padded P_IS neighbor row
@@ -55,10 +62,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.engine import U_DIST, U_HOP0, U_JUMP, U_MH, num_uniforms
+from repro.core.engine import (
+    U_DIST,
+    U_HOP0,
+    U_JUMP,
+    U_MH,
+    combine_bucketed,
+    num_uniforms,
+)
 from repro.core.levy import trunc_geom_icdf
 
-__all__ = ["walk_transition", "walk_transition_sparse"]
+__all__ = [
+    "walk_transition",
+    "walk_transition_sparse",
+    "walk_transition_bucketed",
+]
 
 
 def _kernel(
@@ -210,3 +228,39 @@ def walk_transition_sparse(
         interpret=interpret,
     )(rows, neigh_rows, u_mh[:, None])
     return v_mh[:w]
+
+
+# ---------------------------------------------------------------------------
+# Bucketed-layout MH-move dispatch (per-degree-bucket sparse tiles)
+# ---------------------------------------------------------------------------
+
+
+def walk_transition_bucketed(
+    bucket_ids: jnp.ndarray,  # (W,) int32 — degree bucket of each walk's node
+    rows_by_bucket,  # tuple of (W, width_b) float32 P_IS tiles
+    tiles_by_bucket,  # tuple of (W, width_b) int32 neighbor tiles
+    u_mh: jnp.ndarray,  # (W,) float32 — the U_MH uniform per walk
+    *,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """MH-IS move via one sparse tile launch per degree bucket.
+
+    Each bucket pass runs :func:`walk_transition_sparse` at the bucket's
+    own width; walk w keeps the result of the pass matching
+    ``bucket_ids[w]`` (its other passes read the bucket's row 0 — a dummy
+    the ``engine.combine_bucketed`` merge discards).  Because every bucket
+    row is a column-truncation of the walk's full padded row and pads
+    carry exactly 0, the inverted CDF index is unchanged and the result
+    is bitwise-equal to the full-width layouts given the same uniforms.
+    Returns ``v_mh`` (W,).
+    """
+    return combine_bucketed(
+        bucket_ids,
+        [
+            walk_transition_sparse(
+                rows, tiles, u_mh, block_w=block_w, interpret=interpret
+            )
+            for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
+        ],
+    )

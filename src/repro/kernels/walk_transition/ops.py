@@ -3,13 +3,15 @@
 All entry points are thin views over :class:`repro.core.engine.WalkEngine`
 — ``mhlj_step_batched`` forces the Pallas backend in its sparse tile layout
 (interpret mode off-TPU), ``mhlj_step_sparse`` is its explicit alias,
-``mhlj_step_dense`` forces the full-table dense kernel, and
-``mhlj_step_oracle`` forces the pure-JAX scan backend.  Given the same key
-they all consume identical uniforms and must agree bitwise
-(test_kernels.py / test_sparse_engine.py).
+``mhlj_step_dense`` forces the full-table dense kernel,
+``mhlj_step_bucketed`` forces the per-degree-bucket dispatch from a
+prebuilt bucketed engine, and ``mhlj_step_oracle`` forces the pure-JAX
+scan backend.  Given the same key they all consume identical uniforms and
+must agree bitwise (test_kernels.py / test_sparse_engine.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -59,6 +61,24 @@ def mhlj_step_dense(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):
     return mhlj_step_batched(
         key, nodes, row_probs, neighbors, degrees,
         p_j=p_j, p_d=p_d, r=r, layout="dense",
+    )
+
+
+@jax.jit
+def _engine_step_nodes(engine: WalkEngine, key, nodes):
+    # the engine is a pytree argument: its arrays are traced leaves while
+    # backend/layout ride as static aux data, so each layout compiles once
+    next_nodes, _ = engine.step(key, nodes)
+    return next_nodes
+
+
+def mhlj_step_bucketed(key, nodes, engine: WalkEngine):
+    """Per-degree-bucket pallas dispatch from a prebuilt bucketed engine
+    (``WalkEngine.from_graph(graph.to_bucketed(), ...)``)."""
+    if engine.layout != "bucketed":
+        raise ValueError(f"engine layout must be 'bucketed', got {engine.layout!r}")
+    return _engine_step_nodes(
+        dataclasses.replace(engine, backend="pallas"), key, nodes
     )
 
 

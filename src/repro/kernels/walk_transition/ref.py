@@ -1,6 +1,6 @@
-"""Pure-jnp oracle for the walk-transition kernel (same pre-drawn uniforms).
+"""Pure-jnp oracle for the walk-transition kernels (same pre-drawn uniforms).
 
-The oracle *is* the engine's scan-backend math — re-exported here so the
+The oracles *are* the engine's scan-backend math — re-exported here so the
 kernel directory keeps the kernel/ops/ref layout of its siblings while
 Algorithm 1 stays implemented exactly once (repro.core.engine).
 """
@@ -8,7 +8,11 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.engine import mhlj_transition_math
+from repro.core.engine import (
+    combine_bucketed,
+    mh_cdf_invert,
+    mhlj_transition_math,
+)
 
 
 def walk_transition_ref(
@@ -24,4 +28,30 @@ def walk_transition_ref(
     """Same contract as ``kernel.walk_transition`` (slot 0 = jump flag)."""
     return mhlj_transition_math(
         nodes, row_probs[nodes], neighbors, degrees, uniforms, p_d, r
+    )
+
+
+def walk_transition_sparse_ref(
+    rows: jnp.ndarray, neigh_rows: jnp.ndarray, u_mh: jnp.ndarray
+) -> jnp.ndarray:
+    """Same contract as ``kernel.walk_transition_sparse`` — the engine's
+    vectorized CDF inversion over gathered tiles."""
+    return mh_cdf_invert(rows, neigh_rows, u_mh)
+
+
+def walk_transition_bucketed_ref(
+    bucket_ids: jnp.ndarray,
+    rows_by_bucket,
+    tiles_by_bucket,
+    u_mh: jnp.ndarray,
+) -> jnp.ndarray:
+    """Same contract as ``kernel.walk_transition_bucketed``: per-bucket CDF
+    inversion with each walk keeping its own bucket's result (merge rule:
+    ``engine.combine_bucketed``)."""
+    return combine_bucketed(
+        bucket_ids,
+        [
+            mh_cdf_invert(rows, tiles, u_mh)
+            for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
+        ],
     )

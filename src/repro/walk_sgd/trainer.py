@@ -12,7 +12,11 @@ importance-weighted stochastic gradient of the visited node's local loss
 
 The walk advances through :class:`repro.core.engine.WalkEngine` (the single
 implementation of the MHLJ transition); non-jump methods are the engine at
-p_J = 0.  :func:`run_rw_sgd_multi` runs W walks at once off one batched
+p_J = 0.  The engine is built once per training run from the graph —
+``Graph``, ``CSRGraph`` or ``BucketedCSRGraph`` — and passed *into* the
+jitted scan as a pytree argument, so every layout (dense analysis graphs,
+padded CSR, degree-bucketed hub-heavy graphs) rides the identical training
+loop.  :func:`run_rw_sgd_multi` runs W walks at once off one batched
 engine transition per step (the multi-walk benchmark path).
 
 This is the regression-scale trainer used for the paper's figures; the
@@ -32,7 +36,6 @@ from repro.core import transition as trans_mod
 from repro.core.engine import WalkEngine
 from repro.core.graphs import Graph
 from repro.core.transition import MHLJParams
-from repro.core.walk import graph_tensors
 from repro.data.synthetic import RegressionData
 from repro.models import regression as reg
 
@@ -56,7 +59,7 @@ class RWSGDResult:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_steps", "r", "p_d", "use_weights", "loss_grad"),
+    static_argnames=("num_steps", "use_weights", "loss_grad"),
 )
 def _run_scan(
     key,
@@ -64,27 +67,14 @@ def _run_scan(
     features,
     targets,
     weights,  # (n,) L_bar / L_v (ones when unweighted)
-    row_probs,  # (n, max_deg)
-    neighbors,
-    degrees,
+    engine: WalkEngine,  # pytree arg: arrays traced, layout/backend static
     v0,
     num_steps: int,
     gamma: float,
     p_j_sched,  # (num_steps,)
-    p_d: float,
-    r: int,
     use_weights: bool,
     loss_grad,  # static callable: grad of per-node loss
 ):
-    engine = WalkEngine(
-        neighbors=neighbors,
-        degrees=degrees,
-        p_d=p_d,
-        r=r,
-        row_probs=row_probs,
-        backend="scan",
-    )
-
     def step(carry, inputs):
         x, v = carry
         key_t, p_j_t = inputs
@@ -115,27 +105,36 @@ def _setup_method(
 
     ``graph`` may be a dense :class:`~repro.core.graphs.Graph` (rows come
     from the dense transition builders, exactly as the paper's analysis
-    stack computes them) or a :class:`~repro.core.graphs.CSRGraph` (rows
-    come from the O(E) local builders — same law, no N×N matrix), so the
-    trainer runs unchanged on 100k-node topologies.
+    stack computes them), a :class:`~repro.core.graphs.CSRGraph` (rows
+    come from the O(E) local builders — same law, no N×N matrix) or a
+    :class:`~repro.core.graphs.BucketedCSRGraph` (per-degree-bucket rows,
+    so hub-heavy 100k+-node topologies train without the O(n·max_deg)
+    padded table).
     """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
     lips = data.lipschitz
     dense = getattr(graph, "adj", None) is not None
+    bucketed = hasattr(graph, "buckets")
+
+    def pick(dense_p, padded_rows, bucket_rows):
+        if dense:
+            return trans_mod.row_probs_padded(dense_p(), graph)
+        return bucket_rows() if bucketed else padded_rows()
+
     if method == "uniform":
         use_weights, use_jumps = False, False
-        rows = (
-            trans_mod.row_probs_padded(trans_mod.mh_uniform(graph), graph)
-            if dense
-            else trans_mod.mh_uniform_rows(graph)
+        rows = pick(
+            lambda: trans_mod.mh_uniform(graph),
+            lambda: trans_mod.mh_uniform_rows(graph),
+            lambda: trans_mod.mh_uniform_rows_bucketed(graph),
         )
     elif method == "simple":
         use_weights, use_jumps = False, False
-        rows = (
-            trans_mod.row_probs_padded(trans_mod.simple_rw(graph), graph)
-            if dense
-            else trans_mod.simple_rw_rows(graph)
+        rows = pick(
+            lambda: trans_mod.simple_rw(graph),
+            lambda: trans_mod.simple_rw_rows(graph),
+            lambda: trans_mod.simple_rw_rows_bucketed(graph),
         )
     else:  # importance / mhlj share the P_IS rows; jumps sampled live
         use_weights = True
@@ -143,15 +142,13 @@ def _setup_method(
         if use_jumps:
             mhlj_params = mhlj_params or MHLJParams()
             mhlj_params.validate()
-        rows = (
-            trans_mod.row_probs_padded(
-                trans_mod.mh_importance(graph, lips), graph
-            )
-            if dense
-            else trans_mod.mh_importance_rows(graph, lips)
+        rows = pick(
+            lambda: trans_mod.mh_importance(graph, lips),
+            lambda: trans_mod.mh_importance_rows(graph, lips),
+            lambda: trans_mod.mh_importance_rows_bucketed(graph, lips),
         )
 
-    row_probs = jnp.asarray(rows)
+    row_probs = rows if bucketed else jnp.asarray(rows)
     weights = jnp.asarray(lips.mean() / lips, jnp.float32)
 
     if use_jumps:
@@ -185,12 +182,16 @@ def run_rw_sgd(
 ) -> RWSGDResult:
     """Run one RW-SGD training; returns the Fig-3 style MSE trace.
 
-    ``graph`` may be a dense ``Graph`` or an O(E) ``CSRGraph``.
+    ``graph`` may be a dense ``Graph``, an O(E) ``CSRGraph`` or a
+    degree-bucketed ``BucketedCSRGraph``.
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )
-    neighbors, degrees = graph_tensors(graph)
+    engine = WalkEngine.from_graph(
+        graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
+        row_probs=row_probs, backend="scan",
+    )
     grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
 
@@ -200,15 +201,11 @@ def run_rw_sgd(
         jnp.asarray(data.features, jnp.float32),
         jnp.asarray(data.targets, jnp.float32),
         weights,
-        row_probs,
-        neighbors,
-        degrees,
+        engine,
         v0,
         num_steps,
         gamma,
         p_j_sched,
-        p_d,
-        r,
         use_weights,
         grad_fn,
     )
@@ -247,7 +244,7 @@ class MultiRWSGDResult:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_steps", "r", "p_d", "use_weights", "loss_grad", "avg_every"),
+    static_argnames=("num_steps", "use_weights", "loss_grad", "avg_every"),
 )
 def _run_scan_multi(
     key,
@@ -255,27 +252,15 @@ def _run_scan_multi(
     features,
     targets,
     weights,
-    row_probs,
-    neighbors,
-    degrees,
+    engine: WalkEngine,  # pytree arg: arrays traced, layout/backend static
     v0s,  # (W,)
     num_steps: int,
     gamma: float,
     p_j_sched,
-    p_d: float,
-    r: int,
     use_weights: bool,
     loss_grad,
     avg_every: int,
 ):
-    engine = WalkEngine(
-        neighbors=neighbors,
-        degrees=degrees,
-        p_d=p_d,
-        r=r,
-        row_probs=row_probs,
-        backend="auto",
-    )
     grad_w = jax.vmap(loss_grad, in_axes=(0, 0, 0))
 
     def step(carry, inputs):
@@ -336,7 +321,10 @@ def run_rw_sgd_multi(
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )
-    neighbors, degrees = graph_tensors(graph)
+    engine = WalkEngine.from_graph(
+        graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
+        row_probs=row_probs, backend="auto",
+    )
 
     if v0s is None:
         rng = np.random.default_rng(seed)
@@ -355,15 +343,11 @@ def run_rw_sgd_multi(
         jnp.asarray(data.features, jnp.float32),
         jnp.asarray(data.targets, jnp.float32),
         weights,
-        row_probs,
-        neighbors,
-        degrees,
+        engine,
         v0s,
         num_steps,
         gamma,
         p_j_sched,
-        p_d,
-        r,
         use_weights,
         grad_fn,
         avg_every,

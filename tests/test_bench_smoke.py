@@ -3,13 +3,16 @@
 Runs ``python -m benchmarks.run --smoke`` as a subprocess: every benchmark
 module must satisfy the harness contract (NAME / PAPER_CLAIM / run) and the
 modules with a smoke tier (fig5_sparse_graphs, large_graph_walk) must
-actually execute at toy sizes.  A benchmark that stops importing, loses its
-contract, or crashes on its first step fails tier 1 here instead of rotting
-until someone runs the full suite.
+actually execute at toy sizes.  The large-graph tier must take real walk
+steps through EVERY registered engine layout (``repro.core.engine.LAYOUTS``)
+so a rotted layout — not just the default one — fails tier 1 here instead
+of rotting until someone runs the full suite.
 """
 import os
 import subprocess
 import sys
+
+from repro.core.engine import LAYOUTS
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -36,3 +39,8 @@ def test_benchmarks_smoke_tier_passes():
     assert "large_graph_walk[smoke]" in out
     assert "fig5_sparse_graphs[smoke]" in out
     assert "FAILED" not in out
+    # every registered engine layout must have taken real walk steps
+    for layout in LAYOUTS:
+        assert f"_{layout}_steps_per_sec" in out, (
+            f"layout {layout!r} was not exercised by the smoke tier"
+        )

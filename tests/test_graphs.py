@@ -194,6 +194,95 @@ else:
 
 
 # ---------------------------------------------------------------------------
+# Degree-bucketed layout: round-trip + truncation contract
+# ---------------------------------------------------------------------------
+
+
+def _assert_bucketed_round_trip(csr):
+    """to_bucketed() partitions correctly, truncates bitwise, and to_csr()
+    is an exact inverse."""
+    bg = csr.to_bucketed()
+    bg.validate()
+    back = bg.to_csr()
+    np.testing.assert_array_equal(back.indptr, csr.indptr)
+    np.testing.assert_array_equal(back.indices, csr.indices)
+    np.testing.assert_array_equal(back.degrees, csr.degrees)
+    np.testing.assert_array_equal(back.neighbors, csr.neighbors)
+    deg = csr.degrees.astype(np.int64)
+    for b_id, b in enumerate(bg.buckets):
+        # every bucket row is the column-truncation of the padded row
+        np.testing.assert_array_equal(
+            b.neighbors, csr.neighbors[b.node_ids][:, : b.width]
+        )
+        assert (deg[b.node_ids] <= b.width).all()
+        if b_id > 0:  # minimality: nothing fits a smaller bucket
+            assert (deg[b.node_ids] > bg.buckets[b_id - 1].width).all()
+    return bg
+
+
+@pytest.mark.parametrize(
+    "build",
+    [
+        lambda: graphs.barabasi_albert(120, 3, seed=2, layout="csr"),
+        lambda: graphs.lollipop(24, 9, layout="csr"),
+        lambda: graphs.ring(32, layout="csr"),
+        lambda: graphs.sbm([20, 25, 15], 0.4, 0.05, seed=5, layout="csr"),
+        lambda: graphs.dumbbell(9, 4, layout="csr"),
+    ],
+)
+def test_bucketed_round_trip_families(build):
+    _assert_bucketed_round_trip(build())
+
+
+def test_bucketed_bucket_boundary_degrees():
+    """Hub degrees exactly at / one off a power-of-two bucket boundary land
+    in the right bucket, and the top width clamps to max_degree."""
+    for leaves in (7, 8, 9, 15, 16, 17):
+        idx = np.arange(1, leaves + 1, dtype=np.int64)
+        csr = graphs.from_edges(
+            leaves + 1, np.zeros(leaves, np.int64), idx,
+            name=f"star({leaves + 1})", layout="csr",
+        )
+        bg = _assert_bucketed_round_trip(csr)
+        hub_deg = leaves + 1  # incl. self-loop
+        hub_bucket = bg.buckets[int(bg.node_bucket[0])]
+        assert hub_deg <= hub_bucket.width <= max(8, hub_deg)
+        assert bg.bucket_widths[-1] <= csr.max_degree  # clamped, no waste
+
+
+def test_from_edges_bucketed_layout():
+    bg = graphs.barabasi_albert(60, 2, seed=1, layout="bucketed")
+    ref = graphs.barabasi_albert(60, 2, seed=1, layout="csr").to_bucketed()
+    assert isinstance(bg, graphs.BucketedCSRGraph)
+    np.testing.assert_array_equal(bg.node_bucket, ref.node_bucket)
+    np.testing.assert_array_equal(bg.node_slot, ref.node_slot)
+    assert bg.bucket_widths == ref.bucket_widths
+    assert bg.to_bucketed() is bg  # identity normalization
+
+
+def test_bucketed_validate_catches_corruption():
+    bg = graphs.barabasi_albert(40, 3, seed=0, layout="bucketed")
+    import dataclasses as dc
+
+    # corrupt one bucket's neighbor row: must fail the truncation contract
+    bad_buckets = list(bg.buckets)
+    nbrs = bad_buckets[0].neighbors.copy()
+    nbrs[0, 0] = (nbrs[0, 0] + 1) % bg.n
+    bad_buckets[0] = dc.replace(bad_buckets[0], neighbors=nbrs)
+    bad = dc.replace(bg, buckets=tuple(bad_buckets))
+    with pytest.raises(ValueError, match="bucket neighbor rows"):
+        bad.validate()
+    # a node assigned to a too-large bucket must fail minimality
+    if len(bg.buckets) > 1:
+        nb = bg.node_bucket.copy()
+        small = bg.buckets[0].node_ids[0]
+        nb[small] = 1
+        bad2 = dc.replace(bg, node_bucket=nb)
+        with pytest.raises(ValueError):
+            bad2.validate()
+
+
+# ---------------------------------------------------------------------------
 # Loud validation on construction
 # ---------------------------------------------------------------------------
 

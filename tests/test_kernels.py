@@ -10,7 +10,17 @@ import pytest
 from repro.kernels.flash_attention.ops import mha, mha_ref
 from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_oracle
 from repro.kernels.ssd.ops import ssd, ssd_oracle
-from repro.kernels.walk_transition.ops import mhlj_step_batched, mhlj_step_oracle
+from repro.kernels.walk_transition.kernel import walk_transition_bucketed
+from repro.kernels.walk_transition.ops import (
+    mhlj_step_batched,
+    mhlj_step_bucketed,
+    mhlj_step_oracle,
+)
+from repro.kernels.walk_transition.ref import (
+    walk_transition_bucketed_ref,
+    walk_transition_sparse_ref,
+)
+from repro.core.engine import WalkEngine
 from repro.core.graphs import ring, watts_strogatz
 from repro.core import transition as trans_mod
 
@@ -107,6 +117,49 @@ def test_walk_transition_matches_ref(n, walkers):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     # next nodes are valid node ids
     assert bool((out >= 0).all()) and bool((out < n).all())
+
+
+def test_walk_transition_bucketed_matches_ops_and_refs():
+    """The bucketed ops entry point, the per-bucket kernel dispatch, and the
+    pure-jnp ref oracles all agree bitwise with the sparse paths."""
+    n, walkers = 100, 96
+    g = watts_strogatz(n, 4, 0.1, seed=0)
+    lips = np.ones(n)
+    lips[n // 2] = 40.0
+    p = trans_mod.mh_importance(g, lips)
+    row_probs = jnp.asarray(trans_mod.row_probs_padded(p, g), jnp.float32)
+    neighbors = jnp.asarray(g.neighbors)
+    degrees = jnp.asarray(g.degrees)
+    nodes = jnp.arange(walkers, dtype=jnp.int32) % n
+    key = jax.random.PRNGKey(7)
+    params = trans_mod.MHLJParams(0.2, 0.5, 3)
+
+    ref = mhlj_step_oracle(
+        key, nodes, row_probs, neighbors, degrees, p_j=0.2, p_d=0.5, r=3
+    )
+    eng = WalkEngine.from_graph(
+        g.to_csr().to_bucketed(), params, row_probs=row_probs, backend="scan"
+    )
+    out = mhlj_step_bucketed(key, nodes, eng)  # forces pallas inside
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    # the MH-move dispatch alone: kernel vs ref oracle, bitwise, and the
+    # sparse ref oracle on full-width tiles agrees with both
+    bid, rows_b, tiles_b = eng._bucket_tiles(nodes)
+    u_mh = jax.random.uniform(jax.random.PRNGKey(8), (walkers,))
+    v_kernel = walk_transition_bucketed(
+        bid, rows_b, tiles_b, u_mh, interpret=True
+    )
+    v_ref = walk_transition_bucketed_ref(bid, rows_b, tiles_b, u_mh)
+    v_sparse_ref = walk_transition_sparse_ref(
+        row_probs[nodes], neighbors[nodes], u_mh
+    )
+    np.testing.assert_array_equal(np.asarray(v_kernel), np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(v_kernel), np.asarray(v_sparse_ref))
+    # misuse: a non-bucketed engine is rejected loudly
+    flat = WalkEngine.from_graph(g, params, row_probs=row_probs)
+    with pytest.raises(ValueError, match="bucketed"):
+        mhlj_step_bucketed(key, nodes, flat)
 
 
 def test_walk_transition_statistics():

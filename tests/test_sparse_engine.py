@@ -1,7 +1,7 @@
-"""Sparse-layout engine correctness — the acceptance contract of the CSR
-refactor.
+"""Sparse- and bucketed-layout engine correctness — the acceptance contract
+of the CSR and degree-bucketed refactors.
 
-Three claims:
+Four claims:
 
 1. The sparse scan backend, the sparse Pallas tile backend, and the dense
    ``mhlj()`` matrix chain realize the SAME transition law on an irregular
@@ -9,8 +9,13 @@ Three claims:
 2. Scan and sparse-Pallas are BITWISE equal given the same key, including
    when ``max_degree`` is odd (not a multiple of any block/lane size) and
    W is not a multiple of ``block_w``.
-3. The sparse layout is genuinely O(E): the full (n, max_deg) row table is
-   never materialized on the live-rows path.
+3. ``layout="bucketed"`` (per-degree-bucket tiles, pallas AND its scan
+   fallback) is BITWISE equal to the sparse and dense layouts on hub-heavy
+   and trap-prone graphs, including bucket-boundary degrees — so the whole
+   chi-square/stationary harness verifies the bucketed path for free.
+4. The sparse and bucketed layouts are genuinely O(E)-resident: the full
+   (n, max_deg) row table is never materialized on the live-rows path, and
+   the bucketed engine carries no full-width tensor at all.
 """
 import jax
 import jax.numpy as jnp
@@ -22,7 +27,9 @@ from repro.core import (
     WalkEngine,
     barabasi_albert,
     dumbbell,
+    lollipop,
     mh_importance,
+    mh_importance_rows_bucketed,
     mhlj,
     row_probs_padded,
     sbm,
@@ -98,23 +105,29 @@ def test_sparse_and_dense_layouts_bitwise_equal(setup):
 
 @pytest.mark.slow
 def test_sparse_backends_match_dense_chain_chi_square(setup):
-    """Empirical one-step law of the sparse scan backend AND the sparse
-    Pallas backend vs the dense MHLJ matrix chain, chi-square at ~4-sigma,
-    on the irregular BA graph."""
+    """Empirical one-step law of the sparse scan backend, the sparse Pallas
+    backend AND the bucketed layout vs the dense MHLJ matrix chain,
+    chi-square at ~4-sigma, on the irregular BA graph."""
     g, csr, lips, params, rp = setup
     start = 5
     w = 30_000
     nodes = jnp.full((w,), start, jnp.int32)
     expected_row = mhlj(g, lips, params)[start]  # chained-Levy exact law
 
-    for backend, key in (("scan", 11), ("pallas", 12)):
-        nxt, _ = _engine(csr, params, rp, backend).step(
+    for backend, layout, key in (
+        ("scan", "sparse", 11),
+        ("pallas", "sparse", 12),
+        ("pallas", "bucketed", 13),
+    ):
+        nxt, _ = _engine(csr, params, rp, backend, layout=layout).step(
             jax.random.PRNGKey(key), nodes
         )
         counts = np.bincount(np.asarray(nxt), minlength=csr.n).astype(np.float64)
         stat, dof = _chi_square_stat(counts, expected_row)
         crit = dof + 4.0 * np.sqrt(2.0 * dof)
-        assert stat < crit, f"{backend}: chi2={stat:.1f} >= {crit:.1f} (dof={dof})"
+        assert stat < crit, (
+            f"{backend}/{layout}: chi2={stat:.1f} >= {crit:.1f} (dof={dof})"
+        )
 
 
 def test_sparse_layout_never_builds_full_table(setup, monkeypatch):
@@ -148,6 +161,101 @@ def test_sparse_layout_never_builds_full_table(setup, monkeypatch):
     eng = WalkEngine.from_graph(csr, params, backend="pallas", layout="dense")
     eng.step(jax.random.PRNGKey(4), nodes, lipschitz=lips_j)
     assert called.get("yes")
+
+
+# ---------------------------------------------------------------------------
+# Degree-bucketed layout parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "build",
+    [
+        lambda: barabasi_albert(80, 3, seed=3, layout="dense"),
+        lambda: lollipop(16, 9),
+    ],
+)
+def test_bucketed_layout_bitwise_equal_all_paths(build):
+    """layout='bucketed' — both the per-bucket Pallas tile dispatch and its
+    pure-jnp scan fallback — agrees bitwise with layout='sparse' and the
+    scan oracle on a hub-heavy BA graph and the lollipop stressor, at W
+    values that are not block multiples.  The bucketed engines are driven
+    once from the full row table (exact column truncation) and once from
+    the per-bucket numpy builders."""
+    g = build()
+    csr = g.to_csr()
+    bg = csr.to_bucketed()
+    assert len(bg.buckets) >= 2  # the test must actually dispatch
+    lips = np.ones(g.n)
+    lips[1] = 30.0
+    params = MHLJParams(0.3, 0.5, 3)
+    rp = jnp.asarray(row_probs_padded(mh_importance(g, lips), g))
+    rows_b = mh_importance_rows_bucketed(bg, lips)
+    for w, block_w, key_seed in ((37, 16, 0), (300, 128, 1), (129, 64, 2)):
+        key = jax.random.PRNGKey(key_seed)
+        nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+        ref_n, ref_h = _engine(csr, params, rp, "scan").step(key, nodes)
+        candidates = [
+            _engine(csr, params, rp, "pallas", layout="sparse",
+                    block_w=block_w),
+            _engine(csr, params, rp, "pallas", layout="bucketed",
+                    block_w=block_w),
+            _engine(csr, params, rp, "scan", layout="bucketed"),
+            WalkEngine.from_graph(
+                bg, params, row_probs=rows_b, backend="pallas",
+                block_w=block_w,
+            ),
+        ]
+        for eng in candidates:
+            n2, h2 = eng.step(key, nodes)
+            np.testing.assert_array_equal(np.asarray(ref_n), np.asarray(n2))
+            np.testing.assert_array_equal(np.asarray(ref_h), np.asarray(h2))
+
+
+def test_bucketed_engine_carries_no_full_width_tensor():
+    """The bucketed engine's resident state is O(E + Σ_b n_b·width_b): no
+    (n, max_deg) table exists, and asking for one raises."""
+    bg = barabasi_albert(100, 3, seed=5, layout="bucketed")
+    params = MHLJParams(0.2, 0.5, 3)
+    lips = jnp.ones(bg.n)
+    eng = WalkEngine.from_graph(bg, params, lipschitz=lips)
+    assert eng.layout == "bucketed"
+    assert eng.neighbors is None and eng.row_probs is None
+    with pytest.raises(ValueError, match="bucketed layout"):
+        eng.rows_table()
+    max_deg = bg.max_degree
+    for b, nbrs in enumerate(eng.bucket_neighbors):
+        assert nbrs.shape[1] == bg.buckets[b].width <= max_deg
+    # live-rows path: steps stay in range without any precomputed rows
+    eng_live = WalkEngine.from_graph(bg, params, backend="scan")
+    nodes = jnp.arange(33, dtype=jnp.int32) % bg.n
+    nxt, hops = eng_live.step(
+        jax.random.PRNGKey(1), nodes, lipschitz=lips
+    )
+    nxt = np.asarray(nxt)
+    assert ((nxt >= 0) & (nxt < bg.n)).all()
+    assert ((np.asarray(hops) >= 1) & (np.asarray(hops) <= params.r)).all()
+
+
+def test_bucketed_run_matches_sparse_run():
+    """Whole trajectories (engine.run) agree bitwise between the sparse and
+    bucketed layouts — the property that lets the stationary harness cover
+    the bucketed path for free."""
+    g = barabasi_albert(48, 3, seed=7, layout="dense")
+    csr = g.to_csr()
+    lips = np.exp(np.random.default_rng(2).normal(0, 0.5, g.n))
+    params = MHLJParams(0.25, 0.5, 3)
+    rp = jnp.asarray(row_probs_padded(mh_importance(g, lips), g))
+    v0s = jnp.arange(24, dtype=jnp.int32) % csr.n
+    key = jax.random.PRNGKey(3)
+    n_sp, h_sp = _engine(csr, params, rp, "pallas", layout="sparse").run(
+        key, v0s, 100
+    )
+    n_bk, h_bk = _engine(csr, params, rp, "pallas", layout="bucketed").run(
+        key, v0s, 100
+    )
+    np.testing.assert_array_equal(np.asarray(n_sp), np.asarray(n_bk))
+    np.testing.assert_array_equal(np.asarray(h_sp), np.asarray(h_bk))
 
 
 def test_pure_csr_graph_end_to_end():
