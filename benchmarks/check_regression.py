@@ -1,0 +1,189 @@
+"""Step-time regression gate for the benchmark smoke tier.
+
+Compares fresh ``--smoke`` step-times against the committed baseline in
+``results/BENCH_large_graph.json`` (its ``smoke_baseline`` section) and
+exits nonzero when any swept engine configuration drifted by more than
+``--tolerance`` — so a change that quietly wrecks a layout's step-time
+fails CI even though every correctness test still passes.
+
+The comparison is **relative, not absolute**: each configuration's
+steps/sec is first normalized by the *same run's* ``sparse`` number for
+the same graph family, and the gate compares those ratios between the
+fresh run and the baseline.  Host speed cancels out — a CI runner 3x
+slower than the baseline machine shifts every configuration equally and
+passes, while a single layout falling off its fast path (or the sparse
+reference itself rotting, which shows as every other ratio rising) trips
+the gate on any machine.
+
+Usage (what CI and tests/test_bench_smoke.py run):
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --json smoke.json
+    PYTHONPATH=src python benchmarks/check_regression.py --fresh smoke.json
+
+Without ``--fresh`` the smoke tier is executed in-process.  The default
+tolerance (2.5x) is deliberately generous: smoke sizes are tiny and even
+same-machine ratios jitter, so this gate catches order-of-magnitude rot
+(a layout losing its kernel path, an accidental O(W·n) gather), not
+percent-level drift — the full sweep in ``docs/benchmarks.md`` is the
+precision instrument.  Only keys present in both the baseline and the
+fresh run are compared, so adding or removing a swept configuration does
+not break the gate; refresh the committed baseline with ``--update``
+after intentional perf changes (it is force-committed past the
+``results/`` scratch ignore, see .gitignore).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:  # allow `python benchmarks/check_regression.py`
+    sys.path.insert(0, REPO)
+
+BASELINE_PATH = os.path.join(REPO, "results", "BENCH_large_graph.json")
+METRIC_SUFFIX = "_steps_per_sec"
+REFERENCE_LABEL = "sparse"
+
+
+def fresh_smoke_derived() -> dict:
+    """Run the smoke tiers in-process; returns {module: derived}."""
+    from benchmarks import fig5_sparse_graphs, large_graph_walk
+
+    return {
+        mod.NAME: mod.run_smoke().get("derived", {})
+        for mod in (fig5_sparse_graphs, large_graph_walk)
+    }
+
+
+def normalized_ratios(derived: dict) -> dict:
+    """steps/sec keys divided by their family's ``sparse`` number from the
+    SAME run: ``{tag}_{label}_steps_per_sec`` -> value / value of
+    ``{tag}_sparse_steps_per_sec``.  Machine speed cancels in the ratio.
+    The sparse keys themselves (trivially 1) and keys without a sparse
+    sibling are omitted."""
+    ref_suffix = f"_{REFERENCE_LABEL}{METRIC_SUFFIX}"
+    tags = [k[: -len(ref_suffix)] for k in derived if k.endswith(ref_suffix)]
+    out = {}
+    for key, val in derived.items():
+        if not key.endswith(METRIC_SUFFIX) or not val:
+            continue
+        fam = key[: -len(METRIC_SUFFIX)]
+        tag = next(
+            (
+                t
+                for t in sorted(tags, key=len, reverse=True)
+                if fam.startswith(f"{t}_")
+            ),
+            None,
+        )
+        if tag is None or fam == f"{tag}_{REFERENCE_LABEL}":
+            continue
+        ref = derived.get(f"{tag}{ref_suffix}")
+        if ref:
+            out[key] = val / ref
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    """Drift messages for every shared normalized ratio that moved by more
+    than ``tolerance`` in either direction; empty list == gate passes."""
+    problems = []
+    for module, base_derived in baseline.items():
+        base_norm = normalized_ratios(base_derived)
+        fresh_norm = normalized_ratios(fresh.get(module, {}))
+        for key, base_ratio in base_norm.items():
+            fresh_ratio = fresh_norm.get(key)
+            if fresh_ratio is None:
+                continue  # configuration no longer swept
+            drift = max(base_ratio / fresh_ratio, fresh_ratio / base_ratio)
+            if drift > tolerance:
+                problems.append(
+                    f"{module}:{key}: {drift:.2f}x relative-to-{REFERENCE_LABEL} "
+                    f"drift (baseline ratio {base_ratio:.3f}, fresh "
+                    f"{fresh_ratio:.3f}, tolerance {tolerance}x) — if "
+                    "intentional, refresh with --update"
+                )
+    return problems
+
+
+def shared_key_count(baseline: dict, fresh: dict) -> int:
+    return sum(
+        1
+        for module, d in baseline.items()
+        for k in normalized_ratios(d)
+        if k in normalized_ratios(fresh.get(module, {}))
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--fresh", default=None, metavar="PATH",
+        help="JSON from `benchmarks.run --smoke --json PATH`; omitted = "
+        "run the smoke tier in-process",
+    )
+    ap.add_argument(
+        "--baseline", default=BASELINE_PATH, metavar="PATH",
+        help="committed benchmark JSON holding the smoke_baseline section",
+    )
+    ap.add_argument(
+        "--tolerance", type=float, default=2.5,
+        help="max allowed relative drift factor (default 2.5, noise-safe)",
+    )
+    ap.add_argument(
+        "--update", action="store_true",
+        help="write the fresh numbers into the baseline's smoke_baseline "
+        "section instead of comparing",
+    )
+    args = ap.parse_args()
+
+    if args.fresh:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    else:
+        fresh = fresh_smoke_derived()
+
+    if args.update:
+        doc = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                doc = json.load(f)
+        doc["smoke_baseline"] = fresh
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2, default=float)
+        print(f"smoke_baseline updated in {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to compare",
+              file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        doc = json.load(f)
+    baseline = doc.get("smoke_baseline")
+    if not baseline:
+        print(
+            f"{args.baseline} has no smoke_baseline section; run "
+            "`python benchmarks/check_regression.py --update` and commit",
+            file=sys.stderr,
+        )
+        return 2
+
+    problems = compare(baseline, fresh, args.tolerance)
+    if problems:
+        print(f"step-time regressions ({len(problems)}):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(
+        f"no step-time regressions across "
+        f"{shared_key_count(baseline, fresh)} configurations "
+        f"(relative drift tolerance {args.tolerance}x)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

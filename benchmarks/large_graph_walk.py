@@ -1,22 +1,37 @@
 """Large-graph MHLJ walk sweep — the scale axis of the ROADMAP north star.
 
-Sweeps batched MHLJ walks over trap-prone CSR topologies up to ~100k nodes
-and records steps/sec **per engine layout**: the padded-CSR sparse layout
-(rows padded to the global ``max_deg``) against the degree-bucketed ragged
-layout (rows padded per power-of-two bucket, Lévy hops gathered from the
-flat CSR).  On hub-heavy families (Barabási–Albert) the padded layout's
-resident tables cost O(n·max_deg) — one degree-~10³ hub inflates every
-row — while the bucketed layout stays O(E + Σ_b n_b·width_b); the per-run
-``resident_table_bytes`` field records exactly that footprint, and the
-per-family ``bucketed_table_shrink`` / ``bucketed_step_speedup`` deriveds
-summarize the win (docs/benchmarks.md tells the story).
+Sweeps batched MHLJ walks over trap-prone CSR topologies up to 1M nodes
+and records steps/sec **per engine configuration**: the padded-CSR sparse
+layout (rows padded to the global ``max_deg``) against the degree-bucketed
+ragged layout, the latter both *uncompacted* (every per-bucket pass runs
+all W walks) and *compacted* (walks sorted by bucket id per step, each
+bucket's tile pass running at its static capacity — the
+``engine.bucket_capacities`` rule).  On hub-heavy families
+(Barabási–Albert) the padded layout's resident tables cost O(n·max_deg) —
+one degree-~10³ hub inflates every row — while the bucketed layout stays
+O(E + Σ_b n_b·width_b); compaction then removes the bucketed layout's
+step-time penalty, since per-step MH work drops from W·Σ_b width_b to
+Σ_b cap_b·width_b.  The per-run ``resident_table_bytes`` field records
+the memory footprint, and the per-family ``bucketed_table_shrink`` /
+``compaction_step_speedup`` / ``compact_vs_sparse`` deriveds summarize
+both wins (docs/benchmarks.md tells the story).
+
+The full tier additionally runs the ROADMAP's **1M-node Barabási–Albert
+sweep in bounded-memory mode**: the graph is built with
+``layout="bucketed"`` (the padded ``(n, max_deg)`` table — ~GBs at this
+scale — is never materialized, see ``graphs.from_edges``) and only the
+bucketed engine configurations run, so the whole sweep fits a single
+host.  The BA family also sweeps the ``bucket_factor`` ladder knob
+(factor 4 = coarser ladder, fewer per-bucket passes, more padding).
 
 Everything on this path is O(E): graphs are built as edge lists
-(``layout="csr"``, no N×N adjacency ever exists) and P_IS rows are the
-Eq.-7 law computed from local information only.  The smoke tier sweeps
-**every registered engine layout** (``repro.core.engine.LAYOUTS``,
-including the dense parity layout) so a rotted layout fails tier-1, not
-just the default.  The JSON result lands in
+(``layout="csr"`` / ``layout="bucketed"``, no N×N adjacency ever exists)
+and P_IS rows are the Eq.-7 law computed from local information only.
+The smoke tier sweeps **every registered engine layout**
+(``repro.core.engine.LAYOUTS``, including the dense parity layout) plus
+the compacted bucketed configuration so a rotted path fails tier-1, not
+just the default; its derived steps/sec also feed the CI regression gate
+(``benchmarks/check_regression.py``).  The JSON result lands in
 ``results/BENCH_large_graph.json`` (plus the harness's usual
 ``bench_large_graph_walk.json``).
 """
@@ -37,36 +52,70 @@ from repro.core.graphs import barabasi_albert, dumbbell, grid2d, ring, sbm
 NAME = "large_graph_walk"
 PAPER_CLAIM = (
     "Scale (beyond-paper): the sparse CSR engine sweeps MHLJ walks over "
-    "trap-prone graphs up to ~100k nodes in O(E) memory, and the "
-    "degree-bucketed layout removes the O(n·max_deg) padded-table wall on "
-    "hub-heavy topologies — no dense N×N transition table is ever "
+    "trap-prone graphs up to 1M nodes in O(E) memory, the degree-bucketed "
+    "layout removes the O(n·max_deg) padded-table wall on hub-heavy "
+    "topologies, and per-step walk compaction removes the bucketed "
+    "layout's step-time penalty — no dense N×N transition table is ever "
     "materialized."
 )
 
 PARAMS = MHLJParams(p_j=0.1, p_d=0.5, r=3)
 
+# Engine configurations swept per family: label -> from_graph overrides.
+# "bucketed" is the uncompacted dispatch (compact=False) so the sweep
+# isolates what compaction buys on top of bucketing.
+CONFIGS = {
+    "sparse": dict(layout="sparse"),
+    "dense": dict(layout="dense"),
+    "bucketed": dict(layout="bucketed", compact=False),
+    "bucketed_compact": dict(layout="bucketed", compact=True),
+    "bucketed_compact_f4": dict(layout="bucketed", compact=True,
+                                bucket_factor=4),
+}
+
 
 def _families(scale: str):
-    """(tag, builder) pairs per scale tier; every builder returns a CSRGraph."""
+    """(tag, builder, labels) triples per scale tier.
+
+    ``labels`` picks the engine configurations swept for the family; the
+    1M BA entry is bucketed-only (bounded-memory mode: its builder
+    returns a ``BucketedCSRGraph`` and the padded table never exists).
+    """
+    base = ("sparse", "bucketed", "bucketed_compact")
+    ba = base + ("bucketed_compact_f4",)
+    bounded = ("bucketed", "bucketed_compact")
     if scale == "smoke":
+        # every registered layout + the compacted bucketed path (anti-rot)
+        labels = tuple(LAYOUTS) + ("bucketed_compact",)
         return [
-            ("ring", lambda: ring(1_500, layout="csr")),
-            ("sbm", lambda: sbm([400] * 3, 0.02, 0.002, seed=0, layout="csr")),
+            ("ring", lambda: ring(1_500, layout="csr"), labels),
+            ("sbm", lambda: sbm([400] * 3, 0.02, 0.002, seed=0, layout="csr"),
+             labels),
         ]
     if scale == "quick":
         return [
-            ("ring", lambda: ring(8_000, layout="csr")),
-            ("grid2d", lambda: grid2d(64, 64, layout="csr")),
-            ("sbm", lambda: sbm([2_000] * 4, 0.005, 0.0002, seed=0, layout="csr")),
-            ("barabasi_albert", lambda: barabasi_albert(8_000, 3, seed=0, layout="csr")),
-            ("dumbbell", lambda: dumbbell(128, 4_000, layout="csr")),
+            ("ring", lambda: ring(8_000, layout="csr"), base),
+            ("grid2d", lambda: grid2d(64, 64, layout="csr"), base),
+            ("sbm", lambda: sbm([2_000] * 4, 0.005, 0.0002, seed=0,
+                                layout="csr"), base),
+            ("barabasi_albert", lambda: barabasi_albert(8_000, 3, seed=0,
+                                                        layout="csr"), ba),
+            ("dumbbell", lambda: dumbbell(128, 4_000, layout="csr"), base),
         ]
     return [
-        ("ring", lambda: ring(100_000, layout="csr")),
-        ("grid2d", lambda: grid2d(316, 316, layout="csr")),
-        ("sbm", lambda: sbm([25_000] * 4, 0.0008, 0.00002, seed=0, layout="csr")),
-        ("barabasi_albert", lambda: barabasi_albert(100_000, 3, seed=0, layout="csr")),
-        ("dumbbell", lambda: dumbbell(256, 99_488, layout="csr")),
+        ("ring", lambda: ring(100_000, layout="csr"), base),
+        ("grid2d", lambda: grid2d(316, 316, layout="csr"), base),
+        ("sbm", lambda: sbm([25_000] * 4, 0.0008, 0.00002, seed=0,
+                            layout="csr"), base),
+        ("barabasi_albert", lambda: barabasi_albert(100_000, 3, seed=0,
+                                                    layout="csr"), ba),
+        ("dumbbell", lambda: dumbbell(256, 99_488, layout="csr"), base),
+        # ROADMAP item: the 1M-node hub-heavy sweep.  Bounded-memory mode —
+        # built straight into the bucketed layout, padded tables (~8 GB at
+        # this max_deg) never exist, only bucketed configs run.
+        ("barabasi_albert_1m",
+         lambda: barabasi_albert(1_000_000, 3, seed=0, layout="bucketed"),
+         bounded),
     ]
 
 
@@ -85,34 +134,46 @@ def _resident_table_bytes(engine: WalkEngine) -> int:
 
 
 def _sweep_one(
-    graph, num_walks: int, num_steps: int, seed: int, layout: str,
+    graph, num_walks: int, num_steps: int, seed: int, label: str,
     backend: str = "auto",
 ) -> dict:
+    cfg = dict(CONFIGS[label])
+    layout = cfg.pop("layout")
     rng = np.random.default_rng(seed)
     lips = jnp.asarray(
         np.exp(rng.normal(0.0, 1.0, graph.n)), jnp.float32
     )  # heavy-tailed Lipschitz spread: realistic trap pressure
-    g = graph.to_bucketed() if layout == "bucketed" else graph
     engine = WalkEngine.from_graph(
-        g, PARAMS, lipschitz=lips, backend=backend, layout=layout
+        graph, PARAMS, lipschitz=lips, backend=backend, layout=layout, **cfg
     )
     v0s = jnp.asarray(rng.integers(0, graph.n, num_walks), jnp.int32)
     key = jax.random.PRNGKey(seed)
 
-    nodes, hops = engine.run(key, v0s, num_steps)  # compile + warm
+    # jit the whole trajectory, exactly like the production consumers
+    # (walk_sgd.trainer scans the engine inside one jitted loop) — timing
+    # the unjitted path would measure per-call retrace/dispatch overhead,
+    # not the engine
+    run = jax.jit(lambda k, v: engine.run(k, v, num_steps))
+    nodes, hops = run(key, v0s)  # compile + warm
     nodes.block_until_ready()
     t0 = time.perf_counter()
-    nodes, hops = engine.run(jax.random.PRNGKey(seed + 1), v0s, num_steps)
+    nodes, hops = run(jax.random.PRNGKey(seed + 1), v0s)
     nodes.block_until_ready()
     dt = time.perf_counter() - t0
 
     hops_np = np.asarray(hops, np.float64)
+    bucketed = layout == "bucketed"
     return {
+        "label": label,
         "layout": layout,
+        "compact": bool(engine.compact) if bucketed else None,
         "n": graph.n,
         "nnz": graph.num_edges,
         "max_degree": graph.max_degree,
-        "bucket_widths": list(g.bucket_widths) if layout == "bucketed" else None,
+        "bucket_widths": (
+            [nb.shape[1] for nb in engine.bucket_neighbors] if bucketed
+            else None
+        ),
         "num_walks": num_walks,
         "num_steps": num_steps,
         "walk_steps_per_sec": float(num_walks * num_steps / dt),
@@ -127,28 +188,25 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
     scale = scale or ("quick" if quick else "full")
     num_walks = {"smoke": 128, "quick": 1024, "full": 2048}[scale]
     num_steps = {"smoke": 30, "quick": 100, "full": 200}[scale]
-    # smoke exercises EVERY registered layout (anti-rot); the real sweeps
-    # compare the two production layouts (dense is a small-n parity layout).
     # Smoke must force backend="pallas": under "auto" an off-TPU run
     # resolves to scan and the layouts' kernels would never execute, so a
     # rotted kernel could pass CI.  Off-TPU the pallas backend runs in
     # interpret mode — slow, hence the tiny smoke sizes.
-    layouts = LAYOUTS if scale == "smoke" else ("sparse", "bucketed")
     backend = "pallas" if scale == "smoke" else "auto"
     out = {"claim": PAPER_CLAIM, "scale": scale, "params": vars(PARAMS) | {}}
     derived = {}
-    for tag, build in _families(scale):
+    for tag, build, labels in _families(scale):
         t0 = time.perf_counter()
         graph = build()
         build_s = time.perf_counter() - t0
         fam: dict = {"construction_sec": build_s}
-        for layout in layouts:
-            fam[layout] = _sweep_one(
-                graph, num_walks, num_steps, seed=7, layout=layout,
+        for label in labels:
+            fam[label] = _sweep_one(
+                graph, num_walks, num_steps, seed=7, label=label,
                 backend=backend,
             )
-            derived[f"{tag}_{layout}_steps_per_sec"] = (
-                fam[layout]["walk_steps_per_sec"]
+            derived[f"{tag}_{label}_steps_per_sec"] = (
+                fam[label]["walk_steps_per_sec"]
             )
         if "sparse" in fam and "bucketed" in fam:
             fam["bucketed_step_speedup"] = (
@@ -160,17 +218,40 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
                 / fam["bucketed"]["resident_table_bytes"]
             )
             derived[f"{tag}_bucketed_table_shrink"] = fam["bucketed_table_shrink"]
+        if "bucketed" in fam and "bucketed_compact" in fam:
+            fam["compaction_step_speedup"] = (
+                fam["bucketed_compact"]["walk_steps_per_sec"]
+                / fam["bucketed"]["walk_steps_per_sec"]
+            )
+            derived[f"{tag}_compaction_step_speedup"] = (
+                fam["compaction_step_speedup"]
+            )
+        if "sparse" in fam and "bucketed_compact" in fam:
+            fam["compact_vs_sparse"] = (
+                fam["bucketed_compact"]["walk_steps_per_sec"]
+                / fam["sparse"]["walk_steps_per_sec"]
+            )
         out[tag] = fam
     out["derived"] = derived
 
     if scale != "smoke":  # don't clobber real sweeps from the anti-rot tier
         os.makedirs(RESULTS_DIR, exist_ok=True)
-        with open(os.path.join(RESULTS_DIR, "BENCH_large_graph.json"), "w") as f:
+        path = os.path.join(RESULTS_DIR, "BENCH_large_graph.json")
+        # keep the committed smoke-tier regression baseline
+        # (benchmarks/check_regression.py --update writes it) across
+        # full-sweep refreshes
+        if os.path.exists(path):
+            with open(path) as f:
+                prior = json.load(f)
+            if "smoke_baseline" in prior:
+                out["smoke_baseline"] = prior["smoke_baseline"]
+        with open(path, "w") as f:
             json.dump(out, f, indent=2, default=float)
     return out
 
 
 def run_smoke() -> dict:
     """Tiny tier exercised by the tier-1 bench-smoke test: every registered
-    engine layout takes real steps here, so a broken layout fails CI."""
+    engine layout (plus the compacted bucketed dispatch) takes real steps
+    here, so a broken path fails CI."""
     return run(scale="smoke")

@@ -21,6 +21,7 @@ Smoke results are not dumped to results/.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -50,9 +51,15 @@ MODULES = [
 ]
 
 
-def smoke() -> int:
-    """Contract-check every module; execute the ones with a smoke tier."""
+def smoke(json_path: str | None = None) -> int:
+    """Contract-check every module; execute the ones with a smoke tier.
+
+    ``json_path`` additionally dumps ``{module: derived}`` for the executed
+    smoke tiers — the input of ``benchmarks/check_regression.py``, which
+    compares these steps/sec against the committed baseline.
+    """
     failures = 0
+    derived_by_module: dict = {}
     print("name,us_per_call,derived")
     for mod in MODULES:
         if not (
@@ -68,11 +75,15 @@ def smoke() -> int:
             continue
         try:
             result, seconds = time_call(mod.run_smoke)
+            derived_by_module[mod.NAME] = result.get("derived", {})
             print(row(f"{mod.NAME}[smoke]", seconds, result.get("derived", {})))
         except Exception as e:
             failures += 1
             print(f"{mod.NAME},0,FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(derived_by_module, f, indent=2, default=float)
     return 1 if failures else 0
 
 
@@ -83,11 +94,16 @@ def main() -> int:
         "--smoke", action="store_true",
         help="anti-rot tier: contract-check all modules, run toy sizes",
     )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="with --smoke: dump per-module derived metrics to PATH "
+        "(consumed by benchmarks/check_regression.py)",
+    )
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     args = ap.parse_args()
 
     if args.smoke:
-        return smoke()
+        return smoke(json_path=args.json)
 
     selected = MODULES
     if args.only:

@@ -32,7 +32,7 @@ def main():
     feats = rng.normal(size=(N, 6)) * np.where(rng.random(N) < 0.1, 2.0, 1.0)[:, None]
     targs = feats @ (3 * rng.normal(size=6)) + rng.normal(size=N)
     lips = 2 * (feats**2).sum(1)
-    print(f"exact asymptotic error gap ||x~(p_J) - x_LS||^2  "
+    print("exact asymptotic error gap ||x~(p_J) - x_LS||^2  "
           f"(ring {N}, L_max/L_min = {lips.max() / lips.min():.0f})")
     pjs = [0.2, 0.1, 0.05, 0.025, 0.0125]
     gaps = [

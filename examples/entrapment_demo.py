@@ -18,7 +18,6 @@ import numpy as np
 from repro.core import transition as trans
 from repro.core.entrapment import expected_dwell_time, occupancy_concentration
 from repro.core.graphs import grid2d, ring, watts_strogatz
-from repro.core.levy import levy_matrix_chained
 from repro.core.mixing import mixing_time_bounds, spectral_gap
 from repro.core.theory import perturbation_l1
 from repro.core.transition import MHLJParams
@@ -36,7 +35,6 @@ def analyze(graph, spike=50.0):
 
     p_is = trans.mh_importance(graph, lips)
     p_mhlj = trans.mhlj(graph, lips, PARAMS)
-    p_levy = levy_matrix_chained(graph, PARAMS.p_d, PARAMS.r)
 
     dwell_is = expected_dwell_time(p_is)[spike_node]
     dwell_mhlj = expected_dwell_time(p_mhlj)[spike_node]

@@ -19,7 +19,6 @@ src/repro/launch/dryrun.py (train_4k shape).
 import argparse
 import dataclasses
 
-import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.launch.train import run_training

@@ -56,7 +56,7 @@ def main():
         run_rw_sgd("mhlj", graph, data, gamma, 5_000, mhlj_params=PARAMS, seed=2).transitions,
         PARAMS.p_j, PARAMS.p_d, PARAMS.r,
     )
-    print(f"\nRemark 1: measured transitions/update = "
+    print("\nRemark 1: measured transitions/update = "
           f"{rep['transitions_per_update_measured']:.3f} "
           f"<= bound {rep['transitions_per_update_bound']:.3f}  "
           f"(within_bound={rep['within_bound']})")

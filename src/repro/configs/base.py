@@ -8,7 +8,7 @@ d_model<=512, <=4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["ArchConfig", "ShapeConfig", "INPUT_SHAPES", "reduced"]
 

@@ -48,11 +48,15 @@ from repro.core.importance import (
 )
 from repro.core.engine import (
     LAYOUTS,
+    BACKEND_ENV_VAR,
     WalkEngine,
     p_is_rows,
     p_is_rows_block,
     mh_cdf_invert,
     levy_jump_batched,
+    bucket_capacities,
+    compact_plan,
+    scatter_compacted,
 )
 from repro.core.walk import (
     graph_tensors,
@@ -76,8 +80,9 @@ __all__ = [
     "expected_transitions_per_update", "remark1_bound",
     "linear_regression_lipschitz", "logistic_regression_lipschitz",
     "importance_distribution", "importance_weights",
-    "LAYOUTS", "WalkEngine", "p_is_rows", "p_is_rows_block",
-    "mh_cdf_invert", "levy_jump_batched",
+    "LAYOUTS", "BACKEND_ENV_VAR", "WalkEngine", "p_is_rows",
+    "p_is_rows_block", "mh_cdf_invert", "levy_jump_batched",
+    "bucket_capacities", "compact_plan", "scatter_compacted",
     "graph_tensors", "walk_markov", "walk_mhlj", "walk_markov_batched",
     "walk_mhlj_batched",
     "mixing", "entrapment", "theory", "schedules",

@@ -36,15 +36,24 @@ Backends (identical law, bitwise-identical outputs given the same key):
   ``walk_transition_sparse`` with the Lévy hop chain as O(W) XLA gathers —
   working set O(W·max_deg + E), so 100k-node graphs fit; ``"bucketed"``
   dispatches the same tile kernel per degree bucket of a
-  ``graphs.BucketedCSRGraph`` (widths 8, 16, … instead of ``max_deg``)
-  with the Lévy hops gathered straight from the CSR arrays, dropping the
-  resident tables from O(n·max_deg) to O(E + Σ_b n_b·width_b) — the
-  hub-heavy-graph path; ``"dense"`` keeps the original full-table-in-VMEM
-  kernel for parity testing at orchestration scale (n <= a few thousand).
-  The registered layouts live in :data:`LAYOUTS`.
-* ``"auto"``   — pallas on TPU, scan elsewhere.  The scan backend also
-  services the bucketed layout (pure-jnp per-bucket dispatch), so the
-  bucketed path runs everywhere the engine runs.
+  ``graphs.BucketedCSRGraph`` (geometric width ladder, ``bucket_factor``
+  2 or 4) with the Lévy hops gathered straight from the CSR arrays,
+  dropping the resident tables from O(n·max_deg) to
+  O(E + Σ_b n_b·width_b) — the hub-heavy-graph path.  By default the
+  bucketed dispatch is *compacted* per step: a stable sort groups the W
+  walk indices by bucket id, each bucket's tile pass runs at a static
+  capacity (:func:`bucket_capacities`) instead of all W lanes, and
+  results scatter back to walk order (:func:`scatter_compacted`) — so
+  per-step MH work is Σ_b cap_b·width_b rather than W·Σ_b width_b, with
+  a ``lax.cond`` fallback to the full dispatch on capacity overflow;
+  ``"dense"`` keeps the original full-table-in-VMEM kernel for parity
+  testing at orchestration scale (n <= a few thousand).  The registered
+  layouts live in :data:`LAYOUTS`.
+* ``"auto"``   — pallas on TPU, scan elsewhere; overridable via the
+  ``REPRO_BACKEND`` environment variable (:data:`BACKEND_ENV_VAR`), which
+  is how the CI matrix forces each backend.  The scan backend also
+  services the bucketed layout (pure-jnp per-bucket dispatch, compacted
+  the same way), so the bucketed path runs everywhere the engine runs.
 
 P_IS rows (Eq. 7) come either precomputed (``row_probs`` from
 ``transition.row_probs_padded`` / ``transition.mh_importance_rows``, or a
@@ -65,6 +74,8 @@ walk (1 for an MH move, d for a Lévy jump).
 from __future__ import annotations
 
 import dataclasses
+import math
+import os
 from typing import Optional, Tuple, Union
 
 import jax
@@ -78,11 +89,15 @@ __all__ = [
     "U_DIST",
     "U_HOP0",
     "LAYOUTS",
+    "BACKEND_ENV_VAR",
     "num_uniforms",
     "p_is_rows",
     "p_is_rows_block",
     "mh_cdf_invert",
     "combine_bucketed",
+    "bucket_capacities",
+    "compact_plan",
+    "scatter_compacted",
     "mhlj_transition_math",
     "combine_mh_jump",
     "levy_jump_batched",
@@ -96,6 +111,11 @@ U_JUMP, U_MH, U_DIST, U_HOP0 = 0, 1, 2, 3
 # exercised by the benchmark anti-rot tier (benchmarks/run.py --smoke), so a
 # new layout cannot silently rot out of tier-1 coverage.
 LAYOUTS = ("sparse", "dense", "bucketed")
+
+# Environment override for backend="auto": set REPRO_BACKEND=scan|pallas to
+# pin the resolved backend (off-TPU the pallas backend runs interpret mode).
+# This is what the CI matrix flips to run tier-1 under both backends.
+BACKEND_ENV_VAR = "REPRO_BACKEND"
 
 
 def num_uniforms(r: int) -> int:
@@ -140,7 +160,6 @@ def p_is_rows_block(
     rows' true degrees.  Pads carry exactly 0 and leftover mass lands on
     the self slot, mirroring ``transition._mh_rows_block``.
     """
-    width = nbrs.shape[1]
     deg_vf = deg_v.astype(jnp.float32)[:, None]
     deg_u = degrees[nbrs].astype(jnp.float32)
     l_v = lipschitz[self_ids][:, None]
@@ -192,6 +211,89 @@ def combine_bucketed(
     for b, vm in enumerate(results_by_bucket):
         merged = vm if merged is None else jnp.where(bucket_ids == b, vm, merged)
     return merged
+
+
+def bucket_capacities(
+    num_walks: int,
+    shares: Tuple[float, ...],
+    capacity_factor: float,
+    *,
+    min_cap: int = 32,
+    lane: int = 8,
+) -> Tuple[int, ...]:
+    """Static per-bucket walk capacities for the compacted dispatch.
+
+    THE capacity rule, documented once: bucket b gets
+    ``min(W, round_up(max(min_cap, ceil(capacity_factor · W · share_b)),
+    lane))`` lanes.  ``share_b`` is the bucket's expected walk share —
+    the engine uses ``max(node share n_b/n, degree share E_b/E)``,
+    because walk occupancy tracks node share under the MH-IS stationary
+    law but is *degree*-biased through the Lévy branch (uniform hops land
+    on a node with probability ∝ its degree) and the simple-RW MH
+    proposal, so hub buckets hold far more walks than their node count
+    suggests.  ``capacity_factor`` > 1 leaves headroom for per-step
+    fluctuation, ``min_cap`` keeps near-empty hub buckets from
+    overflowing on bursts, and ``lane`` rounding keeps tile shapes
+    friendly.  Everything here is a python number known at trace time
+    (shapes + graph construction constants), so the capacities are
+    jit-compile-time constants.  A step whose per-bucket walk counts
+    exceed these capacities falls back to the uncompacted full-W dispatch
+    (see :meth:`WalkEngine.step`) — same law, same bits, just slower.
+    """
+    caps = []
+    for share in shares:
+        c = math.ceil(capacity_factor * num_walks * share)
+        c = max(c, min_cap)
+        c = -(-c // lane) * lane
+        caps.append(min(c, num_walks))
+    return tuple(caps)
+
+
+def compact_plan(
+    bucket_ids: jnp.ndarray, num_buckets: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort the W walks by bucket id — THE compaction pass.
+
+    Returns ``(order, starts, counts)``: ``order`` is the stable argsort of
+    ``bucket_ids`` (walks of bucket b occupy positions
+    ``starts[b] : starts[b] + counts[b]`` of ``order``, in original walk
+    order within the bucket), ``counts[b]`` the number of walks currently
+    in bucket b.  All shapes are static; only the values are traced.
+    """
+    counts = jnp.zeros(num_buckets, jnp.int32).at[bucket_ids].add(1)
+    order = jnp.argsort(bucket_ids, stable=True).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]]
+    )
+    return order, starts, counts
+
+
+def scatter_compacted(
+    num_walks: int,
+    walk_idx_by_bucket,
+    valid_by_bucket,
+    results_by_bucket,
+) -> jnp.ndarray:
+    """THE compacted merge rule: scatter per-bucket results back to walk
+    order.
+
+    Bucket b's pass produced ``results_by_bucket[b][lane]`` for walk
+    ``walk_idx_by_bucket[b][lane]``; lanes beyond the bucket's walk count
+    (``valid_by_bucket[b][lane] == False``) are capacity slop whose results
+    are dropped — their scatter index is pushed out of bounds and JAX's
+    ``mode="drop"`` discards them.  Valid lanes partition the walk set
+    (each walk is in exactly one bucket), so the scatters never collide.
+    Shared by the engine's scan path, the Pallas compacted dispatch
+    (``kernels.walk_transition.walk_transition_bucketed_compacted``) and
+    the ``ref`` oracle, so the merge convention exists exactly once.
+    """
+    out = jnp.zeros(num_walks, dtype=results_by_bucket[0].dtype)
+    for widx, valid, res in zip(
+        walk_idx_by_bucket, valid_by_bucket, results_by_bucket
+    ):
+        idx = jnp.where(valid, widx, num_walks)  # invalid -> out of bounds
+        out = out.at[idx].set(res, mode="drop")
+    return out
 
 
 def mhlj_transition_math(
@@ -305,6 +407,11 @@ class WalkEngine:
     layout: str = "sparse"  # engine.LAYOUTS — pallas-backend row handling
     block_w: int = 256
     interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+    # -- bucketed-layout compaction knobs (static) --------------------------
+    compact: bool = True  # sort walks by bucket, run tiles at capacity
+    capacity_factor: float = 1.25  # headroom of the bucket_capacities rule
+    bucket_share: Optional[Tuple[float, ...]] = None  # per-bucket expected
+    #   walk share, max(node share, degree share); None = node share only
     # -- bucketed-layout state (None on the padded layouts) -----------------
     indptr: Optional[jnp.ndarray] = None  # (n+1,) int32 CSR row pointers
     indices: Optional[jnp.ndarray] = None  # (nnz,) int32 CSR neighbor ids
@@ -325,6 +432,9 @@ class WalkEngine:
         layout: Optional[str] = None,
         block_w: int = 256,
         interpret: Optional[bool] = None,
+        bucket_factor: Optional[int] = None,
+        compact: bool = True,
+        capacity_factor: float = 1.25,
     ) -> "WalkEngine":
         """Engine from any ``core.graphs`` class + ``MHLJParams``.
 
@@ -332,18 +442,29 @@ class WalkEngine:
         ``neighbors``/``degrees`` tensors, so large CSR graphs plug in with
         no dense adjacency ever materialized; a ``BucketedCSRGraph``
         selects ``layout="bucketed"`` automatically (and any graph is
-        converted when that layout is requested explicitly).  Row source
-        precedence: explicit ``row_probs`` (an (n, max_deg) table, or a
-        per-bucket tuple for the bucketed layout — a full table is
-        column-truncated per bucket, which is bitwise-exact), else rows
-        precomputed from a *static* ``lipschitz`` vector, else live rows
-        from the ``lipschitz=`` argument of :meth:`step` / :meth:`run`.
+        converted when that layout is requested explicitly, with
+        ``bucket_factor`` picking the width ladder).  ``compact`` /
+        ``capacity_factor`` tune the bucketed layout's per-step walk
+        compaction (see :meth:`step`); they are inert on the other
+        layouts.  Row source precedence: explicit ``row_probs`` (an
+        (n, max_deg) table, or a per-bucket tuple for the bucketed layout —
+        a full table is column-truncated per bucket, which is
+        bitwise-exact), else rows precomputed from a *static* ``lipschitz``
+        vector, else live rows from the ``lipschitz=`` argument of
+        :meth:`step` / :meth:`run`.
         """
         is_bucketed = hasattr(graph, "buckets")
         if layout is None:
             layout = "bucketed" if is_bucketed else "sparse"
         if layout == "bucketed":
-            bg = graph if is_bucketed else graph.to_csr().to_bucketed()
+            # bucket_factor=None keeps an already-bucketed graph's ladder
+            # as-is; an explicit value re-buckets on mismatch.
+            if is_bucketed and bucket_factor is None:
+                bg = graph
+            else:
+                bg = (graph if is_bucketed else graph.to_csr()).to_bucketed(
+                    bucket_factor=bucket_factor or 2
+                )
             degrees = jnp.asarray(bg.degrees)
             bucket_neighbors = tuple(
                 jnp.asarray(b.neighbors) for b in bg.buckets
@@ -371,6 +492,17 @@ class WalkEngine:
                 )
             else:
                 bucket_rows = None
+            # expected walk share per bucket (static): max of node share
+            # (MH-IS stationary occupancy) and degree share (Lévy-jump /
+            # simple-RW-proposal occupancy) — see bucket_capacities
+            total_deg = int(bg.degrees.sum())
+            bucket_share = tuple(
+                max(
+                    int(b.node_ids.size) / bg.n,
+                    int(bg.degrees[b.node_ids].sum()) / total_deg,
+                )
+                for b in bg.buckets
+            )
             return cls(
                 neighbors=None,
                 degrees=degrees,
@@ -382,6 +514,9 @@ class WalkEngine:
                 layout="bucketed",
                 block_w=block_w,
                 interpret=interpret,
+                compact=compact,
+                capacity_factor=capacity_factor,
+                bucket_share=bucket_share,
                 indptr=jnp.asarray(bg.indptr, jnp.int32),
                 indices=jnp.asarray(bg.indices, jnp.int32),
                 node_bucket=jnp.asarray(bg.node_bucket),
@@ -408,6 +543,8 @@ class WalkEngine:
             layout=layout,
             block_w=block_w,
             interpret=interpret,
+            compact=compact,
+            capacity_factor=capacity_factor,
         )
 
     def __post_init__(self):
@@ -422,6 +559,9 @@ class WalkEngine:
     def resolved_backend(self) -> str:
         if self.backend != "auto":
             return self.backend
+        env = os.environ.get(BACKEND_ENV_VAR, "").strip().lower()
+        if env in ("scan", "pallas"):
+            return env
         return "pallas" if jax.default_backend() == "tpu" else "scan"
 
     @property
@@ -507,6 +647,161 @@ class WalkEngine:
             tiles_by_bucket.append(tiles)
         return bid, tuple(rows_by_bucket), tuple(tiles_by_bucket)
 
+    def _bucketed_mh_full(
+        self,
+        nodes: jnp.ndarray,
+        u_mh: jnp.ndarray,
+        lipschitz: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """Uncompacted bucketed MH move: every bucket pass runs all W walks.
+
+        The pre-compaction dispatch, kept as (a) the ``compact=False``
+        path and (b) the jit-able fallback a capacity overflow selects via
+        ``lax.cond`` — so an adversarial walk distribution degrades to the
+        old per-step cost, never to a wrong answer.
+        """
+        bid, rows_by_bucket, tiles_by_bucket = self._bucket_tiles(
+            nodes, lipschitz
+        )
+        if self.resolved_backend == "pallas":
+            from repro.kernels.walk_transition.kernel import (
+                walk_transition_bucketed,
+            )
+
+            return walk_transition_bucketed(
+                bid,
+                rows_by_bucket,
+                tiles_by_bucket,
+                u_mh,
+                block_w=self.block_w,
+                interpret=self.resolved_interpret,
+            )
+        # scan fallback: same per-bucket math, pure jnp
+        return combine_bucketed(
+            bid,
+            [
+                mh_cdf_invert(rows, tiles, u_mh)
+                for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
+            ],
+        )
+
+    def compacted_bucket_inputs(
+        self,
+        nodes: jnp.ndarray,
+        u_mh: jnp.ndarray,
+        caps: Tuple[int, ...],
+        order: jnp.ndarray,
+        starts: jnp.ndarray,
+        counts: jnp.ndarray,
+        lipschitz: Optional[jnp.ndarray] = None,
+    ):
+        """THE compacted gather convention: per-bucket ``[cap_b, …]`` inputs
+        from a :func:`compact_plan`.
+
+        For each bucket b, slices ``cap_b`` walk indices out of the sorted
+        order (the order vector is padded so no ``dynamic_slice`` ever
+        clamps — lane j is exactly sorted position ``starts[b] + j``),
+        marks lanes beyond ``counts[b]`` invalid, and gathers the bucket's
+        neighbor/P_IS tiles with capacity-slop lanes pointed at the
+        bucket's row 0 (a harmless dummy :func:`scatter_compacted` drops).
+        Returns ``(walk_idx, valid, rows, tiles, u_mh)`` — each a tuple
+        with one entry per bucket.  Shared by :meth:`step`'s compacted
+        branch and the kernel-vs-oracle parity tests, so the gather
+        convention exists exactly once.
+        """
+        order_p = jnp.concatenate(
+            [order, jnp.zeros((max(caps),), order.dtype)]
+        )
+        widx_by, valid_by, rows_by, tiles_by, u_by = [], [], [], [], []
+        for b, cap in enumerate(caps):
+            widx = jax.lax.dynamic_slice(order_p, (starts[b],), (cap,))
+            valid = jnp.arange(cap, dtype=counts.dtype) < counts[b]
+            nodes_b = nodes[widx]
+            slot = jnp.where(valid, self.node_slot[nodes_b], 0)
+            tiles = self.bucket_neighbors[b][slot]
+            if self.bucket_rows is not None:
+                rows = self.bucket_rows[b][slot]
+            else:
+                rows = p_is_rows_block(
+                    tiles, nodes_b, self.degrees[nodes_b],
+                    self.degrees, lipschitz,
+                )
+            widx_by.append(widx)
+            valid_by.append(valid)
+            rows_by.append(rows)
+            tiles_by.append(tiles)
+            u_by.append(u_mh[widx])
+        return (
+            tuple(widx_by), tuple(valid_by), tuple(rows_by),
+            tuple(tiles_by), tuple(u_by),
+        )
+
+    def _bucketed_mh_compacted(
+        self,
+        nodes: jnp.ndarray,
+        u_mh: jnp.ndarray,
+        lipschitz: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """Compacted bucketed MH move: each bucket pays only its own walks.
+
+        One :func:`compact_plan` stable sort groups the W walk indices by
+        bucket id; bucket b's pass then gathers a
+        ``[cap_b, width_b]`` tile (``cap_b`` from the static
+        :func:`bucket_capacities` rule) instead of ``[W, width_b]``, and
+        :func:`scatter_compacted` puts results back in walk order.  Per-
+        walk arithmetic is identical to the full dispatch — same tile row,
+        same uniform, same CDF inversion — so outputs are bitwise-equal
+        per key.  If any bucket's walk count exceeds its capacity this
+        step, ``lax.cond`` selects :meth:`_bucketed_mh_full` instead (both
+        branches have static shapes, so the whole step stays jit-able).
+        """
+        if self.bucket_rows is None and lipschitz is None:
+            raise ValueError(
+                "engine has no precomputed bucket rows; pass lipschitz= for "
+                "live Eq. (7) rows"
+            )
+        num_walks = nodes.shape[0]
+        if self.bucket_share is not None:
+            shares = self.bucket_share
+        else:  # engines built without from_graph: node share only
+            n = int(self.degrees.shape[0])
+            shares = tuple(
+                int(nb.shape[0]) / n for nb in self.bucket_neighbors
+            )
+        caps = bucket_capacities(num_walks, shares, self.capacity_factor)
+        bid = self.node_bucket[nodes]
+        order, starts, counts = compact_plan(bid, len(caps))
+        overflow = jnp.any(counts > jnp.asarray(caps, counts.dtype))
+
+        def compacted(_):
+            widx_by, valid_by, rows_by, tiles_by, u_by = (
+                self.compacted_bucket_inputs(
+                    nodes, u_mh, caps, order, starts, counts, lipschitz
+                )
+            )
+            if self.resolved_backend == "pallas":
+                from repro.kernels.walk_transition.kernel import (
+                    walk_transition_bucketed_compacted,
+                )
+
+                return walk_transition_bucketed_compacted(
+                    rows_by, tiles_by, u_by, widx_by, valid_by, num_walks,
+                    block_w=self.block_w,
+                    interpret=self.resolved_interpret,
+                )
+            return scatter_compacted(
+                num_walks, widx_by, valid_by,
+                [
+                    mh_cdf_invert(rows, tiles, u_b)
+                    for rows, tiles, u_b in zip(rows_by, tiles_by, u_by)
+                ],
+            )
+
+        def fallback(_):
+            return self._bucketed_mh_full(nodes, u_mh, lipschitz)
+
+        return jax.lax.cond(overflow, fallback, compacted, None)
+
     # -- the transition -----------------------------------------------------
 
     def step(
@@ -543,31 +838,17 @@ class WalkEngine:
 
         if self.layout == "bucketed":
             # per-bucket MH dispatch + CSR-gathered Lévy hops: resident
-            # state is O(E + Σ_b n_b·width_b); no (n, max_deg) table exists
-            bid, rows_by_bucket, tiles_by_bucket = self._bucket_tiles(
-                nodes, lipschitz
-            )
-            if self.resolved_backend == "pallas":
-                from repro.kernels.walk_transition.kernel import (
-                    walk_transition_bucketed,
+            # state is O(E + Σ_b n_b·width_b); no (n, max_deg) table exists.
+            # With compaction on (and >1 bucket to dispatch), walks are
+            # sorted by bucket id and each bucket's tile pass runs at its
+            # static capacity instead of all W lanes; a capacity overflow
+            # falls back to the full-W dispatch for that step.
+            if self.compact and len(self.bucket_neighbors) > 1:
+                v_mh = self._bucketed_mh_compacted(
+                    nodes, u[:, U_MH], lipschitz
                 )
-
-                v_mh = walk_transition_bucketed(
-                    bid,
-                    rows_by_bucket,
-                    tiles_by_bucket,
-                    u[:, U_MH],
-                    block_w=self.block_w,
-                    interpret=self.resolved_interpret,
-                )
-            else:  # scan fallback: same per-bucket math, pure jnp
-                v_mh = combine_bucketed(
-                    bid,
-                    [
-                        mh_cdf_invert(rows, tiles, u[:, U_MH])
-                        for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
-                    ],
-                )
+            else:
+                v_mh = self._bucketed_mh_full(nodes, u[:, U_MH], lipschitz)
             v_jump, d = levy_jump_batched(
                 nodes, u, None, self.degrees, self.p_d, self.r,
                 csr=(self.indptr, self.indices),
@@ -676,7 +957,10 @@ _ENGINE_DATA_FIELDS = (
     "indptr", "indices", "node_bucket", "node_slot",
     "bucket_neighbors", "bucket_rows",
 )
-_ENGINE_META_FIELDS = ("p_d", "r", "backend", "layout", "block_w", "interpret")
+_ENGINE_META_FIELDS = (
+    "p_d", "r", "backend", "layout", "block_w", "interpret",
+    "compact", "capacity_factor", "bucket_share",
+)
 
 
 def _engine_flatten(e: WalkEngine):

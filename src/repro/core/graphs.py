@@ -177,52 +177,24 @@ class CSRGraph:
         """Identity — lets callers normalize either graph class to CSR."""
         return self
 
-    def to_bucketed(self, min_width: int = 8) -> "BucketedCSRGraph":
-        """Degree-bucketed ragged view (power-of-two bucket widths).
+    def to_bucketed(
+        self, min_width: int = 8, bucket_factor: int = 2
+    ) -> "BucketedCSRGraph":
+        """Degree-bucketed ragged view with a geometric width ladder.
 
-        Nodes are grouped by ``min(max(min_width, 2^ceil(log2(deg))),
-        max_degree)`` and each bucket's neighbor rows are padded only to the
-        bucket width, so hub rows stop inflating the whole graph: storage
-        drops from O(n·max_deg) to O(Σ_b n_b·width_b) ≤ O(2E + n·min_width).
-        Bucket rows are column-truncations of this graph's padded rows, so
-        walks on the bucketed layout stay bitwise-identical per key.
+        Bucket widths are ``min_width, min_width·f, min_width·f², …``
+        (clamped to ``max_degree``) with ``f = bucket_factor`` — ``f = 2``
+        is the fine ladder (least padding per row, most buckets to
+        dispatch), ``f = 4`` a coarser one (fewer per-bucket passes, more
+        padding waste).  Each bucket's neighbor rows are padded only to its
+        own width, so hub rows stop inflating the whole graph: storage
+        drops from O(n·max_deg) to O(Σ_b n_b·width_b).  Bucket rows are
+        column-truncations of this graph's padded rows, so walks on the
+        bucketed layout stay bitwise-identical per key.
         """
-        if min_width < 1:
-            raise ValueError("min_width must be >= 1")
-        deg = self.degrees.astype(np.int64)
-        max_deg = int(deg.max())
-        pow2 = 2 ** np.ceil(np.log2(np.maximum(deg, 1))).astype(np.int64)
-        width_of = np.minimum(np.maximum(pow2, min_width), max_deg)
-        widths = np.unique(width_of)
-        node_bucket = np.searchsorted(widths, width_of).astype(np.int32)
-        node_slot = np.empty(self.n, dtype=np.int32)
-        buckets = []
-        for b, w in enumerate(widths):
-            ids = np.nonzero(node_bucket == b)[0]  # ascending node ids
-            node_slot[ids] = np.arange(ids.size, dtype=np.int32)
-            buckets.append(
-                DegreeBucket(
-                    width=int(w),
-                    node_ids=ids.astype(np.int32),
-                    neighbors=_pad_neighbor_lists(
-                        self.indptr, self.indices, self.degrees,
-                        node_ids=ids, width=int(w),
-                    ),
-                )
-            )
-        # No full validate() here: the CSR core was validated when this
-        # graph was constructed, and the bucket invariants (partition,
-        # ascending ids, slot order, width bounds, truncation) hold by
-        # construction above — re-checking would re-sort and re-pad every
-        # row a second time on the large-graph build path.  validate()
-        # remains the from-scratch audit for hand-built instances/tests.
-        return BucketedCSRGraph(
-            indptr=self.indptr.copy(),
-            indices=self.indices.copy(),
-            degrees=self.degrees.copy(),
-            node_bucket=node_bucket,
-            node_slot=node_slot,
-            buckets=tuple(buckets),
+        return _bucketed_from_csr_arrays(
+            self.indptr.copy(), self.indices.copy(), self.degrees.copy(),
+            min_width=min_width, bucket_factor=bucket_factor,
             name=self.name,
         )
 
@@ -287,6 +259,8 @@ class BucketedCSRGraph:
     node_slot: np.ndarray
     buckets: tuple
     name: str = "bucketed-csr-graph"
+    min_width: int = 8
+    bucket_factor: int = 2
 
     @property
     def n(self) -> int:
@@ -357,9 +331,18 @@ class BucketedCSRGraph:
         g.validate()
         return g
 
-    def to_bucketed(self, min_width: int = 8) -> "BucketedCSRGraph":
-        """Identity — lets callers normalize either graph class to bucketed."""
-        return self
+    def to_bucketed(
+        self, min_width: int = 8, bucket_factor: int = 2
+    ) -> "BucketedCSRGraph":
+        """Identity when the requested ladder matches this graph's; otherwise
+        re-buckets straight from the CSR core (no padded table is built)."""
+        if (min_width, bucket_factor) == (self.min_width, self.bucket_factor):
+            return self
+        return _bucketed_from_csr_arrays(
+            self.indptr.copy(), self.indices.copy(), self.degrees.copy(),
+            min_width=min_width, bucket_factor=bucket_factor,
+            name=self.name,
+        )
 
     def to_dense(self) -> Graph:
         """Materialize the dense :class:`Graph` (analysis-scale only)."""
@@ -489,6 +472,75 @@ def _pad_neighbor_lists(
     return out
 
 
+def _bucket_widths_ladder(
+    max_deg: int, min_width: int, bucket_factor: int
+) -> np.ndarray:
+    """The geometric bucket-width ladder: min_width · bucket_factor^k,
+    clamped to ``max_deg``.  The last rung is always exactly ``max_deg`` so
+    no degree overflows its bucket."""
+    if min_width < 1:
+        raise ValueError("min_width must be >= 1")
+    if bucket_factor < 2:
+        raise ValueError("bucket_factor must be >= 2")
+    ladder = [min_width]
+    while ladder[-1] < max_deg:
+        ladder.append(ladder[-1] * bucket_factor)
+    return np.minimum(np.asarray(ladder, dtype=np.int64), max_deg)
+
+
+def _bucketed_from_csr_arrays(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    degrees: np.ndarray,
+    *,
+    min_width: int,
+    bucket_factor: int,
+    name: str,
+) -> "BucketedCSRGraph":
+    """Degree-bucketed graph straight from a validated CSR core.
+
+    This is the bounded-memory construction path: only the per-bucket
+    padded rows are ever materialized — never the full ``(n, max_deg)``
+    tensor — so a 1M-node hub-heavy graph buckets in O(E + Σ_b n_b·width_b)
+    instead of the multi-GB padded table.  No full ``validate()`` here: the
+    CSR core is validated by every caller, and the bucket invariants
+    (partition, ascending ids, slot order, width bounds, truncation) hold
+    by construction; ``validate()`` remains the from-scratch audit for
+    hand-built instances/tests.
+    """
+    deg = np.asarray(degrees, dtype=np.int64)
+    max_deg = int(deg.max())
+    ladder = _bucket_widths_ladder(max_deg, min_width, bucket_factor)
+    width_of = ladder[np.searchsorted(ladder, deg, side="left")]
+    widths = np.unique(width_of)
+    node_bucket = np.searchsorted(widths, width_of).astype(np.int32)
+    node_slot = np.empty(deg.size, dtype=np.int32)
+    buckets = []
+    for b, w in enumerate(widths):
+        ids = np.nonzero(node_bucket == b)[0]  # ascending node ids
+        node_slot[ids] = np.arange(ids.size, dtype=np.int32)
+        buckets.append(
+            DegreeBucket(
+                width=int(w),
+                node_ids=ids.astype(np.int32),
+                neighbors=_pad_neighbor_lists(
+                    indptr, indices, degrees, node_ids=ids, width=int(w)
+                ),
+            )
+        )
+    return BucketedCSRGraph(
+        indptr=indptr,
+        indices=indices,
+        degrees=degrees,
+        node_bucket=node_bucket,
+        node_slot=node_slot,
+        buckets=tuple(buckets),
+        name=name,
+        min_width=min_width,
+        bucket_factor=bucket_factor,
+    )
+
+
 def from_adjacency(adj: np.ndarray, name: str = "graph") -> Graph:
     """Build a :class:`Graph` from a 0/1 adjacency; adds self-loops if absent."""
     adj = np.asarray(adj, dtype=np.float64).copy()
@@ -514,15 +566,20 @@ def from_edges(
     *,
     name: str = "graph",
     layout: str = "csr",
+    bucket_factor: int = 2,
 ):
     """Build a graph from an undirected edge list (self-loops added).
 
     ``layout="csr"`` is the O(E) path — no N×N array is ever created;
-    ``layout="bucketed"`` additionally converts to the degree-bucketed
-    ragged layout (:meth:`CSRGraph.to_bucketed`), and ``layout="dense"``
-    routes through :func:`from_adjacency` for the analysis stack.  All
-    validate on construction (connectivity included), so an invalid edge
-    set fails loudly here rather than corrupting a walk.
+    ``layout="bucketed"`` builds the degree-bucketed ragged layout
+    *directly from the CSR core* (bounded-memory: the full ``(n, max_deg)``
+    padded table is never materialized, which is what lets 1M-node
+    hub-heavy graphs construct on a single host), and ``layout="dense"``
+    routes through :func:`from_adjacency` for the analysis stack.
+    ``bucket_factor`` picks the bucket-width ladder of the bucketed layout
+    (see :meth:`CSRGraph.to_bucketed`).  All validate on construction
+    (connectivity included), so an invalid edge set fails loudly here
+    rather than corrupting a walk.
     """
     src = np.asarray(src, dtype=np.int64).ravel()
     dst = np.asarray(dst, dtype=np.int64).ravel()
@@ -541,7 +598,9 @@ def from_edges(
             f"layout must be 'dense', 'csr' or 'bucketed', got {layout!r}"
         )
     indptr, indices, degrees = _edges_to_csr(n, src, dst)
-    return _csr_graph_from_arrays(indptr, indices, degrees, name, layout)
+    return _csr_graph_from_arrays(
+        indptr, indices, degrees, name, layout, bucket_factor=bucket_factor
+    )
 
 
 def _csr_graph_from_arrays(
@@ -550,11 +609,20 @@ def _csr_graph_from_arrays(
     degrees: np.ndarray,
     name: str,
     layout: str,
+    bucket_factor: int = 2,
 ):
     """Validated graph from already-built CSR arrays (no recomputation)."""
     if layout not in ("dense", "csr", "bucketed"):
         raise ValueError(
             f"layout must be 'dense', 'csr' or 'bucketed', got {layout!r}"
+        )
+    if layout == "bucketed":
+        # bounded-memory path: validate the CSR core, then bucket directly —
+        # the (n, max_deg) padded tensor is never built
+        _validate_csr_core(indptr, indices, degrees)
+        return _bucketed_from_csr_arrays(
+            indptr, indices, degrees,
+            min_width=8, bucket_factor=bucket_factor, name=name,
         )
     g = CSRGraph(
         indptr=indptr,
@@ -564,9 +632,7 @@ def _csr_graph_from_arrays(
         name=name,
     )
     g.validate()
-    if layout == "dense":
-        return g.to_dense()
-    return g.to_bucketed() if layout == "bucketed" else g
+    return g.to_dense() if layout == "dense" else g
 
 
 # ---------------------------------------------------------------------------
@@ -574,22 +640,33 @@ def _csr_graph_from_arrays(
 # ---------------------------------------------------------------------------
 
 
-def ring(n: int, layout: str = "dense"):
+def ring(n: int, layout: str = "dense", bucket_factor: int = 2):
     """Ring of n nodes — the paper's canonical entrapment topology (Fig 2a)."""
     if n < 3:
         raise ValueError("ring needs n >= 3")
     idx = np.arange(n, dtype=np.int64)
-    return from_edges(n, idx, (idx + 1) % n, name=f"ring({n})", layout=layout)
+    return from_edges(
+        n, idx, (idx + 1) % n, name=f"ring({n})", layout=layout,
+        bucket_factor=bucket_factor,
+    )
 
 
-def grid2d(rows: int, cols: Optional[int] = None, layout: str = "dense"):
+def grid2d(
+    rows: int,
+    cols: Optional[int] = None,
+    layout: str = "dense",
+    bucket_factor: int = 2,
+):
     """2-D grid (paper Fig 5a uses ~1000 nodes)."""
     cols = cols or rows
     n = rows * cols
     ids = np.arange(n, dtype=np.int64).reshape(rows, cols)
     src = np.concatenate([ids[:, :-1].ravel(), ids[:-1, :].ravel()])
     dst = np.concatenate([ids[:, 1:].ravel(), ids[1:, :].ravel()])
-    return from_edges(n, src, dst, name=f"grid2d({rows}x{cols})", layout=layout)
+    return from_edges(
+        n, src, dst, name=f"grid2d({rows}x{cols})", layout=layout,
+        bucket_factor=bucket_factor,
+    )
 
 
 def watts_strogatz(n: int, k: int, p: float, seed: int = 0) -> Graph:
@@ -678,7 +755,10 @@ def expander(n: int, d: int = 6, seed: int = 0) -> Graph:
 # ---------------------------------------------------------------------------
 
 
-def barabasi_albert(n: int, m: int, seed: int = 0, layout: str = "dense"):
+def barabasi_albert(
+    n: int, m: int, seed: int = 0, layout: str = "dense",
+    bucket_factor: int = 2,
+):
     """Barabasi-Albert preferential attachment: hubs = degree-bias traps.
 
     Each new node attaches to ``m`` distinct existing nodes chosen with
@@ -711,6 +791,7 @@ def barabasi_albert(n: int, m: int, seed: int = 0, layout: str = "dense"):
         np.asarray(dst, np.int64),
         name=f"ba({n},{m})",
         layout=layout,
+        bucket_factor=bucket_factor,
     )
 
 
@@ -747,6 +828,7 @@ def sbm(
     p_out: float,
     seed: int = 0,
     layout: str = "dense",
+    bucket_factor: int = 2,
 ):
     """Stochastic block model with tunable inter-cluster bottlenecks.
 
@@ -795,11 +877,17 @@ def sbm(
         # constructor; the arrays are then reused, not recomputed
         indptr, indices, degrees = _edges_to_csr(n, src, dst)
         if _csr_is_connected(indptr, indices):
-            return _csr_graph_from_arrays(indptr, indices, degrees, name, layout)
+            return _csr_graph_from_arrays(
+                indptr, indices, degrees, name, layout,
+                bucket_factor=bucket_factor,
+            )
     raise RuntimeError(f"could not sample a connected {name} in 64 tries")
 
 
-def dumbbell(clique_n: int, path_len: int = 1, layout: str = "dense"):
+def dumbbell(
+    clique_n: int, path_len: int = 1, layout: str = "dense",
+    bucket_factor: int = 2,
+):
     """Two ``clique_n``-cliques joined by a ``path_len``-node path.
 
     The textbook worst case for random-walk escape times: the bridge is a
@@ -820,11 +908,15 @@ def dumbbell(clique_n: int, path_len: int = 1, layout: str = "dense"):
     src = np.concatenate([iu, iu + off_b, chain[:-1]])
     dst = np.concatenate([ju, ju + off_b, chain[1:]])
     return from_edges(
-        n, src, dst, name=f"dumbbell({clique_n},{path_len})", layout=layout
+        n, src, dst, name=f"dumbbell({clique_n},{path_len})", layout=layout,
+        bucket_factor=bucket_factor,
     )
 
 
-def lollipop(clique_n: int, path_len: int, layout: str = "dense"):
+def lollipop(
+    clique_n: int, path_len: int, layout: str = "dense",
+    bucket_factor: int = 2,
+):
     """A ``clique_n``-clique with a ``path_len``-node path hanging off it.
 
     Maximizes hitting time clique -> path tip (the classical Theta(n^3)
@@ -840,5 +932,6 @@ def lollipop(clique_n: int, path_len: int, layout: str = "dense"):
     src = np.concatenate([iu, chain[:-1]])
     dst = np.concatenate([ju, chain[1:]])
     return from_edges(
-        n, src, dst, name=f"lollipop({clique_n},{path_len})", layout=layout
+        n, src, dst, name=f"lollipop({clique_n},{path_len})", layout=layout,
+        bucket_factor=bucket_factor,
     )

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 from typing import Iterator
 
-import numpy as np
 
 from repro.data.lm_data import NodeTokenData
 

@@ -118,7 +118,9 @@ def flash_attention(
     num_kb = t_pad // block_k
     grid = (b, n, s_pad // block_q, num_kb)
 
-    kv_index = lambda bi, ni, qi, ki: (bi, ni * kh // n, ki, 0)
+    def kv_index(bi, ni, qi, ki):
+        return (bi, ni * kh // n, ki, 0)
+
     out = pl.pallas_call(
         functools.partial(
             _kernel, scale=scale, causal=causal, window=window,

@@ -69,6 +69,7 @@ from repro.core.engine import (
     U_MH,
     combine_bucketed,
     num_uniforms,
+    scatter_compacted,
 )
 from repro.core.levy import trunc_geom_icdf
 
@@ -76,6 +77,7 @@ __all__ = [
     "walk_transition",
     "walk_transition_sparse",
     "walk_transition_bucketed",
+    "walk_transition_bucketed_compacted",
 ]
 
 
@@ -143,7 +145,10 @@ def walk_transition(
         nodes = jnp.pad(nodes, (0, w_pad - w))
         uniforms = jnp.pad(uniforms, ((0, w_pad - w), (0, 0)))
     grid = (w_pad // bw,)
-    table = lambda i: (0, 0)
+
+    def table(i):
+        return (0, 0)
+
     next_nodes, hops = pl.pallas_call(
         functools.partial(
             _kernel, p_d=p_d, r=r, block_w=bw, max_deg=max_deg
@@ -262,5 +267,45 @@ def walk_transition_bucketed(
                 rows, tiles, u_mh, block_w=block_w, interpret=interpret
             )
             for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
+        ],
+    )
+
+
+def walk_transition_bucketed_compacted(
+    rows_by_bucket,  # tuple of (cap_b, width_b) float32 compacted P_IS tiles
+    tiles_by_bucket,  # tuple of (cap_b, width_b) int32 compacted neighbor tiles
+    u_by_bucket,  # tuple of (cap_b,) float32 — U_MH uniform per lane
+    walk_idx_by_bucket,  # tuple of (cap_b,) int32 — original walk index
+    valid_by_bucket,  # tuple of (cap_b,) bool — lane holds a real walk
+    num_walks: int,
+    *,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """MH-IS move over *compacted* per-bucket tiles (the fast bucketed path).
+
+    The engine's compaction pass (``engine.compact_plan`` +
+    ``engine.bucket_capacities``) has already sorted the W walks by bucket
+    id and gathered each bucket's walks into a ``[cap_b, width_b]`` tile,
+    so — unlike :func:`walk_transition_bucketed` — each
+    :func:`walk_transition_sparse` launch pays for the bucket's own walks
+    only, not all W.  Results scatter back to original walk order through
+    ``engine.scatter_compacted`` (capacity-slop lanes dropped), keeping
+    the merge rule in exactly one place.  Per-lane arithmetic is the same
+    CDF inversion over the same tile row and uniform, so outputs are
+    bitwise-equal to the uncompacted dispatch per key.  Returns ``v_mh``
+    ``(num_walks,)`` int32.
+    """
+    return scatter_compacted(
+        num_walks,
+        walk_idx_by_bucket,
+        valid_by_bucket,
+        [
+            walk_transition_sparse(
+                rows, tiles, u_b, block_w=block_w, interpret=interpret
+            )
+            for rows, tiles, u_b in zip(
+                rows_by_bucket, tiles_by_bucket, u_by_bucket
+            )
         ],
     )

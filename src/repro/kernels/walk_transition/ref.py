@@ -12,6 +12,7 @@ from repro.core.engine import (
     combine_bucketed,
     mh_cdf_invert,
     mhlj_transition_math,
+    scatter_compacted,
 )
 
 
@@ -53,5 +54,29 @@ def walk_transition_bucketed_ref(
         [
             mh_cdf_invert(rows, tiles, u_mh)
             for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
+        ],
+    )
+
+
+def walk_transition_bucketed_compacted_ref(
+    rows_by_bucket,
+    tiles_by_bucket,
+    u_by_bucket,
+    walk_idx_by_bucket,
+    valid_by_bucket,
+    num_walks: int,
+) -> jnp.ndarray:
+    """Same contract as ``kernel.walk_transition_bucketed_compacted``: the
+    engine's CDF inversion over each compacted ``[cap_b, width_b]`` tile,
+    merged back to walk order by ``engine.scatter_compacted``."""
+    return scatter_compacted(
+        num_walks,
+        walk_idx_by_bucket,
+        valid_by_bucket,
+        [
+            mh_cdf_invert(rows, tiles, u_b)
+            for rows, tiles, u_b in zip(
+                rows_by_bucket, tiles_by_bucket, u_by_bucket
+            )
         ],
     )

@@ -133,9 +133,12 @@ def build_encdec_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
         self_cache = attn_mod.init_kv_cache(
             batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
         )
-        stack = lambda t: jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), t
-        )
+        def stack(t):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape),
+                t,
+            )
+
         if params is not None and frames is not None:
             memory = encode(params, frames)
             cross = jax.vmap(

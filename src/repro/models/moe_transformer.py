@@ -144,9 +144,12 @@ def build_moe_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
 
     def init_cache(batch_size: int, cache_len: int):
         window = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
-        one = lambda: attn_mod.init_kv_cache(
-            batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
-        )
+        def one():
+            return attn_mod.init_kv_cache(
+                batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim,
+                dtype,
+            )
+
         cache = {
             "moe_layers": jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x[None], (n_moe,) + x.shape), one()

@@ -7,7 +7,6 @@ Covers assigned archs: deepseek-7b, deepseek-67b, minitron-8b, qwen2.5-32b
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -122,9 +121,12 @@ def build_dense_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
 
     def init_cache(batch_size: int, cache_len: int):
         window = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
-        one = lambda: attn_mod.init_kv_cache(
-            batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
-        )
+        def one():
+            return attn_mod.init_kv_cache(
+                batch_size, window, cfg.num_kv_heads, cfg.resolved_head_dim,
+                dtype,
+            )
+
         return {
             "layers": jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape),

@@ -9,7 +9,7 @@ transformations produce the final negative-lr-scaled step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

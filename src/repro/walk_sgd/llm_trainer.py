@@ -19,7 +19,7 @@ of truth for Algorithm 1 (live Eq.-7 rows via ``engine.p_is_rows``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence, Union
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -179,18 +179,22 @@ def run_rw_sgd(
     x0: Optional[np.ndarray] = None,
     v0: int = 0,
     seed: int = 0,
+    engine_kwargs: Optional[dict] = None,
 ) -> RWSGDResult:
     """Run one RW-SGD training; returns the Fig-3 style MSE trace.
 
     ``graph`` may be a dense ``Graph``, an O(E) ``CSRGraph`` or a
-    degree-bucketed ``BucketedCSRGraph``.
+    degree-bucketed ``BucketedCSRGraph``.  ``engine_kwargs`` forwards
+    extra knobs to :meth:`WalkEngine.from_graph` (e.g. ``compact`` /
+    ``capacity_factor`` for the bucketed layout's per-step walk
+    compaction, or ``block_w``).
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )
     engine = WalkEngine.from_graph(
         graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
-        row_probs=row_probs, backend="scan",
+        row_probs=row_probs, backend="scan", **(engine_kwargs or {}),
     )
     grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
@@ -310,6 +314,7 @@ def run_rw_sgd_multi(
     v0s: Optional[Sequence[int]] = None,
     avg_every: int = 0,
     seed: int = 0,
+    engine_kwargs: Optional[dict] = None,
 ) -> MultiRWSGDResult:
     """W parallel RW-SGD trainings sharing one batched engine transition.
 
@@ -317,13 +322,16 @@ def run_rw_sgd_multi(
     across walks every that many updates (local-SGD style).  All W
     transitions per step are sampled by a single ``WalkEngine.step`` call —
     the Pallas kernel on TPU — instead of W independent scans.
+    ``engine_kwargs`` forwards extra knobs to
+    :meth:`WalkEngine.from_graph` (bucketed compaction, ``block_w``, a
+    backend override, …).
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )
     engine = WalkEngine.from_graph(
         graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
-        row_probs=row_probs, backend="auto",
+        row_probs=row_probs, backend="auto", **(engine_kwargs or {}),
     )
 
     if v0s is None:

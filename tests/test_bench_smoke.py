@@ -5,9 +5,14 @@ module must satisfy the harness contract (NAME / PAPER_CLAIM / run) and the
 modules with a smoke tier (fig5_sparse_graphs, large_graph_walk) must
 actually execute at toy sizes.  The large-graph tier must take real walk
 steps through EVERY registered engine layout (``repro.core.engine.LAYOUTS``)
-so a rotted layout — not just the default one — fails tier 1 here instead
-of rotting until someone runs the full suite.
+plus the compacted bucketed dispatch, so a rotted path — not just the
+default one — fails tier 1 here instead of rotting until someone runs the
+full suite.  The same smoke run's steps/sec then feed
+``benchmarks/check_regression.py`` against the committed baseline in
+``results/BENCH_large_graph.json`` — so an order-of-magnitude step-time
+regression fails tier 1 too, not just a correctness break.
 """
+import json
 import os
 import subprocess
 import sys
@@ -17,15 +22,20 @@ from repro.core.engine import LAYOUTS
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def test_benchmarks_smoke_tier_passes():
+def _env():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
+    return env
+
+
+def test_benchmarks_smoke_tier_passes(tmp_path):
+    json_path = str(tmp_path / "smoke.json")
     proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        [sys.executable, "-m", "benchmarks.run", "--smoke", "--json", json_path],
         cwd=REPO,
-        env=env,
+        env=_env(),
         capture_output=True,
         text=True,
         timeout=540,
@@ -39,8 +49,36 @@ def test_benchmarks_smoke_tier_passes():
     assert "large_graph_walk[smoke]" in out
     assert "fig5_sparse_graphs[smoke]" in out
     assert "FAILED" not in out
-    # every registered engine layout must have taken real walk steps
-    for layout in LAYOUTS:
+    # every registered engine layout + the compacted bucketed dispatch must
+    # have taken real walk steps
+    for layout in tuple(LAYOUTS) + ("bucketed_compact",):
         assert f"_{layout}_steps_per_sec" in out, (
             f"layout {layout!r} was not exercised by the smoke tier"
         )
+    # the --json dump (the regression gate's input) must carry the numbers
+    with open(json_path) as f:
+        derived = json.load(f)
+    assert any(
+        k.endswith("_steps_per_sec")
+        for k in derived.get("large_graph_walk", {})
+    )
+
+    # step-time regression gate: fresh smoke numbers vs the committed
+    # baseline (generous 2.5x tolerance — catches rot, not noise)
+    check = subprocess.run(
+        [
+            sys.executable,
+            os.path.join("benchmarks", "check_regression.py"),
+            "--fresh", json_path,
+        ],
+        cwd=REPO,
+        env=_env(),
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert check.returncode == 0, (
+        f"check_regression failed (rc={check.returncode})\n"
+        f"stdout:\n{check.stdout}\nstderr:\n{check.stderr}"
+    )
+    assert "no step-time regressions" in check.stdout

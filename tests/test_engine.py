@@ -161,3 +161,32 @@ def test_live_rows_match_dense_p_is(setup):
     for v in range(g.n):
         np.add.at(scattered[v], nbrs_np[v], live[v])
     np.testing.assert_allclose(scattered, dense, atol=2e-6)
+
+
+def test_backend_env_var_overrides_auto(setup, monkeypatch):
+    """REPRO_BACKEND pins backend="auto" resolution (the CI matrix knob);
+    explicit backends ignore it, bogus values fall through to the default."""
+    from repro.core.engine import BACKEND_ENV_VAR
+
+    g, lips, params, rp = setup
+    eng = WalkEngine.from_graph(g, params, row_probs=rp, backend="auto")
+    monkeypatch.setenv(BACKEND_ENV_VAR, "pallas")
+    assert eng.resolved_backend == "pallas"
+    monkeypatch.setenv(BACKEND_ENV_VAR, "scan")
+    assert eng.resolved_backend == "scan"
+    monkeypatch.setenv(BACKEND_ENV_VAR, "nonsense")
+    assert eng.resolved_backend in ("scan", "pallas")  # platform default
+    # explicit backend wins regardless of the env var
+    monkeypatch.setenv(BACKEND_ENV_VAR, "pallas")
+    explicit = WalkEngine.from_graph(g, params, row_probs=rp, backend="scan")
+    assert explicit.resolved_backend == "scan"
+    # and the env-pinned engine still samples the same law, bitwise
+    nodes = jnp.arange(16, dtype=jnp.int32) % g.n
+    key = jax.random.PRNGKey(0)
+    n_env, h_env = eng.step(key, nodes)
+    monkeypatch.delenv(BACKEND_ENV_VAR)
+    n_ref, h_ref = WalkEngine.from_graph(
+        g, params, row_probs=rp, backend="pallas"
+    ).step(key, nodes)
+    np.testing.assert_array_equal(np.asarray(n_env), np.asarray(n_ref))
+    np.testing.assert_array_equal(np.asarray(h_env), np.asarray(h_ref))

@@ -6,7 +6,6 @@ import pytest
 from repro.core import (
     MHLJParams,
     complete,
-    expander,
     grid2d,
     mh_importance,
     mh_uniform,

@@ -260,6 +260,57 @@ def test_from_edges_bucketed_layout():
     assert bg.to_bucketed() is bg  # identity normalization
 
 
+@pytest.mark.parametrize("bucket_factor", [2, 4])
+def test_bucket_factor_ladder(bucket_factor):
+    """The width ladder is geometric in bucket_factor (clamped to
+    max_degree), every member degree fits its bucket minimally, and the
+    bounded-memory from_edges path agrees exactly with to_bucketed()."""
+    csr = graphs.barabasi_albert(150, 3, seed=4, layout="csr")
+    bg = csr.to_bucketed(bucket_factor=bucket_factor)
+    bg.validate()
+    assert bg.bucket_factor == bucket_factor
+    widths = bg.bucket_widths
+    # geometric ladder: every rung but the (clamped) top is min_width·f^k
+    for w in widths[:-1]:
+        k = 0
+        while 8 * bucket_factor**k < w:
+            k += 1
+        assert w == 8 * bucket_factor**k
+    assert widths[-1] <= csr.max_degree
+    deg = csr.degrees.astype(np.int64)
+    for b_id, b in enumerate(bg.buckets):
+        assert (deg[b.node_ids] <= b.width).all()
+        if b_id > 0:
+            assert (deg[b.node_ids] > bg.buckets[b_id - 1].width).all()
+        np.testing.assert_array_equal(
+            b.neighbors, csr.neighbors[b.node_ids][:, : b.width]
+        )
+    # bounded-memory construction (never builds the padded table) matches
+    direct = graphs.barabasi_albert(
+        150, 3, seed=4, layout="bucketed", bucket_factor=bucket_factor
+    )
+    assert direct.bucket_widths == widths
+    np.testing.assert_array_equal(direct.node_bucket, bg.node_bucket)
+    np.testing.assert_array_equal(direct.node_slot, bg.node_slot)
+    for a, b in zip(direct.buckets, bg.buckets):
+        np.testing.assert_array_equal(a.neighbors, b.neighbors)
+    # round-trip back to CSR is exact regardless of the ladder
+    np.testing.assert_array_equal(bg.to_csr().neighbors, csr.neighbors)
+
+
+def test_to_bucketed_rebuckets_on_factor_mismatch():
+    """to_bucketed() is the identity at the stored ladder and a bounded-
+    memory re-bucket when a different ladder is requested."""
+    bg = graphs.barabasi_albert(100, 3, seed=0, layout="bucketed")
+    assert bg.to_bucketed() is bg
+    coarse = bg.to_bucketed(bucket_factor=4)
+    assert coarse is not bg
+    coarse.validate()
+    assert coarse.bucket_factor == 4
+    assert len(coarse.buckets) <= len(bg.buckets)
+    np.testing.assert_array_equal(coarse.indices, bg.indices)
+
+
 def test_bucketed_validate_catches_corruption():
     bg = graphs.barabasi_albert(40, 3, seed=0, layout="bucketed")
     import dataclasses as dc

@@ -1,7 +1,6 @@
 """Loop-aware HLO cost model validation (the roofline source of truth)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.utils.hlo_cost import price_module

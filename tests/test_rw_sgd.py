@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core import MHLJParams, complete, ring
-from repro.core import schedules
 from repro.data import make_heterogeneous_regression, make_homogeneous_regression
 from repro.walk_sgd import comm_report, run_rw_sgd
 

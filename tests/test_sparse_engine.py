@@ -16,6 +16,12 @@ Four claims:
 4. The sparse and bucketed layouts are genuinely O(E)-resident: the full
    (n, max_deg) row table is never materialized on the live-rows path, and
    the bucketed engine carries no full-width tensor at all.
+5. Per-step walk compaction (the fast bucketed dispatch: walks sorted by
+   bucket id, tile passes at static capacity, overflow -> full-dispatch
+   fallback) never changes a sampled walk — bitwise parity with
+   layout="sparse" at adversarial shapes: W not a block_w multiple, all
+   walks in one bucket, empty buckets, capacity overflow, and both
+   bucket_factor ladders.
 """
 import jax
 import jax.numpy as jnp
@@ -256,6 +262,177 @@ def test_bucketed_run_matches_sparse_run():
     )
     np.testing.assert_array_equal(np.asarray(n_sp), np.asarray(n_bk))
     np.testing.assert_array_equal(np.asarray(h_sp), np.asarray(h_bk))
+
+
+# ---------------------------------------------------------------------------
+# Per-step walk compaction (the fast bucketed dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _parity_vs_sparse(csr, params, rp, nodes, key, **bucketed_kwargs):
+    """Assert the bucketed engine (scan + pallas) matches layout='sparse'
+    bitwise for this key/node set under the given compaction knobs."""
+    ref_n, ref_h = _engine(csr, params, rp, "scan").step(key, nodes)
+    for backend in ("scan", "pallas"):
+        eng = WalkEngine.from_graph(
+            csr, params, row_probs=rp, backend=backend, layout="bucketed",
+            **bucketed_kwargs,
+        )
+        n2, h2 = eng.step(key, nodes)
+        np.testing.assert_array_equal(np.asarray(ref_n), np.asarray(n2))
+        np.testing.assert_array_equal(np.asarray(ref_h), np.asarray(h2))
+        yield eng
+
+
+def test_compacted_parity_w_not_block_multiple(setup):
+    """Compacted dispatch at W values that are not block_w multiples (and
+    bucket capacities that are not block multiples either) stays bitwise
+    equal to layout='sparse' on the hub-heavy BA graph."""
+    _, csr, _, params, rp = setup
+    for w, block_w, seed in ((37, 16, 0), (300, 128, 1), (129, 64, 2)):
+        key = jax.random.PRNGKey(seed)
+        nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+        for eng in _parity_vs_sparse(
+            csr, params, rp, nodes, key, block_w=block_w, compact=True
+        ):
+            assert eng.compact
+
+
+@pytest.mark.parametrize("bucket_factor", [2, 4])
+def test_compacted_parity_bucket_factor(setup, bucket_factor):
+    """Both width ladders (factor 2 and 4) sample identical walks."""
+    _, csr, _, params, rp = setup
+    key = jax.random.PRNGKey(5)
+    nodes = jnp.arange(200, dtype=jnp.int32) % csr.n
+    list(
+        _parity_vs_sparse(
+            csr, params, rp, nodes, key,
+            compact=True, bucket_factor=bucket_factor,
+        )
+    )
+
+
+def test_compacted_all_walks_in_one_bucket(setup):
+    """Every walk on the same node: one bucket holds all W walks (its
+    capacity clamps to W, the node-share rule would have given far less),
+    every other bucket runs an all-slop pass — results still bitwise."""
+    _, csr, _, params, rp = setup
+    from repro.core import bucket_capacities, compact_plan
+
+    nodes = jnp.full((160,), 5, jnp.int32)  # the trap node, all walks
+    key = jax.random.PRNGKey(7)
+    for eng in _parity_vs_sparse(csr, params, rp, nodes, key, compact=True):
+        caps = bucket_capacities(160, eng.bucket_share, eng.capacity_factor)
+        bid = eng.node_bucket[nodes]
+        _, _, counts = compact_plan(bid, len(caps))
+        counts = np.asarray(counts)
+        occupied = np.nonzero(counts)[0]
+        assert occupied.size == 1  # genuinely one bucket in play
+        assert counts[occupied[0]] == 160
+        # ... which means the step only stays compacted if that bucket's
+        # capacity clamped up to W; otherwise the fallback ran — either
+        # way parity held above.  Assert the empty buckets were real:
+        assert (counts[counts == 0].size) == len(caps) - 1
+
+
+def test_compacted_empty_bucket(setup):
+    """Walks placed so at least one bucket is empty (count 0): its pass is
+    all capacity slop and scatter_compacted must drop every lane."""
+    _, csr, _, params, rp = setup
+    from repro.core import compact_plan
+
+    # walks only on low-degree nodes: hub buckets stay empty
+    deg = np.asarray(csr.degrees)
+    low = np.nonzero(deg <= np.median(deg))[0][:64]
+    nodes = jnp.asarray(np.resize(low, 100), jnp.int32)
+    key = jax.random.PRNGKey(11)
+    for eng in _parity_vs_sparse(csr, params, rp, nodes, key, compact=True):
+        _, _, counts = compact_plan(
+            eng.node_bucket[nodes], len(eng.bucket_neighbors)
+        )
+        assert (np.asarray(counts) == 0).any()  # an empty bucket existed
+
+
+def test_compacted_capacity_overflow_falls_back(setup):
+    """A capacity_factor so small that counts exceed caps must trigger the
+    uncompacted fallback — verified both by the plan arithmetic and by the
+    step staying bitwise-identical to layout='sparse'."""
+    _, csr, _, params, rp = setup
+    from repro.core import bucket_capacities, compact_plan
+
+    w = 300
+    nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+    key = jax.random.PRNGKey(13)
+    engines = list(
+        _parity_vs_sparse(
+            csr, params, rp, nodes, key, compact=True, capacity_factor=1e-6
+        )
+    )
+    eng = engines[0]
+    # min_cap floors every capacity at 32 < the dominant bucket's count,
+    # so this step overflowed and lax.cond took the full-dispatch branch
+    caps = np.asarray(
+        bucket_capacities(w, eng.bucket_share, eng.capacity_factor)
+    )
+    _, _, counts = compact_plan(eng.node_bucket[nodes], len(caps))
+    assert (np.asarray(counts) > caps).any()
+
+
+def test_compacted_run_matches_uncompacted_run(setup):
+    """Whole trajectories: compaction changes the schedule of per-bucket
+    work, never the sampled walk — engine.run agrees bitwise with both the
+    uncompacted bucketed engine and the sparse layout."""
+    _, csr, _, params, rp = setup
+    v0s = jnp.arange(24, dtype=jnp.int32) % csr.n
+    key = jax.random.PRNGKey(17)
+    n_sp, h_sp = _engine(csr, params, rp, "pallas", layout="sparse").run(
+        key, v0s, 60
+    )
+    for compact in (False, True):
+        eng = WalkEngine.from_graph(
+            csr, params, row_probs=rp, backend="pallas", layout="bucketed",
+            compact=compact,
+        )
+        n_bk, h_bk = eng.run(key, v0s, 60)
+        np.testing.assert_array_equal(np.asarray(n_sp), np.asarray(n_bk))
+        np.testing.assert_array_equal(np.asarray(h_sp), np.asarray(h_bk))
+
+
+def test_compacted_kernel_oracle_parity(setup):
+    """The Pallas compacted dispatch and its ref oracle agree bitwise on
+    hand-built compacted tiles, including dropped slop lanes."""
+    from repro.core import bucket_capacities, compact_plan
+    from repro.kernels.walk_transition.kernel import (
+        walk_transition_bucketed_compacted,
+    )
+    from repro.kernels.walk_transition.ref import (
+        walk_transition_bucketed_compacted_ref,
+    )
+
+    _, csr, _, params, rp = setup
+    eng = WalkEngine.from_graph(
+        csr, params, row_probs=rp, backend="scan", layout="bucketed"
+    )
+    w = 75
+    nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+    u_mh = jax.random.uniform(jax.random.PRNGKey(3), (w,))
+    caps = bucket_capacities(w, eng.bucket_share, eng.capacity_factor)
+    order, starts, counts = compact_plan(
+        eng.node_bucket[nodes], len(caps)
+    )
+    # the engine's own gather convention — the same helper step() uses, so
+    # this parity check cannot drift from the production gather
+    widx_by, valid_by, rows_by, tiles_by, u_by = (
+        eng.compacted_bucket_inputs(nodes, u_mh, caps, order, starts, counts)
+    )
+    got = walk_transition_bucketed_compacted(
+        rows_by, tiles_by, u_by, widx_by, valid_by, w,
+        block_w=16, interpret=True,
+    )
+    want = walk_transition_bucketed_compacted_ref(
+        rows_by, tiles_by, u_by, widx_by, valid_by, w
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_pure_csr_graph_end_to_end():

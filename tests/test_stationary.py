@@ -22,7 +22,6 @@ import pytest
 from repro.core import (
     MHLJParams,
     dumbbell,
-    mh_uniform,
     mhlj,
     mixing,
     ring,

@@ -14,7 +14,7 @@ from repro.launch.serve import Request, ServeEngine
 from repro.launch.train import run_training
 from repro.models.factory import build_model
 from repro.utils import checkpoint as ckpt
-from repro.walk_sgd.llm_trainer import WalkContext, init_walk_state, make_train_step
+from repro.walk_sgd.llm_trainer import WalkContext, init_walk_state
 from repro.walk_sgd.multi_walk import (
     average_params,
     init_multi_walk_state,

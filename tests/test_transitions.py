@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     MHLJParams,
     erdos_renyi,
-    expander,
     grid2d,
     levy_matrix,
     levy_matrix_chained,
