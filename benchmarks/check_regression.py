@@ -25,10 +25,13 @@ tolerance (2.5x) is deliberately generous: smoke sizes are tiny and even
 same-machine ratios jitter, so this gate catches order-of-magnitude rot
 (a layout losing its kernel path, an accidental O(W·n) gather), not
 percent-level drift — the full sweep in ``docs/benchmarks.md`` is the
-precision instrument.  Only keys present in both the baseline and the
-fresh run are compared, so adding or removing a swept configuration does
-not break the gate; refresh the committed baseline with ``--update``
-after intentional perf changes (it is force-committed past the
+precision instrument.  *New* configurations in the fresh run are ignored
+until ``--update`` adopts them into the baseline, but a configuration the
+baseline knows that the fresh run no longer sweeps — a layout silently
+dropped from the sweep, exactly the rot this gate exists for — is a loud
+failure with the missing key named, never a silent skip (and never a bare
+``KeyError``).  Refresh the committed baseline with ``--update`` after
+intentional perf or sweep changes (it is force-committed past the
 ``results/`` scratch ignore, see .gitignore).
 """
 from __future__ import annotations
@@ -87,8 +90,11 @@ def normalized_ratios(derived: dict) -> dict:
 
 
 def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
-    """Drift messages for every shared normalized ratio that moved by more
-    than ``tolerance`` in either direction; empty list == gate passes."""
+    """Drift messages for every baseline normalized ratio: moved by more
+    than ``tolerance`` in either direction, or missing from the fresh run
+    entirely (a configuration the baseline knows was silently dropped from
+    the sweep — the exact rot this gate guards).  Empty list == gate
+    passes; new fresh-only configurations are ignored until ``--update``."""
     problems = []
     for module, base_derived in baseline.items():
         base_norm = normalized_ratios(base_derived)
@@ -96,7 +102,13 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
         for key, base_ratio in base_norm.items():
             fresh_ratio = fresh_norm.get(key)
             if fresh_ratio is None:
-                continue  # configuration no longer swept
+                problems.append(
+                    f"{module}:{key}: configuration in the committed "
+                    "baseline but absent from the fresh smoke run — a "
+                    "swept layout was dropped; if intentional, refresh "
+                    "with --update"
+                )
+                continue
             drift = max(base_ratio / fresh_ratio, fresh_ratio / base_ratio)
             if drift > tolerance:
                 problems.append(

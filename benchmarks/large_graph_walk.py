@@ -2,38 +2,47 @@
 
 Sweeps batched MHLJ walks over trap-prone CSR topologies up to 1M nodes
 and records steps/sec **per engine configuration**: the padded-CSR sparse
-layout (rows padded to the global ``max_deg``) against the degree-bucketed
-ragged layout, the latter both *uncompacted* (every per-bucket pass runs
-all W walks) and *compacted* (walks sorted by bucket id per step, each
-bucket's tile pass running at its static capacity — the
-``engine.bucket_capacities`` rule).  On hub-heavy families
-(Barabási–Albert) the padded layout's resident tables cost O(n·max_deg) —
-one degree-~10³ hub inflates every row — while the bucketed layout stays
-O(E + Σ_b n_b·width_b); compaction then removes the bucketed layout's
-step-time penalty, since per-step MH work drops from W·Σ_b width_b to
-Σ_b cap_b·width_b.  The per-run ``resident_table_bytes`` field records
-the memory footprint, and the per-family ``bucketed_table_shrink`` /
-``compaction_step_speedup`` / ``compact_vs_sparse`` deriveds summarize
-both wins (docs/benchmarks.md tells the story).
+layout (rows padded to the global ``max_deg``), the degree-bucketed
+layout — both *uncompacted* (every per-bucket pass runs all W walks) and
+*compacted* (walks sorted by bucket id per step, each bucket's tile pass
+running at its static capacity — the ``engine.bucket_capacities`` rule) —
+and the **ragged true-degree layout** (``layout="ragged"``: one flat
+per-edge CDF, binary-search MH inversion, no ladder and no compaction
+machinery at all).  On hub-heavy families (Barabási–Albert) the padded
+layout's resident tables cost O(n·max_deg) — one degree-~10³ hub inflates
+every row — the bucketed layout stays O(E + Σ_b n_b·width_b), and the
+ragged layout is exactly O(E); compaction removes the bucketed layout's
+step-time penalty (per-step MH work drops from W·Σ_b width_b to
+Σ_b cap_b·width_b), and the ragged layout drops per-walk row work to
+O(log max_deg) outright.  The per-run ``resident_table_bytes`` field
+records the memory footprint, ``compact_overflow_rate`` audits the static
+capacity rule (fraction of steps whose compacted dispatch overflowed and
+fell back — the ``engine.WalkEngine.step`` aux telemetry), and the
+per-family ``bucketed_table_shrink`` / ``compaction_step_speedup`` /
+``compact_vs_sparse`` / ``ragged_vs_sparse`` / ``ragged_vs_compact``
+deriveds summarize the wins (docs/benchmarks.md tells the story).
 
 The full tier additionally runs the ROADMAP's **1M-node Barabási–Albert
 sweep in bounded-memory mode**: the graph is built with
 ``layout="bucketed"`` (the padded ``(n, max_deg)`` table — ~GBs at this
 scale — is never materialized, see ``graphs.from_edges``) and only the
-bucketed engine configurations run, so the whole sweep fits a single
-host.  The BA family also sweeps the ``bucket_factor`` ladder knob
+bucketed + ragged engine configurations run, so the whole sweep fits a
+single host.  The BA family also sweeps the ``bucket_factor`` ladder knob
 (factor 4 = coarser ladder, fewer per-bucket passes, more padding).
 
 Everything on this path is O(E): graphs are built as edge lists
 (``layout="csr"`` / ``layout="bucketed"``, no N×N adjacency ever exists)
 and P_IS rows are the Eq.-7 law computed from local information only.
-The smoke tier sweeps **every registered engine layout**
-(``repro.core.engine.LAYOUTS``, including the dense parity layout) plus
-the compacted bucketed configuration so a rotted path fails tier-1, not
-just the default; its derived steps/sec also feed the CI regression gate
-(``benchmarks/check_regression.py``).  The JSON result lands in
-``results/BENCH_large_graph.json`` (plus the harness's usual
-``bench_large_graph_walk.json``).
+Graph construction time is recorded per family (``construction_sec``,
+also surfaced in ``derived``) so build-path regressions — e.g. the
+vectorized Batagelj-style ``barabasi_albert`` sampler rotting back to a
+per-node loop — are visible in the JSON.  The smoke tier sweeps **every
+registered engine layout** (``repro.core.engine.LAYOUTS``, including the
+dense parity layout) plus the compacted bucketed configuration so a
+rotted path fails tier-1, not just the default; its derived steps/sec
+also feed the CI regression gate (``benchmarks/check_regression.py``).
+The JSON result lands in ``results/BENCH_large_graph.json`` (plus the
+harness's usual ``bench_large_graph_walk.json``).
 """
 from __future__ import annotations
 
@@ -54,9 +63,11 @@ PAPER_CLAIM = (
     "Scale (beyond-paper): the sparse CSR engine sweeps MHLJ walks over "
     "trap-prone graphs up to 1M nodes in O(E) memory, the degree-bucketed "
     "layout removes the O(n·max_deg) padded-table wall on hub-heavy "
-    "topologies, and per-step walk compaction removes the bucketed "
-    "layout's step-time penalty — no dense N×N transition table is ever "
-    "materialized."
+    "topologies, per-step walk compaction removes the bucketed layout's "
+    "step-time penalty, and the ragged true-degree layout drops the "
+    "bucket ladder entirely (flat per-edge CDF, O(log max_deg) MH "
+    "inversion, exactly-O(E) resident state) — no dense N×N transition "
+    "table is ever materialized."
 )
 
 PARAMS = MHLJParams(p_j=0.1, p_d=0.5, r=3)
@@ -71,6 +82,7 @@ CONFIGS = {
     "bucketed_compact": dict(layout="bucketed", compact=True),
     "bucketed_compact_f4": dict(layout="bucketed", compact=True,
                                 bucket_factor=4),
+    "ragged": dict(layout="ragged"),
 }
 
 
@@ -81,9 +93,9 @@ def _families(scale: str):
     1M BA entry is bucketed-only (bounded-memory mode: its builder
     returns a ``BucketedCSRGraph`` and the padded table never exists).
     """
-    base = ("sparse", "bucketed", "bucketed_compact")
+    base = ("sparse", "bucketed", "bucketed_compact", "ragged")
     ba = base + ("bucketed_compact_f4",)
-    bounded = ("bucketed", "bucketed_compact")
+    bounded = ("bucketed", "bucketed_compact", "ragged")
     if scale == "smoke":
         # every registered layout + the compacted bucketed path (anti-rot)
         labels = tuple(LAYOUTS) + ("bucketed_compact",)
@@ -124,7 +136,8 @@ def _resident_table_bytes(engine: WalkEngine) -> int:
     bucketed layout shrinks); degrees/uniform plumbing are common to all."""
     total = int(engine.degrees.nbytes)
     for field in (engine.neighbors, engine.row_probs, engine.indptr,
-                  engine.indices, engine.node_bucket, engine.node_slot):
+                  engine.indices, engine.node_bucket, engine.node_slot,
+                  engine.edge_cdf):
         if field is not None:
             total += int(field.nbytes)
     for group in (engine.bucket_neighbors, engine.bucket_rows):
@@ -152,17 +165,19 @@ def _sweep_one(
     # jit the whole trajectory, exactly like the production consumers
     # (walk_sgd.trainer scans the engine inside one jitted loop) — timing
     # the unjitted path would measure per-call retrace/dispatch overhead,
-    # not the engine
-    run = jax.jit(lambda k, v: engine.run(k, v, num_steps))
-    nodes, hops = run(key, v0s)  # compile + warm
+    # not the engine.  with_aux threads out the per-step compaction
+    # telemetry (overflow flags) at no extra cost on the other layouts.
+    run = jax.jit(lambda k, v: engine.run(k, v, num_steps, with_aux=True))
+    nodes, hops, aux = run(key, v0s)  # compile + warm
     nodes.block_until_ready()
     t0 = time.perf_counter()
-    nodes, hops = run(jax.random.PRNGKey(seed + 1), v0s)
+    nodes, hops, aux = run(jax.random.PRNGKey(seed + 1), v0s)
     nodes.block_until_ready()
     dt = time.perf_counter() - t0
 
     hops_np = np.asarray(hops, np.float64)
     bucketed = layout == "bucketed"
+    compacted = bucketed and bool(engine.compact)
     return {
         "label": label,
         "layout": layout,
@@ -178,6 +193,13 @@ def _sweep_one(
         "num_steps": num_steps,
         "walk_steps_per_sec": float(num_walks * num_steps / dt),
         "transitions_per_update": float(hops_np.mean()),
+        # fraction of steps whose compacted dispatch overflowed a static
+        # bucket capacity and lax.cond fell back to the full-W dispatch —
+        # the audit trail of the engine.bucket_capacities rule
+        "compact_overflow_rate": (
+            float(np.asarray(aux["compact_overflow"], np.float64).mean())
+            if compacted else None
+        ),
         "resident_table_bytes": _resident_table_bytes(engine),
         "csr_bytes": int(graph.indptr.nbytes + graph.indices.nbytes),
         "dense_table_bytes_avoided": int(graph.n) ** 2 * 8,
@@ -200,6 +222,10 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
         graph = build()
         build_s = time.perf_counter() - t0
         fam: dict = {"construction_sec": build_s}
+        # surfaced in derived too, so a build-path regression (e.g. the
+        # vectorized BA sampler rotting back to a per-node loop) is visible
+        # where the smoke/regression tooling looks
+        derived[f"{tag}_construction_sec"] = build_s
         for label in labels:
             fam[label] = _sweep_one(
                 graph, num_walks, num_steps, seed=7, label=label,
@@ -208,6 +234,9 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
             derived[f"{tag}_{label}_steps_per_sec"] = (
                 fam[label]["walk_steps_per_sec"]
             )
+            rate = fam[label].get("compact_overflow_rate")
+            if rate is not None:
+                derived[f"{tag}_{label}_overflow_rate"] = rate
         if "sparse" in fam and "bucketed" in fam:
             fam["bucketed_step_speedup"] = (
                 fam["bucketed"]["walk_steps_per_sec"]
@@ -230,6 +259,20 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
             fam["compact_vs_sparse"] = (
                 fam["bucketed_compact"]["walk_steps_per_sec"]
                 / fam["sparse"]["walk_steps_per_sec"]
+            )
+        if "sparse" in fam and "ragged" in fam:
+            fam["ragged_vs_sparse"] = (
+                fam["ragged"]["walk_steps_per_sec"]
+                / fam["sparse"]["walk_steps_per_sec"]
+            )
+            fam["ragged_table_shrink"] = (
+                fam["sparse"]["resident_table_bytes"]
+                / fam["ragged"]["resident_table_bytes"]
+            )
+        if "bucketed_compact" in fam and "ragged" in fam:
+            fam["ragged_vs_compact"] = (
+                fam["ragged"]["walk_steps_per_sec"]
+                / fam["bucketed_compact"]["walk_steps_per_sec"]
             )
         out[tag] = fam
     out["derived"] = derived

@@ -46,9 +46,20 @@ Backends (identical law, bitwise-identical outputs given the same key):
   results scatter back to walk order (:func:`scatter_compacted`) — so
   per-step MH work is Σ_b cap_b·width_b rather than W·Σ_b width_b, with
   a ``lax.cond`` fallback to the full dispatch on capacity overflow;
-  ``"dense"`` keeps the original full-table-in-VMEM kernel for parity
-  testing at orchestration scale (n <= a few thousand).  The registered
-  layouts live in :data:`LAYOUTS`.
+  ``"ragged"`` is the true-degree layout — resident row state is one flat
+  per-edge CDF buffer aligned with the CSR ``indices`` (exactly O(E), no
+  padded and no per-bucket table), the MH inversion is a binary search of
+  each walk's own CDF segment (:func:`ragged_mh_invert`, O(W·log max_deg)
+  per step instead of O(W·max_deg)), and the pallas path is one fused
+  scalar-prefetch kernel per walk tile
+  (``kernels.walk_transition.walk_transition_ragged``) that performs the
+  inversion, the r-hop Lévy gather and the jump/MH combine in a single
+  pass — no bucket ladder, no compaction argsort/scatter, no overflow
+  ``lax.cond``, and none of the O(W) XLA gather round-trips the other
+  sparse layouts leave between kernel and engine; ``"dense"`` keeps the
+  original full-table-in-VMEM kernel for parity testing at orchestration
+  scale (n <= a few thousand).  The registered layouts live in
+  :data:`LAYOUTS`.
 * ``"auto"``   — pallas on TPU, scan elsewhere; overridable via the
   ``REPRO_BACKEND`` environment variable (:data:`BACKEND_ENV_VAR`), which
   is how the CI matrix forces each backend.  The scan backend also
@@ -80,6 +91,7 @@ from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.levy import trunc_geom_icdf
 
@@ -94,6 +106,8 @@ __all__ = [
     "p_is_rows",
     "p_is_rows_block",
     "mh_cdf_invert",
+    "ragged_edge_cdf",
+    "ragged_mh_invert",
     "combine_bucketed",
     "bucket_capacities",
     "compact_plan",
@@ -110,7 +124,7 @@ U_JUMP, U_MH, U_DIST, U_HOP0 = 0, 1, 2, 3
 # Registered row layouts of the pallas backend.  Anything listed here is
 # exercised by the benchmark anti-rot tier (benchmarks/run.py --smoke), so a
 # new layout cannot silently rot out of tier-1 coverage.
-LAYOUTS = ("sparse", "dense", "bucketed")
+LAYOUTS = ("sparse", "dense", "bucketed", "ragged")
 
 # Environment override for backend="auto": set REPRO_BACKEND=scan|pallas to
 # pin the resolved backend (off-TPU the pallas backend runs interpret mode).
@@ -196,6 +210,140 @@ def mh_cdf_invert(
     )
     idx = jnp.minimum(idx, width - 1)
     return jnp.take_along_axis(neigh_rows, idx[:, None], axis=1)[:, 0]
+
+
+def ragged_edge_cdf(
+    indptr,
+    indices,
+    degrees,
+    *,
+    row_probs=None,
+    lipschitz=None,
+    chunk_rows: Optional[int] = None,
+) -> jnp.ndarray:
+    """THE flat per-edge CDF builder of the ragged layout — (nnz,) float32.
+
+    Entry ``indptr[v] + k`` holds the inclusive CDF prefix of row v at
+    slot k, bit-for-bit equal to ``jnp.cumsum(padded_row)[k]`` — the value
+    :func:`mh_cdf_invert` compares against on the padded layouts.  That
+    exactness is free, not assumed: rows are materialized in bounded-size
+    chunks at the **full** ``max_deg`` width (the identical
+    :func:`p_is_rows_block` / cumsum ops the other layouts run) and the
+    pad columns — exact zeros that never move a CDF prefix — are then
+    dropped by ``graphs.flat_edge_values``.  No O(n·max_deg) array ever
+    exists; transient memory is O(chunk·max_deg) and the resident result
+    is exactly O(E).
+
+    Row source: ``row_probs`` as an (n, max_deg) padded table, a flat
+    (nnz,) probability buffer (``transition.mh_importance_rows_ragged``
+    et al.), or live Eq.-7 rows from a ``lipschitz`` vector.  Host-side
+    only (chunking is a python loop) — the engine builds this once at
+    construction, never per step.
+    """
+    from repro.core.graphs import (
+        _pad_neighbor_lists,
+        _ragged_row_chunks,
+        flat_edge_values,
+    )
+
+    indptr_np = np.asarray(indptr, dtype=np.int64)
+    indices_np = np.asarray(indices)
+    deg_np = np.asarray(degrees, dtype=np.int64)
+    n, nnz, max_deg = deg_np.size, indices_np.shape[0], int(deg_np.max())
+    flat_probs = None
+    if row_probs is not None:
+        rp = np.asarray(row_probs)
+        if rp.ndim == 1:
+            if rp.shape[0] != nnz:
+                raise ValueError(
+                    f"flat row_probs must have nnz={nnz} entries, got "
+                    f"{rp.shape[0]}"
+                )
+            flat_probs = rp.astype(np.float32)
+        elif rp.shape != (n, max_deg):
+            raise ValueError(
+                f"row_probs must be (n, max_deg)=({n}, {max_deg}) or flat "
+                f"(nnz,), got {rp.shape}"
+            )
+    elif lipschitz is None:
+        raise ValueError(
+            "ragged_edge_cdf needs a row source: row_probs (padded table "
+            "or flat buffer) or lipschitz"
+        )
+    if lipschitz is not None and row_probs is None:
+        lips = jnp.asarray(lipschitz, jnp.float32)
+        deg_j = jnp.asarray(deg_np, jnp.int32)
+    out = np.empty(nnz, dtype=np.float32)
+    cols = np.arange(max_deg)
+    for ids in _ragged_row_chunks(n, max_deg, chunk_rows):
+        if flat_probs is not None:
+            rows = np.zeros((ids.size, max_deg), dtype=np.float32)
+            mask = cols[None, :] < deg_np[ids][:, None]
+            rows[mask] = flat_probs[
+                indptr_np[ids[0]] : indptr_np[ids[-1] + 1]
+            ]
+            rows = jnp.asarray(rows)
+        elif row_probs is not None:
+            rows = jnp.asarray(rp[ids])
+        else:
+            nbrs = _pad_neighbor_lists(
+                indptr_np, indices_np, deg_np, node_ids=ids, width=max_deg
+            )
+            rows = p_is_rows_block(
+                jnp.asarray(nbrs),
+                jnp.asarray(ids, jnp.int32),
+                deg_j[ids],
+                deg_j,
+                lips,
+            )
+        cdf = np.asarray(jnp.cumsum(rows, axis=1))
+        out[indptr_np[ids[0]] : indptr_np[ids[-1] + 1]] = flat_edge_values(
+            indptr_np, deg_np, cdf, node_ids=ids
+        )
+    return jnp.asarray(out)
+
+
+def ragged_mh_invert(
+    indptr: jnp.ndarray,  # (n+1,) int32 CSR row pointers
+    degrees: jnp.ndarray,  # (n,) int32
+    indices: jnp.ndarray,  # (nnz,) int32 CSR neighbor ids
+    edge_cdf: jnp.ndarray,  # (nnz,) float32 flat per-edge CDF
+    nodes: jnp.ndarray,  # (W,) int32 current node per walk
+    u_mh: jnp.ndarray,  # (W,) the U_MH uniform per walk
+    *,
+    max_degree: int,
+) -> jnp.ndarray:
+    """THE ragged MH-move inversion: binary-search each walk's own CDF
+    segment at its true degree; returns ``v_mh`` (W,).
+
+    The padded layouts count ``cdf < u · cdf[-1]`` across the full row
+    width; over a non-decreasing CDF that count is a lower bound, so the
+    same index falls out of a binary search of the row's true-degree
+    segment ``edge_cdf[indptr[v] : indptr[v] + deg(v)]`` — pad slots
+    (trailing exact-total entries on the padded row, ``u < 1`` strictly)
+    never counted anyway.  ceil(log2(max_degree + 1)) rounds of W-wide
+    gathers replace the O(W·max_deg) row materialization; given the flat
+    CDF of :func:`ragged_edge_cdf` the returned neighbor is bitwise-equal
+    to :func:`mh_cdf_invert` on the padded row per key.  This is both the
+    scan backend's ragged MH move and the oracle the fused scalar-prefetch
+    kernel (``kernels.walk_transition.walk_transition_ragged``) mirrors
+    per walk.
+    """
+    start = indptr[nodes]
+    deg = degrees[nodes]
+    total = edge_cdf[start + deg - 1]
+    t = u_mh * total
+    lo = jnp.zeros_like(deg)
+    hi = deg
+    for _ in range(max(1, math.ceil(math.log2(max_degree + 1)))):
+        active = lo < hi
+        mid = (lo + hi) // 2
+        c = edge_cdf[start + jnp.minimum(mid, deg - 1)]
+        pred = active & (c < t)
+        lo = jnp.where(pred, mid + 1, lo)
+        hi = jnp.where(active & ~pred, mid, hi)
+    idx = jnp.minimum(lo, deg - 1)
+    return indices[start + idx]
 
 
 def combine_bucketed(
@@ -412,13 +560,16 @@ class WalkEngine:
     capacity_factor: float = 1.25  # headroom of the bucket_capacities rule
     bucket_share: Optional[Tuple[float, ...]] = None  # per-bucket expected
     #   walk share, max(node share, degree share); None = node share only
-    # -- bucketed-layout state (None on the padded layouts) -----------------
+    # -- bucketed/ragged-layout state (None on the padded layouts) ----------
     indptr: Optional[jnp.ndarray] = None  # (n+1,) int32 CSR row pointers
     indices: Optional[jnp.ndarray] = None  # (nnz,) int32 CSR neighbor ids
     node_bucket: Optional[jnp.ndarray] = None  # (n,) int32 bucket id per node
     node_slot: Optional[jnp.ndarray] = None  # (n,) int32 row within bucket
     bucket_neighbors: Optional[Tuple[jnp.ndarray, ...]] = None  # (n_b, w_b)
     bucket_rows: Optional[Tuple[jnp.ndarray, ...]] = None  # (n_b, w_b) P_IS
+    # -- ragged-layout state (the O(E) true-degree path) --------------------
+    edge_cdf: Optional[jnp.ndarray] = None  # (nnz,) float32 flat per-edge CDF
+    max_degree: Optional[int] = None  # static bound for the binary search
 
     @classmethod
     def from_graph(
@@ -441,30 +592,77 @@ class WalkEngine:
         ``Graph`` and ``CSRGraph`` expose the same padded
         ``neighbors``/``degrees`` tensors, so large CSR graphs plug in with
         no dense adjacency ever materialized; a ``BucketedCSRGraph``
-        selects ``layout="bucketed"`` automatically (and any graph is
-        converted when that layout is requested explicitly, with
-        ``bucket_factor`` picking the width ladder).  ``compact`` /
-        ``capacity_factor`` tune the bucketed layout's per-step walk
+        selects ``layout="bucketed"`` automatically and a
+        ``RaggedCSRGraph`` selects ``layout="ragged"`` (and any graph is
+        converted when either layout is requested explicitly, with
+        ``bucket_factor`` picking the bucketed width ladder).  ``compact``
+        / ``capacity_factor`` tune the bucketed layout's per-step walk
         compaction (see :meth:`step`); they are inert on the other
         layouts.  Row source precedence: explicit ``row_probs`` (an
-        (n, max_deg) table, or a per-bucket tuple for the bucketed layout —
+        (n, max_deg) table, a per-bucket tuple for the bucketed layout —
         a full table is column-truncated per bucket, which is
-        bitwise-exact), else rows precomputed from a *static* ``lipschitz``
-        vector, else live rows from the ``lipschitz=`` argument of
-        :meth:`step` / :meth:`run`.
+        bitwise-exact — or a flat (nnz,) buffer for the ragged layout,
+        e.g. ``transition.mh_importance_rows_ragged``), else rows
+        precomputed from a *static* ``lipschitz`` vector, else live rows
+        from the ``lipschitz=`` argument of :meth:`step` / :meth:`run`
+        (the ragged layout, whose row state is the flat CDF built once at
+        construction, requires one of the first two).
         """
         is_bucketed = hasattr(graph, "buckets")
+        is_bare_csr = hasattr(graph, "indptr") and not (
+            is_bucketed or hasattr(graph, "neighbors")
+        )
         if layout is None:
-            layout = "bucketed" if is_bucketed else "sparse"
+            layout = (
+                "bucketed" if is_bucketed
+                else "ragged" if is_bare_csr
+                else "sparse"
+            )
+        if layout == "ragged":
+            # true-degree layout: resident row state is the flat per-edge
+            # CDF (exactly O(E)); no padded or bucketed table is built
+            core = graph if hasattr(graph, "indptr") else graph.to_csr()
+            degrees = jnp.asarray(core.degrees, jnp.int32)
+            if row_probs is None and lipschitz is None:
+                raise ValueError(
+                    "layout='ragged' precomputes its flat per-edge CDF at "
+                    "construction; pass row_probs (padded table or flat "
+                    "buffer) or lipschitz to from_graph"
+                )
+            edge_cdf = ragged_edge_cdf(
+                core.indptr, core.indices, core.degrees,
+                row_probs=row_probs, lipschitz=lipschitz,
+            )
+            return cls(
+                neighbors=None,
+                degrees=degrees,
+                p_j=params.p_j,
+                p_d=params.p_d,
+                r=params.r,
+                row_probs=None,
+                backend=backend,
+                layout="ragged",
+                block_w=block_w,
+                interpret=interpret,
+                compact=compact,
+                capacity_factor=capacity_factor,
+                indptr=jnp.asarray(core.indptr, jnp.int32),
+                indices=jnp.asarray(core.indices, jnp.int32),
+                edge_cdf=edge_cdf,
+                max_degree=int(np.asarray(core.degrees).max()),
+            )
         if layout == "bucketed":
             # bucket_factor=None keeps an already-bucketed graph's ladder
-            # as-is; an explicit value re-buckets on mismatch.
+            # as-is; an explicit value re-buckets on mismatch.  Every
+            # sparse class buckets straight off its CSR core, so a bare
+            # RaggedCSRGraph never materializes the padded table here.
             if is_bucketed and bucket_factor is None:
                 bg = graph
             else:
-                bg = (graph if is_bucketed else graph.to_csr()).to_bucketed(
-                    bucket_factor=bucket_factor or 2
+                base = (
+                    graph if hasattr(graph, "to_bucketed") else graph.to_csr()
                 )
+                bg = base.to_bucketed(bucket_factor=bucket_factor or 2)
             degrees = jnp.asarray(bg.degrees)
             bucket_neighbors = tuple(
                 jnp.asarray(b.neighbors) for b in bg.buckets
@@ -524,7 +722,7 @@ class WalkEngine:
                 bucket_neighbors=bucket_neighbors,
                 bucket_rows=bucket_rows,
             )
-        if is_bucketed:
+        if is_bucketed or is_bare_csr:
             graph = graph.to_csr()  # padded layouts need the full tensors
         neighbors = jnp.asarray(graph.neighbors)
         degrees = jnp.asarray(graph.degrees)
@@ -584,6 +782,11 @@ class WalkEngine:
                 "the bucketed layout has no full-width row table; rows live "
                 "per degree bucket (bucket_rows)"
             )
+        if self.layout == "ragged":
+            raise ValueError(
+                "the ragged layout has no full-width row table; row state "
+                "is the flat per-edge CDF (edge_cdf)"
+            )
         if self.row_probs is not None:
             return self.row_probs
         if lipschitz is None:
@@ -601,6 +804,11 @@ class WalkEngine:
             raise ValueError(
                 "the bucketed layout has no full-width rows; per-bucket "
                 "tiles come from _bucket_tiles (bucket_rows / live Eq. 7)"
+            )
+        if self.layout == "ragged":
+            raise ValueError(
+                "the ragged layout has no full-width rows; the MH move "
+                "binary-searches the flat per-edge CDF (ragged_mh_invert)"
             )
         if self.row_probs is not None:
             return self.row_probs[nodes]
@@ -754,6 +962,11 @@ class WalkEngine:
         per key.  If any bucket's walk count exceeds its capacity this
         step, ``lax.cond`` selects :meth:`_bucketed_mh_full` instead (both
         branches have static shapes, so the whole step stays jit-able).
+
+        Returns ``(v_mh, overflow)`` — the traced overflow flag is the
+        compaction telemetry :meth:`step` surfaces through its aux output,
+        so the static :func:`bucket_capacities` rule can be *audited*
+        (observed overflow rate) instead of guessed.
         """
         if self.bucket_rows is None and lipschitz is None:
             raise ValueError(
@@ -800,7 +1013,7 @@ class WalkEngine:
         def fallback(_):
             return self._bucketed_mh_full(nodes, u_mh, lipschitz)
 
-        return jax.lax.cond(overflow, fallback, compacted, None)
+        return jax.lax.cond(overflow, fallback, compacted, None), overflow
 
     # -- the transition -----------------------------------------------------
 
@@ -811,7 +1024,8 @@ class WalkEngine:
         *,
         p_j: Optional[Union[float, jnp.ndarray]] = None,
         lipschitz: Optional[jnp.ndarray] = None,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        with_aux: bool = False,
+    ):
         """One batched MHLJ transition.
 
         Args:
@@ -821,9 +1035,17 @@ class WalkEngine:
             defaults to the engine's ``p_j``.
           lipschitz: (n,) live Lipschitz vector when the engine has no
             precomputed rows.
+          with_aux: also return step telemetry — currently
+            ``{"compact_overflow": bool scalar}``, True when this step's
+            compacted bucketed dispatch overflowed a static capacity and
+            ``lax.cond`` took the full-W fallback (always False on the
+            other layouts / with compaction off).  This is how the static
+            :func:`bucket_capacities` rule is audited in production
+            sweeps instead of guessed.
 
         Returns:
-          (next_nodes, hops) matching the shape of ``nodes``.
+          (next_nodes, hops) matching the shape of ``nodes``; with
+          ``with_aux``, (next_nodes, hops, aux).
         """
         nodes = jnp.asarray(nodes, jnp.int32)
         squeeze = nodes.ndim == 0
@@ -835,8 +1057,49 @@ class WalkEngine:
         )
         flag = (u[:, U_JUMP] < p_j_t).astype(jnp.float32)
         u = u.at[:, U_JUMP].set(flag)
+        overflow = jnp.asarray(False)
 
-        if self.layout == "bucketed":
+        if self.layout == "ragged":
+            # true-degree path: the MH move binary-searches the flat
+            # per-edge CDF; resident row state is exactly O(E).  No bucket
+            # ladder, no compaction sort/scatter, no overflow cond.
+            if self.edge_cdf is None:
+                raise ValueError(
+                    "ragged engine has no flat per-edge CDF; build it via "
+                    "from_graph (row_probs or lipschitz)"
+                )
+            if self.resolved_backend == "pallas":
+                # one fused scalar-prefetch kernel pass per walk tile:
+                # inversion + r-hop Lévy gather + jump/MH combine, no
+                # engine-side XLA gather round-trips
+                from repro.kernels.walk_transition.kernel import (
+                    walk_transition_ragged,
+                )
+
+                nxt, hops = walk_transition_ragged(
+                    nodes,
+                    self.indptr,
+                    self.degrees,
+                    self.indices,
+                    self.edge_cdf,
+                    u,
+                    p_d=self.p_d,
+                    r=self.r,
+                    max_degree=self.max_degree,
+                    block_w=self.block_w,
+                    interpret=self.resolved_interpret,
+                )
+            else:
+                v_mh = ragged_mh_invert(
+                    self.indptr, self.degrees, self.indices, self.edge_cdf,
+                    nodes, u[:, U_MH], max_degree=self.max_degree,
+                )
+                v_jump, d = levy_jump_batched(
+                    nodes, u, None, self.degrees, self.p_d, self.r,
+                    csr=(self.indptr, self.indices),
+                )
+                nxt, hops = combine_mh_jump(v_mh, v_jump, d, u)
+        elif self.layout == "bucketed":
             # per-bucket MH dispatch + CSR-gathered Lévy hops: resident
             # state is O(E + Σ_b n_b·width_b); no (n, max_deg) table exists.
             # With compaction on (and >1 bucket to dispatch), walks are
@@ -844,7 +1107,7 @@ class WalkEngine:
             # static capacity instead of all W lanes; a capacity overflow
             # falls back to the full-W dispatch for that step.
             if self.compact and len(self.bucket_neighbors) > 1:
-                v_mh = self._bucketed_mh_compacted(
+                v_mh, overflow = self._bucketed_mh_compacted(
                     nodes, u[:, U_MH], lipschitz
                 )
             else:
@@ -898,7 +1161,9 @@ class WalkEngine:
                 self.r,
             )
         if squeeze:
-            return nxt[0], hops[0]
+            nxt, hops = nxt[0], hops[0]
+        if with_aux:
+            return nxt, hops, {"compact_overflow": overflow}
         return nxt, hops
 
     def run(
@@ -909,7 +1174,8 @@ class WalkEngine:
         *,
         p_j: Optional[Union[float, jnp.ndarray]] = None,
         lipschitz: Optional[jnp.ndarray] = None,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        with_aux: bool = False,
+    ):
         """Whole trajectories for W walks (Algorithm 1's update sequence).
 
         ``p_j`` may be a scalar or a (num_steps,) schedule (Fig 6 annealing).
@@ -919,7 +1185,12 @@ class WalkEngine:
             the model when update t runs (the first update runs at v0).
           hops: (W, num_steps) int32 — Remark-1 physical transitions taken
             after update t.
-          Scalar ``v0s`` drops the leading walk axis.
+          Scalar ``v0s`` drops the leading walk axis.  With ``with_aux``, a
+          third element carries per-step telemetry:
+          ``{"compact_overflow": (num_steps,) bool}`` — which steps of the
+          compacted bucketed dispatch overflowed their static capacities
+          (``benchmarks/large_graph_walk.py`` records the rate so the
+          ``capacity_factor`` rule is audited, not guessed).
         """
         v0s = jnp.asarray(v0s, jnp.int32)
         squeeze = v0s.ndim == 0
@@ -933,14 +1204,20 @@ class WalkEngine:
 
         def body(v, xs):
             k, pj = xs
-            v_next, hops = self.step(k, v, p_j=pj, lipschitz=lipschitz)
-            return v_next, (v, hops)
+            v_next, hops, aux = self.step(
+                k, v, p_j=pj, lipschitz=lipschitz, with_aux=True
+            )
+            return v_next, (v, hops, aux["compact_overflow"])
 
-        _, (update_nodes, hops) = jax.lax.scan(body, v0s, (keys, p_j_sched))
+        _, (update_nodes, hops, overflow) = jax.lax.scan(
+            body, v0s, (keys, p_j_sched)
+        )
         update_nodes = update_nodes.T  # (T, W) -> (W, T)
         hops = hops.T
         if squeeze:
-            return update_nodes[0], hops[0]
+            update_nodes, hops = update_nodes[0], hops[0]
+        if with_aux:
+            return update_nodes, hops, {"compact_overflow": overflow}
         return update_nodes, hops
 
 
@@ -955,11 +1232,11 @@ class WalkEngine:
 _ENGINE_DATA_FIELDS = (
     "neighbors", "degrees", "p_j", "row_probs",
     "indptr", "indices", "node_bucket", "node_slot",
-    "bucket_neighbors", "bucket_rows",
+    "bucket_neighbors", "bucket_rows", "edge_cdf",
 )
 _ENGINE_META_FIELDS = (
     "p_d", "r", "backend", "layout", "block_w", "interpret",
-    "compact", "capacity_factor", "bucket_share",
+    "compact", "capacity_factor", "bucket_share", "max_degree",
 )
 
 

@@ -23,7 +23,13 @@ has a self-loop (paper §II.A).  We keep three representations:
   inflates its bucket, not all n rows.  Bucket rows are column-truncations
   of the shared padded rows (same ordering, same pad convention), which is
   what makes walks on the bucketed layout bitwise-identical to the padded
-  layouts (see ``docs/layouts.md``).
+  layouts (see ``docs/layouts.md``); and
+* the bare CSR core, :class:`RaggedCSRGraph` (``to_ragged()`` on either
+  sparse class, or ``from_edges(layout="ragged")``): exactly
+  ``indptr``/``indices``/``degrees`` and nothing else — no padded tensor
+  and no per-bucket tables ever exist.  This is the substrate of the
+  engine's ``layout="ragged"`` true-degree path, whose resident row state
+  is a flat per-edge CDF buffer aligned with ``indices`` (O(E) exactly).
 
 Construction is deterministic given a seed.  Builders that admit an O(E)
 edge-list construction (``ring``, ``grid2d`` and the trap-prone families)
@@ -44,6 +50,8 @@ __all__ = [
     "CSRGraph",
     "DegreeBucket",
     "BucketedCSRGraph",
+    "RaggedCSRGraph",
+    "flat_edge_values",
     "ring",
     "grid2d",
     "watts_strogatz",
@@ -198,6 +206,17 @@ class CSRGraph:
             name=self.name,
         )
 
+    def to_ragged(self) -> "RaggedCSRGraph":
+        """Bare-CSR-core view (drops the padded tensor; O(E) resident)."""
+        g = RaggedCSRGraph(
+            indptr=self.indptr.copy(),
+            indices=self.indices.copy(),
+            degrees=self.degrees.copy(),
+            name=self.name,
+        )
+        g.validate()
+        return g
+
     def to_dense(self) -> Graph:
         """Materialize the dense :class:`Graph` (analysis-scale only)."""
         n = self.n
@@ -344,9 +363,146 @@ class BucketedCSRGraph:
             name=self.name,
         )
 
+    def to_ragged(self) -> "RaggedCSRGraph":
+        """Bare-CSR-core view (drops the per-bucket tables; O(E) resident)."""
+        g = RaggedCSRGraph(
+            indptr=self.indptr.copy(),
+            indices=self.indices.copy(),
+            degrees=self.degrees.copy(),
+            name=self.name,
+        )
+        g.validate()
+        return g
+
     def to_dense(self) -> Graph:
         """Materialize the dense :class:`Graph` (analysis-scale only)."""
         return self.to_csr().to_dense()
+
+
+@dataclasses.dataclass(frozen=True)
+class RaggedCSRGraph:
+    """The bare CSR core — the zero-padding graph representation.
+
+    Exactly ``indptr``/``indices``/``degrees``: no padded neighbor tensor,
+    no per-bucket tables, nothing whose size depends on ``max_degree``.
+    This is the substrate of the engine's ``layout="ragged"`` path, which
+    reads every row from the flat arrays at its *true* degree — resident
+    state is O(E) with no width factor at all, so one degree-10³ hub costs
+    its own degree and nothing else.  Built via ``to_ragged()`` on
+    :class:`CSRGraph` / :class:`BucketedCSRGraph` or directly with
+    ``from_edges(layout="ragged")`` (the padded table is never
+    materialized on that path); ``to_csr()`` round-trips exactly.
+
+    Attributes:
+      indptr: (n+1,) int64 CSR row pointers.
+      indices: (nnz,) int32 neighbor ids, ascending within each row,
+        including the self-loop.
+      degrees: (n,) int32 true degrees (== diff(indptr)).
+      name: human-readable description.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    degrees: np.ndarray
+    name: str = "ragged-csr-graph"
+
+    @property
+    def n(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max())
+
+    @property
+    def num_edges(self) -> int:
+        """Directed edge count incl. self-loops (nnz of the CSR)."""
+        return int(self.indices.shape[0])
+
+    def row(self, v: int) -> np.ndarray:
+        """True (unpadded) neighbor ids of node v."""
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def validate(self) -> None:
+        _validate_csr_core(self.indptr, self.indices, self.degrees)
+
+    def to_ragged(self) -> "RaggedCSRGraph":
+        """Identity — lets callers normalize any sparse class to the core."""
+        return self
+
+    def to_csr(self) -> CSRGraph:
+        """Materialize the padded-tensor :class:`CSRGraph` (exact inverse
+        of ``to_ragged()``)."""
+        g = CSRGraph(
+            indptr=self.indptr.copy(),
+            indices=self.indices.copy(),
+            degrees=self.degrees.copy(),
+            neighbors=_pad_neighbor_lists(
+                self.indptr, self.indices, self.degrees
+            ),
+            name=self.name,
+        )
+        g.validate()
+        return g
+
+    def to_bucketed(
+        self, min_width: int = 8, bucket_factor: int = 2
+    ) -> BucketedCSRGraph:
+        """Degree-bucketed view straight from the core (no padded table)."""
+        return _bucketed_from_csr_arrays(
+            self.indptr.copy(), self.indices.copy(), self.degrees.copy(),
+            min_width=min_width, bucket_factor=bucket_factor,
+            name=self.name,
+        )
+
+    def to_dense(self) -> Graph:
+        """Materialize the dense :class:`Graph` (analysis-scale only)."""
+        return self.to_csr().to_dense()
+
+
+def flat_edge_values(
+    indptr: np.ndarray,
+    degrees: np.ndarray,
+    table: np.ndarray,
+    node_ids: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Flatten per-row padded values into the flat per-edge buffer.
+
+    Given any ``(rows, width)`` array aligned with the padded neighbor
+    rows (probabilities, CDFs, …), returns the ``(nnz,)`` buffer holding
+    each row's first ``deg(v)`` entries at positions
+    ``indptr[v] : indptr[v] + deg(v)`` — i.e. CSR edge order, aligned
+    with ``indices``.  This is how the ragged layout stores row state
+    with **no padding at all**: the padded table's pad columns carry
+    exactly 0 and are simply dropped.  With ``node_ids`` the table covers
+    only those rows (the chunked O(E) builders use this so the full
+    padded table never has to exist at once).
+    """
+    if node_ids is None:
+        node_ids = np.arange(indptr.shape[0] - 1, dtype=np.int64)
+    deg = np.asarray(degrees, dtype=np.int64)[node_ids]
+    if table.shape[0] != node_ids.shape[0] or table.shape[1] < int(
+        deg.max(initial=0)
+    ):
+        raise ValueError("table shape inconsistent with the requested rows")
+    mask = np.arange(table.shape[1])[None, :] < deg[:, None]
+    return np.asarray(table)[mask]
+
+
+def _ragged_row_chunks(n: int, max_deg: int, chunk_rows: Optional[int] = None):
+    """Contiguous row-id chunks for the O(E) flat-buffer builders.
+
+    THE chunking rule, shared by ``transition._rows_ragged`` and
+    ``engine.ragged_edge_cdf`` so the two builders cannot drift: chunk
+    size bounds the transient ``(chunk, max_deg)`` padded block at
+    ~32 MB (floored at 256 rows), and each yielded ``ids`` array is a
+    contiguous ascending range — so a chunk's flat output occupies
+    exactly ``indptr[ids[0]] : indptr[ids[-1] + 1]``.
+    """
+    if chunk_rows is None:
+        chunk_rows = max(256, min(n, (32 << 20) // max(1, 4 * max_deg)))
+    for a in range(0, n, chunk_rows):
+        yield np.arange(a, min(a + chunk_rows, n), dtype=np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -574,12 +730,15 @@ def from_edges(
     ``layout="bucketed"`` builds the degree-bucketed ragged layout
     *directly from the CSR core* (bounded-memory: the full ``(n, max_deg)``
     padded table is never materialized, which is what lets 1M-node
-    hub-heavy graphs construct on a single host), and ``layout="dense"``
-    routes through :func:`from_adjacency` for the analysis stack.
-    ``bucket_factor`` picks the bucket-width ladder of the bucketed layout
-    (see :meth:`CSRGraph.to_bucketed`).  All validate on construction
-    (connectivity included), so an invalid edge set fails loudly here
-    rather than corrupting a walk.
+    hub-heavy graphs construct on a single host); ``layout="ragged"``
+    keeps only the bare CSR core (:class:`RaggedCSRGraph` — neither the
+    padded nor any per-bucket table ever exists, the strictest
+    bounded-memory path and the substrate of the engine's true-degree
+    layout); and ``layout="dense"`` routes through :func:`from_adjacency`
+    for the analysis stack.  ``bucket_factor`` picks the bucket-width
+    ladder of the bucketed layout (see :meth:`CSRGraph.to_bucketed`).
+    All validate on construction (connectivity included), so an invalid
+    edge set fails loudly here rather than corrupting a walk.
     """
     src = np.asarray(src, dtype=np.int64).ravel()
     dst = np.asarray(dst, dtype=np.int64).ravel()
@@ -593,9 +752,10 @@ def from_edges(
         adj = np.zeros((n, n), dtype=np.float64)
         adj[src, dst] = 1.0
         return from_adjacency(adj, name=name)
-    if layout not in ("csr", "bucketed"):
+    if layout not in ("csr", "bucketed", "ragged"):
         raise ValueError(
-            f"layout must be 'dense', 'csr' or 'bucketed', got {layout!r}"
+            f"layout must be 'dense', 'csr', 'bucketed' or 'ragged', "
+            f"got {layout!r}"
         )
     indptr, indices, degrees = _edges_to_csr(n, src, dst)
     return _csr_graph_from_arrays(
@@ -612,9 +772,10 @@ def _csr_graph_from_arrays(
     bucket_factor: int = 2,
 ):
     """Validated graph from already-built CSR arrays (no recomputation)."""
-    if layout not in ("dense", "csr", "bucketed"):
+    if layout not in ("dense", "csr", "bucketed", "ragged"):
         raise ValueError(
-            f"layout must be 'dense', 'csr' or 'bucketed', got {layout!r}"
+            f"layout must be 'dense', 'csr', 'bucketed' or 'ragged', "
+            f"got {layout!r}"
         )
     if layout == "bucketed":
         # bounded-memory path: validate the CSR core, then bucket directly —
@@ -623,6 +784,13 @@ def _csr_graph_from_arrays(
         return _bucketed_from_csr_arrays(
             indptr, indices, degrees,
             min_width=8, bucket_factor=bucket_factor, name=name,
+        )
+    if layout == "ragged":
+        # strictest bounded-memory path: the CSR core IS the graph — no
+        # padded tensor, no bucket tables, nothing sized by max_degree
+        _validate_csr_core(indptr, indices, degrees)
+        return RaggedCSRGraph(
+            indptr=indptr, indices=indices, degrees=degrees, name=name
         )
     g = CSRGraph(
         indptr=indptr,
@@ -761,34 +929,52 @@ def barabasi_albert(
 ):
     """Barabasi-Albert preferential attachment: hubs = degree-bias traps.
 
-    Each new node attaches to ``m`` distinct existing nodes chosen with
-    probability proportional to current degree (repeated-node-list trick).
-    Connected by construction.  O(n m) time and memory.
+    Batagelj–Brandes repeated-nodes construction, fully vectorized: edge
+    ``e`` of new node ``v`` picks a uniform position of the repeated
+    endpoint list built by all *earlier* nodes' edges (each endpoint
+    appears once per incident edge, so the pick is degree-proportional),
+    and the position→endpoint indirection is resolved by vectorized
+    pointer chasing instead of a per-node Python loop.  Draws landing on
+    an odd position point at an earlier edge's *target*, whose own draw
+    strictly precedes it, so chains shrink monotonically and resolve in
+    O(log) numpy passes — the whole build is O(n m) array work (a 1M-node
+    graph builds in ~1 s vs ~22 s for the former per-node loop; the
+    benchmark JSON's ``construction_sec`` field tracks this).  Duplicate
+    picks within a node collapse (every node still attaches to ≥ 1
+    earlier node, so the graph stays connected by construction); node
+    ``m`` seeds the process by attaching to all of ``0..m-1``.
     """
     if not (1 <= m < n):
         raise ValueError("barabasi_albert requires 1 <= m < n")
     rng = np.random.default_rng(seed)
-    src: list = []
-    dst: list = []
-    repeated: list = []
-    targets = list(range(m))
-    for v in range(m, n):
-        src.extend([v] * len(targets))
-        dst.extend(targets)
-        repeated.extend(targets)
-        repeated.extend([v] * m)
-        chosen: set = set()
-        while len(chosen) < m:
-            picks = rng.integers(0, len(repeated), size=2 * m)
-            for p in picks:
-                chosen.add(repeated[p])
-                if len(chosen) == m:
-                    break
-        targets = sorted(chosen)
+    num_edges = m * (n - m)
+    # source of edge e is node m + e//m; the first m edges (node m's) are
+    # the deterministic seed attachments to 0..m-1
+    src = m + np.arange(num_edges, dtype=np.int64) // m
+    # edge e of node v draws a repeated-list position in [0, 2m(v-m)) —
+    # the list state before node v's own edges, so no self-attachment.
+    # Position 2e' is edge e''s source, position 2e'+1 its target.
+    bound = 2 * m * (src - m)
+    pos = np.zeros(num_edges, dtype=np.int64)
+    if num_edges > m:
+        pos[m:] = rng.integers(0, bound[m:])
+    # resolve the indirection: odd positions point at target(e') for
+    # e' = (pos-1)//2, whose own pos strictly precedes — chase until every
+    # pointer lands on an even position (a known source) or a seed edge
+    # (target e' < m is the literal node e').  Chains shrink by at least
+    # half the position each hop, so this loop runs O(log) times.
+    while True:
+        e_prev = (pos - 1) // 2
+        unresolved = (pos % 2 == 1) & (e_prev >= m)
+        if not unresolved.any():
+            break
+        pos[unresolved] = pos[e_prev[unresolved]]
+    dst = np.where(pos % 2 == 0, m + (pos // 2) // m, (pos - 1) // 2)
+    dst[:m] = np.arange(m)  # the seed attachments
     return from_edges(
         n,
-        np.asarray(src, np.int64),
-        np.asarray(dst, np.int64),
+        src,
+        dst,
         name=f"ba({n},{m})",
         layout=layout,
         bucket_factor=bucket_factor,

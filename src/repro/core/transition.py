@@ -19,7 +19,12 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.graphs import Graph
+from repro.core.graphs import (
+    Graph,
+    _pad_neighbor_lists,
+    _ragged_row_chunks,
+    flat_edge_values,
+)
 from repro.core import levy as levy_mod
 
 __all__ = [
@@ -36,6 +41,9 @@ __all__ = [
     "simple_rw_rows_bucketed",
     "mh_uniform_rows_bucketed",
     "mh_importance_rows_bucketed",
+    "simple_rw_rows_ragged",
+    "mh_uniform_rows_ragged",
+    "mh_importance_rows_ragged",
     "is_row_stochastic",
     "supported_on_graph",
 ]
@@ -293,6 +301,74 @@ def mh_uniform_rows_bucketed(graph) -> tuple:
 def mh_importance_rows_bucketed(graph, lipschitz: np.ndarray) -> tuple:
     """Per-bucket P_IS rows of Eq. (7) for a :class:`BucketedCSRGraph`."""
     return _mh_rows_bucketed(graph, _check_lipschitz(graph, lipschitz))
+
+
+# -- ragged (flat per-edge) counterparts ------------------------------------
+#
+# Same three 1-hop kernels as a flat ``(nnz,)`` probability buffer aligned
+# with the graph's CSR ``indices`` — the row source of the engine's
+# ``layout="ragged"`` true-degree path.  Rows are produced in bounded-size
+# chunks through the SAME block builders at the full ``max_deg`` width and
+# then stripped of their (exactly-zero) pads by ``graphs.flat_edge_values``,
+# so every flat entry is bit-for-bit the corresponding padded-builder entry
+# and the ragged layout samples the identical CDF per key.  No O(n·max_deg)
+# array ever exists — transient memory is O(chunk·max_deg).
+
+
+def _rows_ragged(graph, block_fn, chunk_rows: Optional[int] = None) -> np.ndarray:
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    n, max_deg = deg.size, int(deg.max())
+    out = np.empty(indices.shape[0], dtype=np.float32)
+    for ids in _ragged_row_chunks(n, max_deg, chunk_rows):
+        nbrs = _pad_neighbor_lists(
+            indptr, indices, deg, node_ids=ids, width=max_deg
+        )
+        out[indptr[ids[0]] : indptr[ids[-1] + 1]] = flat_edge_values(
+            indptr, deg, block_fn(nbrs, ids, deg[ids]), node_ids=ids
+        )
+    return out
+
+
+def simple_rw_rows_ragged(graph, chunk_rows: Optional[int] = None) -> np.ndarray:
+    """Flat (nnz,) simple-RW probabilities for any CSR-core graph."""
+    return _rows_ragged(
+        graph, lambda nbrs, ids, deg_v: _simple_rw_block(nbrs, deg_v),
+        chunk_rows,
+    )
+
+
+def mh_uniform_rows_ragged(graph, chunk_rows: Optional[int] = None) -> np.ndarray:
+    """Flat (nnz,) MH-uniform probabilities for any CSR-core graph."""
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    weight = np.ones(deg.size)
+    return _rows_ragged(
+        graph,
+        lambda nbrs, ids, deg_v: _mh_rows_block(nbrs, ids, deg_v, deg, weight),
+        chunk_rows,
+    )
+
+
+def mh_importance_rows_ragged(
+    graph, lipschitz: np.ndarray, chunk_rows: Optional[int] = None
+) -> np.ndarray:
+    """Flat (nnz,) P_IS probabilities of Eq. (7) for any CSR-core graph.
+
+    The row source of the engine's ``layout="ragged"`` path: entry
+    ``indptr[v] + k`` is bit-for-bit ``mh_importance_rows(graph)[v, k]``
+    (same block math at the same width, pads dropped), so the flat CDF the
+    engine builds from it inverts to the identical neighbor per key.
+    """
+    lipschitz = _check_lipschitz(graph, lipschitz)
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    return _rows_ragged(
+        graph,
+        lambda nbrs, ids, deg_v: _mh_rows_block(
+            nbrs, ids, deg_v, deg, lipschitz
+        ),
+        chunk_rows,
+    )
 
 
 def row_probs_padded(p: np.ndarray, graph: Graph) -> np.ndarray:

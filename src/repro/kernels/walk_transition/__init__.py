@@ -1,6 +1,7 @@
 from repro.kernels.walk_transition.kernel import (
     walk_transition,
     walk_transition_bucketed,
+    walk_transition_ragged,
     walk_transition_sparse,
 )
 from repro.kernels.walk_transition.ops import (
@@ -8,10 +9,12 @@ from repro.kernels.walk_transition.ops import (
     mhlj_step_bucketed,
     mhlj_step_dense,
     mhlj_step_oracle,
+    mhlj_step_ragged,
     mhlj_step_sparse,
 )
 from repro.kernels.walk_transition.ref import (
     walk_transition_bucketed_ref,
+    walk_transition_ragged_ref,
     walk_transition_ref,
     walk_transition_sparse_ref,
 )
@@ -20,12 +23,15 @@ __all__ = [
     "walk_transition",
     "walk_transition_sparse",
     "walk_transition_bucketed",
+    "walk_transition_ragged",
     "mhlj_step_batched",
     "mhlj_step_bucketed",
     "mhlj_step_dense",
     "mhlj_step_oracle",
+    "mhlj_step_ragged",
     "mhlj_step_sparse",
     "walk_transition_ref",
     "walk_transition_sparse_ref",
     "walk_transition_bucketed_ref",
+    "walk_transition_ragged_ref",
 ]

@@ -22,6 +22,17 @@ Three entry points:
   only pay their own bucket's width, so hub-heavy graphs stop paying
   O(max_deg) per low-degree walk; the CDF inversion itself still exists
   exactly once (``_sparse_kernel``).
+* :func:`walk_transition_ragged` — the ``layout="ragged"`` fused kernel:
+  a ``PrefetchScalarGridSpec`` launch whose scalar-prefetch arguments
+  (walk nodes, CSR ``indptr``, ``degrees``) drive per-walk ``pl.dslice``
+  loads straight out of the **flat** per-edge CDF/index buffers at each
+  row's *true* degree — no padded tile is ever gathered, no bucket ladder
+  dispatched.  The whole MHLJ step fuses into the one pass: the MH move
+  is a binary search of the walk's CDF segment (mirroring
+  ``engine.ragged_mh_invert``), the Lévy branch runs its r CSR-gathered
+  hops in-kernel, and the jump/MH combine writes ``(next, hops)``
+  directly — none of the O(W) XLA gather round-trips the other sparse
+  layouts leave between the tile kernel and ``engine.levy_jump_batched``.
 
 One grid step processes ``block_w`` walks.  Per walk:
   * MH-IS move: CDF inversion over the walk's padded P_IS neighbor row
@@ -57,10 +68,12 @@ Outputs:
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.engine import (
     U_DIST,
@@ -78,6 +91,7 @@ __all__ = [
     "walk_transition_sparse",
     "walk_transition_bucketed",
     "walk_transition_bucketed_compacted",
+    "walk_transition_ragged",
 ]
 
 
@@ -309,3 +323,169 @@ def walk_transition_bucketed_compacted(
             )
         ],
     )
+
+
+# ---------------------------------------------------------------------------
+# Ragged-layout fused kernel (true-degree flat-CSR reads, scalar prefetch)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_kernel(
+    # scalar-prefetch refs (SMEM): available before the body runs, used to
+    # compute every flat-buffer address
+    nodes_ref,  # (W_pad,) int32 current node per walk
+    indptr_ref,  # (n+1,) int32 CSR row pointers
+    deg_ref,  # (n,) int32 true degrees
+    # tensor refs
+    cdf_ref,  # (nnz,) f32 flat per-edge CDF
+    idx_ref,  # (nnz,) int32 flat CSR neighbor ids
+    u_ref,  # (block_w, 3 + r) f32 uniforms tile
+    out_ref,  # (block_w,) int32
+    hops_ref,  # (block_w,) int32
+    *,
+    p_d: float,
+    r: int,
+    block_w: int,
+    search_iters: int,
+):
+    i = pl.program_id(0)
+
+    def load1(ref, at):
+        return pl.load(ref, (pl.dslice(at, 1),))[0]
+
+    def one_walk(w, _):
+        v = nodes_ref[i * block_w + w]
+        start = indptr_ref[v]
+        deg = deg_ref[v]
+
+        # --- MH-IS move: binary search of the row's true-degree CDF ------
+        # segment — mirrors engine.ragged_mh_invert statement for
+        # statement, so outputs stay bitwise-equal to every other layout
+        total = load1(cdf_ref, start + deg - 1)
+        t = u_ref[w, U_MH] * total
+
+        def probe(_, lohi):
+            lo, hi = lohi
+            active = lo < hi
+            mid = (lo + hi) // 2
+            c = load1(cdf_ref, start + jnp.minimum(mid, deg - 1))
+            pred = active & (c < t)
+            lo = jnp.where(pred, mid + 1, lo)
+            hi = jnp.where(active & ~pred, mid, hi)
+            return lo, hi
+
+        lo, _hi = jax.lax.fori_loop(
+            0, search_iters, probe, (jnp.int32(0), deg)
+        )
+        v_mh = load1(idx_ref, start + jnp.minimum(lo, deg - 1))
+
+        # --- Lévy jump: shared TruncGeom inverse CDF, then d uniform hops
+        # gathered straight from the flat CSR (the csr= arithmetic of
+        # engine.levy_jump_batched, fused in-kernel)
+        d = trunc_geom_icdf(u_ref[w, U_DIST], p_d, r)
+
+        def hop(j, v_cur):
+            deg_c = deg_ref[v_cur]
+            hop_idx = jnp.minimum(
+                (u_ref[w, U_HOP0 + j] * deg_c.astype(jnp.float32)).astype(
+                    jnp.int32
+                ),
+                deg_c - 1,
+            )
+            v_new = load1(idx_ref, indptr_ref[v_cur] + hop_idx)
+            return jnp.where(j < d, v_new, v_cur)
+
+        v_jump = jax.lax.fori_loop(0, r, hop, v)
+
+        do_jump = u_ref[w, U_JUMP] > 0.5
+        out_ref[w] = jnp.where(do_jump, v_jump, v_mh)
+        hops_ref[w] = jnp.where(do_jump, d, jnp.int32(1))
+        return _
+
+    jax.lax.fori_loop(0, block_w, one_walk, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p_d", "r", "max_degree", "block_w", "interpret"),
+)
+def walk_transition_ragged(
+    nodes: jnp.ndarray,  # (W,) int32
+    indptr: jnp.ndarray,  # (n+1,) int32 CSR row pointers
+    degrees: jnp.ndarray,  # (n,) int32
+    indices: jnp.ndarray,  # (nnz,) int32 flat CSR neighbor ids
+    edge_cdf: jnp.ndarray,  # (nnz,) float32 flat per-edge CDF
+    uniforms: jnp.ndarray,  # (W, 3 + r) float32, slot 0 = jump flag
+    *,
+    p_d: float,
+    r: int,
+    max_degree: int,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The fused true-degree MHLJ step — one scalar-prefetch pass per tile.
+
+    ``PrefetchScalarGridSpec`` prefetches the walk nodes and the CSR
+    ``indptr``/``degrees`` so every per-walk address into the flat
+    ``edge_cdf``/``indices`` buffers is computable up front; each walk
+    then (1) binary-searches its own CDF segment at its *true* degree
+    (``ceil(log2(max_degree + 1))`` probes — the only per-walk row work,
+    vs O(max_deg) on the padded layouts), (2) runs the r-hop Lévy chain
+    from the flat CSR, and (3) resolves the jump/MH branch, all inside
+    the kernel.  Per-walk arithmetic mirrors ``engine.ragged_mh_invert``
+    + ``engine.levy_jump_batched(csr=)`` + ``engine.combine_mh_jump``
+    statement for statement, so outputs are bitwise-equal to every other
+    layout per key.  Working set is the flat O(E) buffers — no padded or
+    per-bucket table exists on this path, which is the point.
+
+    On-hardware caveat (ROADMAP): the flat buffers ride in kernel memory
+    whole, like the dense kernel's tables — real-TPU runs at nnz beyond
+    VMEM need an HBM + DMA variant; CI exercises interpret mode.
+
+    Returns ``(next_nodes, hops)``, both (W,) int32.
+    """
+    w = nodes.shape[0]
+    n_u = num_uniforms(r)
+    bw = min(block_w, w)
+    w_pad = -(-w // bw) * bw
+    if w_pad != w:
+        # padded lanes walk node 0 on zero uniforms and are sliced off below
+        nodes = jnp.pad(nodes, (0, w_pad - w))
+        uniforms = jnp.pad(uniforms, ((0, w_pad - w), (0, 0)))
+    search_iters = max(1, math.ceil(math.log2(max_degree + 1)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # nodes, indptr, degrees
+        grid=(w_pad // bw,),
+        in_specs=[
+            pl.BlockSpec(edge_cdf.shape, lambda i, *_: (0,)),
+            pl.BlockSpec(indices.shape, lambda i, *_: (0,)),
+            pl.BlockSpec((bw, n_u), lambda i, *_: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bw,), lambda i, *_: (i,)),
+            pl.BlockSpec((bw,), lambda i, *_: (i,)),
+        ],
+    )
+    next_nodes, hops = pl.pallas_call(
+        functools.partial(
+            _ragged_kernel,
+            p_d=p_d,
+            r=r,
+            block_w=bw,
+            search_iters=search_iters,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((w_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((w_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        nodes.astype(jnp.int32),
+        indptr.astype(jnp.int32),
+        degrees.astype(jnp.int32),
+        edge_cdf,
+        indices.astype(jnp.int32),
+        uniforms,
+    )
+    return next_nodes[:w], hops[:w]

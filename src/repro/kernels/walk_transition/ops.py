@@ -82,6 +82,16 @@ def mhlj_step_bucketed(key, nodes, engine: WalkEngine):
     )
 
 
+def mhlj_step_ragged(key, nodes, engine: WalkEngine):
+    """Fused true-degree scalar-prefetch kernel from a prebuilt ragged
+    engine (``WalkEngine.from_graph(graph, ..., layout="ragged")``)."""
+    if engine.layout != "ragged":
+        raise ValueError(f"engine layout must be 'ragged', got {engine.layout!r}")
+    return _engine_step_nodes(
+        dataclasses.replace(engine, backend="pallas"), key, nodes
+    )
+
+
 def mhlj_step_oracle(key, nodes, row_probs, neighbors, degrees, *, p_j, p_d, r):
     engine = WalkEngine(
         neighbors=neighbors,

@@ -9,9 +9,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.engine import (
+    U_MH,
     combine_bucketed,
+    combine_mh_jump,
+    levy_jump_batched,
     mh_cdf_invert,
     mhlj_transition_math,
+    ragged_mh_invert,
     scatter_compacted,
 )
 
@@ -56,6 +60,32 @@ def walk_transition_bucketed_ref(
             for rows, tiles in zip(rows_by_bucket, tiles_by_bucket)
         ],
     )
+
+
+def walk_transition_ragged_ref(
+    nodes: jnp.ndarray,
+    indptr: jnp.ndarray,
+    degrees: jnp.ndarray,
+    indices: jnp.ndarray,
+    edge_cdf: jnp.ndarray,
+    uniforms: jnp.ndarray,
+    *,
+    p_d: float,
+    r: int,
+    max_degree: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Same contract as ``kernel.walk_transition_ragged``: the engine's
+    flat-CDF binary-search MH move (``engine.ragged_mh_invert``), the
+    CSR-gathered Lévy branch and the jump/MH combine — the fused kernel
+    mirrors this composition per walk."""
+    v_mh = ragged_mh_invert(
+        indptr, degrees, indices, edge_cdf, nodes, uniforms[:, U_MH],
+        max_degree=max_degree,
+    )
+    v_jump, d = levy_jump_batched(
+        nodes, uniforms, None, degrees, p_d, r, csr=(indptr, indices)
+    )
+    return combine_mh_jump(v_mh, v_jump, d, uniforms)
 
 
 def walk_transition_bucketed_compacted_ref(

@@ -106,21 +106,26 @@ def _setup_method(
     ``graph`` may be a dense :class:`~repro.core.graphs.Graph` (rows come
     from the dense transition builders, exactly as the paper's analysis
     stack computes them), a :class:`~repro.core.graphs.CSRGraph` (rows
-    come from the O(E) local builders — same law, no N×N matrix) or a
+    come from the O(E) local builders — same law, no N×N matrix), a
     :class:`~repro.core.graphs.BucketedCSRGraph` (per-degree-bucket rows,
     so hub-heavy 100k+-node topologies train without the O(n·max_deg)
-    padded table).
+    padded table) or a :class:`~repro.core.graphs.RaggedCSRGraph` (flat
+    per-edge rows — the true-degree engine layout, exactly-O(E) row
+    state, no padded tensor anywhere in the training loop).
     """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
     lips = data.lipschitz
     dense = getattr(graph, "adj", None) is not None
     bucketed = hasattr(graph, "buckets")
+    ragged = not (dense or bucketed) and not hasattr(graph, "neighbors")
 
-    def pick(dense_p, padded_rows, bucket_rows):
+    def pick(dense_p, padded_rows, bucket_rows, ragged_rows):
         if dense:
             return trans_mod.row_probs_padded(dense_p(), graph)
-        return bucket_rows() if bucketed else padded_rows()
+        if bucketed:
+            return bucket_rows()
+        return ragged_rows() if ragged else padded_rows()
 
     if method == "uniform":
         use_weights, use_jumps = False, False
@@ -128,6 +133,7 @@ def _setup_method(
             lambda: trans_mod.mh_uniform(graph),
             lambda: trans_mod.mh_uniform_rows(graph),
             lambda: trans_mod.mh_uniform_rows_bucketed(graph),
+            lambda: trans_mod.mh_uniform_rows_ragged(graph),
         )
     elif method == "simple":
         use_weights, use_jumps = False, False
@@ -135,6 +141,7 @@ def _setup_method(
             lambda: trans_mod.simple_rw(graph),
             lambda: trans_mod.simple_rw_rows(graph),
             lambda: trans_mod.simple_rw_rows_bucketed(graph),
+            lambda: trans_mod.simple_rw_rows_ragged(graph),
         )
     else:  # importance / mhlj share the P_IS rows; jumps sampled live
         use_weights = True
@@ -146,6 +153,7 @@ def _setup_method(
             lambda: trans_mod.mh_importance(graph, lips),
             lambda: trans_mod.mh_importance_rows(graph, lips),
             lambda: trans_mod.mh_importance_rows_bucketed(graph, lips),
+            lambda: trans_mod.mh_importance_rows_ragged(graph, lips),
         )
 
     row_probs = rows if bucketed else jnp.asarray(rows)
@@ -183,9 +191,12 @@ def run_rw_sgd(
 ) -> RWSGDResult:
     """Run one RW-SGD training; returns the Fig-3 style MSE trace.
 
-    ``graph`` may be a dense ``Graph``, an O(E) ``CSRGraph`` or a
-    degree-bucketed ``BucketedCSRGraph``.  ``engine_kwargs`` forwards
-    extra knobs to :meth:`WalkEngine.from_graph` (e.g. ``compact`` /
+    ``graph`` may be a dense ``Graph``, an O(E) ``CSRGraph``, a
+    degree-bucketed ``BucketedCSRGraph`` or a bare-core
+    ``RaggedCSRGraph`` (the true-degree engine layout; its flat per-edge
+    rows are built here and the engine turns them into the O(E) CDF
+    buffer).  ``engine_kwargs`` forwards extra knobs to
+    :meth:`WalkEngine.from_graph` (e.g. ``compact`` /
     ``capacity_factor`` for the bucketed layout's per-step walk
     compaction, or ``block_w``).
     """

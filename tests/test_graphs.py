@@ -260,6 +260,55 @@ def test_from_edges_bucketed_layout():
     assert bg.to_bucketed() is bg  # identity normalization
 
 
+@pytest.mark.parametrize(
+    "build",
+    [
+        lambda: graphs.barabasi_albert(120, 3, seed=2, layout="csr"),
+        lambda: graphs.lollipop(24, 9, layout="csr"),
+        lambda: graphs.sbm([20, 25, 15], 0.4, 0.05, seed=5, layout="csr"),
+    ],
+)
+def test_ragged_round_trip_families(build):
+    """to_ragged() keeps the identical CSR core and to_csr() reconstructs
+    the padded tensor exactly; every sparse class normalizes to the same
+    core via to_ragged()."""
+    csr = build()
+    rg = csr.to_ragged()
+    rg.validate()
+    assert isinstance(rg, graphs.RaggedCSRGraph)
+    assert not hasattr(rg, "neighbors")  # the point: no padded tensor
+    np.testing.assert_array_equal(rg.indptr, csr.indptr)
+    np.testing.assert_array_equal(rg.indices, csr.indices)
+    np.testing.assert_array_equal(rg.degrees, csr.degrees)
+    assert rg.to_ragged() is rg
+    back = rg.to_csr()
+    np.testing.assert_array_equal(back.neighbors, csr.neighbors)
+    np.testing.assert_array_equal(
+        csr.to_bucketed().to_ragged().indices, rg.indices
+    )
+    # bucketing straight off the core matches bucketing the padded class
+    assert rg.to_bucketed().bucket_widths == csr.to_bucketed().bucket_widths
+
+
+def test_from_edges_ragged_layout():
+    """from_edges(layout='ragged') returns the bare validated core — same
+    arrays as the csr layout, no padded tensor ever built — and
+    flat_edge_values flattens padded tables into exact CSR edge order."""
+    rg = graphs.barabasi_albert(60, 2, seed=1, layout="ragged")
+    ref = graphs.barabasi_albert(60, 2, seed=1, layout="csr")
+    assert isinstance(rg, graphs.RaggedCSRGraph)
+    np.testing.assert_array_equal(rg.indptr, ref.indptr)
+    np.testing.assert_array_equal(rg.indices, ref.indices)
+    flat = graphs.flat_edge_values(
+        ref.indptr, ref.degrees, ref.neighbors
+    )
+    np.testing.assert_array_equal(flat, ref.indices)  # pads dropped exactly
+    with pytest.raises(ValueError, match="table shape"):
+        graphs.flat_edge_values(
+            ref.indptr, ref.degrees, ref.neighbors[:, :-1]
+        )
+
+
 @pytest.mark.parametrize("bucket_factor", [2, 4])
 def test_bucket_factor_ladder(bucket_factor):
     """The width ladder is geometric in bucket_factor (clamped to

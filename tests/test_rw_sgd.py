@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import MHLJParams, complete, ring
+from repro.core import MHLJParams, barabasi_albert, complete, ring
 from repro.data import make_heterogeneous_regression, make_homogeneous_regression
 from repro.walk_sgd import comm_report, run_rw_sgd
 
@@ -100,6 +100,29 @@ def test_pj_annealing_removes_error_gap():
     assert gaps[-1] < 0.05 * gaps[0]
     # p_J = 0 has exactly zero gap (IS weights cancel the sampling bias)
     assert error_gap_exact(g, feats, targs, lips, MHLJParams(0.0, 0.5, 3)) < 1e-18
+
+
+def test_ragged_graph_trains_identically_to_csr():
+    """A RaggedCSRGraph rides the same jitted training loop as every other
+    graph class and — because the ragged engine is bitwise-identical per
+    key — produces the exact same walk and MSE trace as the padded CSR
+    graph for every method."""
+    csr = barabasi_albert(40, 3, seed=2, layout="csr")
+    rg = csr.to_ragged()
+    data = make_heterogeneous_regression(
+        40, dim=5, sigma_high_sq=50.0, p_high=0.1, seed=3, x_star_scale=2.0
+    )
+    for method in ("uniform", "importance", "mhlj"):
+        ref = run_rw_sgd(
+            method, csr, data, 1e-3, 400, seed=5,
+            mhlj_params=MHLJParams(0.2, 0.5, 3),
+        )
+        got = run_rw_sgd(
+            method, rg, data, 1e-3, 400, seed=5,
+            mhlj_params=MHLJParams(0.2, 0.5, 3),
+        )
+        np.testing.assert_array_equal(ref.update_nodes, got.update_nodes)
+        np.testing.assert_array_equal(ref.mse, got.mse)
 
 
 def test_simple_rw_baseline_runs():

@@ -22,6 +22,15 @@ Four claims:
    layout="sparse" at adversarial shapes: W not a block_w multiple, all
    walks in one bucket, empty buckets, capacity overflow, and both
    bucket_factor ladders.
+6. ``layout="ragged"`` (flat per-edge CDF, binary-search MH inversion,
+   fused scalar-prefetch kernel) is BITWISE equal to every other layout
+   per key — from a shared padded row table, from the flat numpy
+   builders, and from a live lipschitz vector; on hub-heavy/trap-prone
+   graphs, at bucket-boundary degrees, and at W values that are not
+   block multiples — and its resident state is *exactly* O(E): every
+   engine array is one-dimensional (no padded, no per-bucket table), and
+   ``from_edges(layout="ragged")`` builds a graph that never carries a
+   padded tensor at all.
 """
 import jax
 import jax.numpy as jnp
@@ -36,6 +45,7 @@ from repro.core import (
     lollipop,
     mh_importance,
     mh_importance_rows_bucketed,
+    mh_importance_rows_ragged,
     mhlj,
     row_probs_padded,
     sbm,
@@ -124,6 +134,8 @@ def test_sparse_backends_match_dense_chain_chi_square(setup):
         ("scan", "sparse", 11),
         ("pallas", "sparse", 12),
         ("pallas", "bucketed", 13),
+        ("pallas", "ragged", 14),
+        ("scan", "ragged", 15),
     ):
         nxt, _ = _engine(csr, params, rp, backend, layout=layout).step(
             jax.random.PRNGKey(key), nodes
@@ -433,6 +445,245 @@ def test_compacted_kernel_oracle_parity(setup):
         rows_by, tiles_by, u_by, widx_by, valid_by, w
     )
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Ragged true-degree layout (flat per-edge CDF, no ladder)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "build",
+    [
+        lambda: barabasi_albert(80, 3, seed=3, layout="dense"),
+        lambda: lollipop(16, 9),  # clique degree 16 sits on a bucket boundary
+        lambda: dumbbell(6, 3),  # odd max_degree (7), no power-of-two help
+    ],
+)
+def test_ragged_layout_bitwise_equal_all_paths(build):
+    """layout='ragged' — the fused scalar-prefetch kernel AND its pure-jnp
+    binary-search fallback — agrees bitwise with the sparse scan oracle,
+    the sparse and dense Pallas layouts and the bucketed dispatch, at W
+    values that are not block multiples, on hub-heavy (BA),
+    bucket-boundary (lollipop) and odd-max-degree (dumbbell) graphs.  The
+    ragged engines are driven once from the shared padded row table (exact
+    flatten) and once from the flat numpy builder over a graph that never
+    had a padded tensor."""
+    g = build()
+    csr = g.to_csr()
+    rg = csr.to_ragged()
+    lips = np.ones(g.n)
+    lips[1] = 30.0
+    params = MHLJParams(0.3, 0.5, 3)
+    rp = jnp.asarray(row_probs_padded(mh_importance(g, lips), g))
+    flat = mh_importance_rows_ragged(rg, lips)
+    for w, block_w, key_seed in ((37, 16, 0), (300, 128, 1), (129, 64, 2)):
+        key = jax.random.PRNGKey(key_seed)
+        nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+        ref_n, ref_h = _engine(csr, params, rp, "scan").step(key, nodes)
+        candidates = [
+            _engine(csr, params, rp, "pallas", layout="sparse",
+                    block_w=block_w),
+            _engine(csr, params, rp, "pallas", layout="dense",
+                    block_w=block_w),
+            _engine(csr, params, rp, "pallas", layout="bucketed",
+                    block_w=block_w),
+            _engine(csr, params, rp, "pallas", layout="ragged",
+                    block_w=block_w),
+            _engine(csr, params, rp, "scan", layout="ragged"),
+            WalkEngine.from_graph(
+                rg, params, row_probs=flat, backend="pallas",
+                block_w=block_w,
+            ),
+            WalkEngine.from_graph(
+                rg, params, row_probs=flat, backend="scan",
+            ),
+        ]
+        for eng in candidates:
+            n2, h2 = eng.step(key, nodes)
+            np.testing.assert_array_equal(np.asarray(ref_n), np.asarray(n2))
+            np.testing.assert_array_equal(np.asarray(ref_h), np.asarray(h2))
+
+
+def test_ragged_rows_from_table_flat_builder_and_lipschitz_agree():
+    """The three ragged row sources — shared padded table (exact flatten),
+    flat numpy builder, live-lipschitz chunked build — produce engines
+    whose flat CDFs invert to the identical walk per key (the builder
+    chunks through the same block math at the same width, so this is
+    bitwise, not approximate).  The numpy-builder source is additionally
+    checked entry-for-entry against the padded numpy builder."""
+    from repro.core import flat_edge_values, mh_importance_rows
+
+    csr = barabasi_albert(90, 3, seed=9, layout="csr")
+    rg = csr.to_ragged()
+    lips = np.exp(np.random.default_rng(4).normal(0, 0.7, csr.n))
+    params = MHLJParams(0.25, 0.5, 3)
+    flat = mh_importance_rows_ragged(rg, lips)
+    table = mh_importance_rows(csr, lips)
+    np.testing.assert_array_equal(
+        flat.view(np.int32),
+        flat_edge_values(rg.indptr, rg.degrees, table).view(np.int32),
+    )
+    key = jax.random.PRNGKey(21)
+    nodes = jnp.arange(70, dtype=jnp.int32) % csr.n
+    engines = [
+        WalkEngine.from_graph(
+            rg, params, row_probs=flat, backend="scan"
+        ),
+        WalkEngine.from_graph(
+            csr, params, row_probs=jnp.asarray(table), backend="scan",
+            layout="ragged",
+        ),
+    ]
+    results = [eng.step(key, nodes) for eng in engines]
+    # live-lipschitz source matches the jnp sparse build it chunks through
+    eng_live = WalkEngine.from_graph(
+        csr, params, lipschitz=jnp.asarray(lips, jnp.float32),
+        backend="scan", layout="ragged",
+    )
+    eng_live_sparse = WalkEngine.from_graph(
+        csr, params, lipschitz=jnp.asarray(lips, jnp.float32),
+        backend="scan", layout="sparse",
+    )
+    n_l, h_l = eng_live.step(key, nodes)
+    n_s, h_s = eng_live_sparse.step(key, nodes)
+    np.testing.assert_array_equal(np.asarray(n_l), np.asarray(n_s))
+    np.testing.assert_array_equal(np.asarray(h_l), np.asarray(h_s))
+    for n2, h2 in results[1:]:
+        np.testing.assert_array_equal(
+            np.asarray(results[0][0]), np.asarray(n2)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(results[0][1]), np.asarray(h2)
+        )
+
+
+def test_ragged_engine_resident_state_is_exactly_o_e():
+    """The exactly-O(E) guarantee: a ragged engine carries no padded and
+    no per-bucket table — every array leaf is one-dimensional with at most
+    nnz + n + 1 entries — and a ``from_edges(layout='ragged')`` graph
+    never holds a padded tensor at all.  Asking for full-width rows
+    raises."""
+    from repro.core import from_edges
+
+    idx = np.arange(200, dtype=np.int64)
+    graph = from_edges(
+        200, idx, (idx + 1) % 200, name="ring-ragged", layout="ragged"
+    )
+    assert not hasattr(graph, "neighbors")  # the padded tensor never exists
+    assert not hasattr(graph, "buckets")
+    params = MHLJParams(0.2, 0.5, 3)
+    lips = jnp.ones(graph.n)
+    eng = WalkEngine.from_graph(graph, params, lipschitz=lips)
+    assert eng.layout == "ragged"
+    assert eng.neighbors is None and eng.row_probs is None
+    assert eng.bucket_neighbors is None and eng.bucket_rows is None
+    nnz, n = graph.num_edges, graph.n
+    for leaf in jax.tree_util.tree_leaves(eng):
+        assert jnp.ndim(leaf) <= 1  # nothing padded, nothing bucketed
+        assert jnp.size(leaf) <= nnz + n + 1
+    assert int(eng.edge_cdf.shape[0]) == nnz  # the O(E) row state, exactly
+    with pytest.raises(ValueError, match="ragged layout"):
+        eng.rows_table()
+    with pytest.raises(ValueError, match="ragged layout"):
+        eng.rows_for(jnp.arange(4, dtype=jnp.int32))
+    # ragged precomputes its CDF at construction: a row-source-less build
+    # fails loudly instead of deferring to a live path that cannot exist
+    with pytest.raises(ValueError, match="precomputes its flat per-edge CDF"):
+        WalkEngine.from_graph(graph, params, layout="ragged")
+    nodes = jnp.arange(33, dtype=jnp.int32) % graph.n
+    nxt, hops = eng.step(jax.random.PRNGKey(1), nodes)
+    nxt = np.asarray(nxt)
+    assert ((nxt >= 0) & (nxt < graph.n)).all()
+    assert ((np.asarray(hops) >= 1) & (np.asarray(hops) <= params.r)).all()
+
+
+def test_ragged_run_matches_sparse_run():
+    """Whole trajectories (engine.run) agree bitwise between the sparse
+    and ragged layouts — so the stationary/chi-square harness covers the
+    ragged path exactly as it covers the others."""
+    g = barabasi_albert(48, 3, seed=7, layout="dense")
+    csr = g.to_csr()
+    lips = np.exp(np.random.default_rng(2).normal(0, 0.5, g.n))
+    params = MHLJParams(0.25, 0.5, 3)
+    rp = jnp.asarray(row_probs_padded(mh_importance(g, lips), g))
+    v0s = jnp.arange(24, dtype=jnp.int32) % csr.n
+    key = jax.random.PRNGKey(3)
+    n_sp, h_sp = _engine(csr, params, rp, "pallas", layout="sparse").run(
+        key, v0s, 100
+    )
+    for backend in ("pallas", "scan"):
+        n_rg, h_rg, aux = _engine(
+            csr, params, rp, backend, layout="ragged"
+        ).run(key, v0s, 100, with_aux=True)
+        np.testing.assert_array_equal(np.asarray(n_sp), np.asarray(n_rg))
+        np.testing.assert_array_equal(np.asarray(h_sp), np.asarray(h_rg))
+        # no ladder -> no compaction -> the overflow telemetry is all-False
+        assert not np.asarray(aux["compact_overflow"]).any()
+
+
+def test_ragged_kernel_oracle_parity():
+    """The fused scalar-prefetch kernel and its ref oracle agree bitwise
+    on hand-built flat inputs, including W not a block multiple (padded
+    kernel lanes sliced off)."""
+    from repro.core import ragged_edge_cdf
+    from repro.kernels.walk_transition.kernel import walk_transition_ragged
+    from repro.kernels.walk_transition.ref import walk_transition_ragged_ref
+
+    g = lollipop(12, 7)
+    csr = g.to_csr()
+    lips = np.ones(g.n)
+    lips[2] = 20.0
+    rp = row_probs_padded(mh_importance(g, lips), g)
+    indptr = jnp.asarray(csr.indptr, jnp.int32)
+    indices = jnp.asarray(csr.indices, jnp.int32)
+    degrees = jnp.asarray(csr.degrees, jnp.int32)
+    edge_cdf = ragged_edge_cdf(
+        csr.indptr, csr.indices, csr.degrees, row_probs=rp
+    )
+    p_d, r = 0.5, 3
+    w = 75  # not a multiple of block_w=16
+    nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+    u = jax.random.uniform(jax.random.PRNGKey(5), (w, 3 + r))
+    u = u.at[:, 0].set((u[:, 0] < 0.3).astype(jnp.float32))
+    got = walk_transition_ragged(
+        nodes, indptr, degrees, indices, edge_cdf, u,
+        p_d=p_d, r=r, max_degree=csr.max_degree, block_w=16, interpret=True,
+    )
+    want = walk_transition_ragged_ref(
+        nodes, indptr, degrees, indices, edge_cdf, u,
+        p_d=p_d, r=r, max_degree=csr.max_degree,
+    )
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_ragged_overflow_telemetry_surfaces_compaction_fallbacks():
+    """step/run aux telemetry: a compacted bucketed engine with starved
+    capacities reports compact_overflow=True (the step that lax.cond'ed to
+    the full dispatch), a healthy one reports False — so the static
+    capacity rule is auditable from production sweeps."""
+    g = barabasi_albert(48, 3, seed=1, layout="dense")
+    csr = g.to_csr()
+    lips = np.ones(g.n)
+    params = MHLJParams(0.25, 0.5, 3)
+    rp = jnp.asarray(row_probs_padded(mh_importance(g, lips), g))
+    nodes = jnp.arange(300, dtype=jnp.int32) % csr.n
+    key = jax.random.PRNGKey(13)
+    starved = WalkEngine.from_graph(
+        csr, params, row_probs=rp, backend="scan", layout="bucketed",
+        capacity_factor=1e-6,
+    )
+    _, _, aux = starved.step(key, nodes, with_aux=True)
+    assert bool(aux["compact_overflow"])
+    healthy = WalkEngine.from_graph(
+        csr, params, row_probs=rp, backend="scan", layout="bucketed"
+    )
+    _, _, aux = healthy.step(key, nodes, with_aux=True)
+    assert not bool(aux["compact_overflow"])
+    # run() stacks the per-step flags
+    _, _, aux = healthy.run(key, nodes[:16], 20, with_aux=True)
+    assert np.asarray(aux["compact_overflow"]).shape == (20,)
 
 
 def test_pure_csr_graph_end_to_end():
