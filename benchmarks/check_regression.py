@@ -39,6 +39,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -48,6 +49,31 @@ if REPO not in sys.path:  # allow `python benchmarks/check_regression.py`
 BASELINE_PATH = os.path.join(REPO, "results", "BENCH_large_graph.json")
 METRIC_SUFFIX = "_steps_per_sec"
 REFERENCE_LABEL = "sparse"
+# Fleet rows (`fleet_w{W}_aggregate_walk_steps_per_sec`) have no sparse
+# sibling: they normalize against the same sweep's smallest-W row, so the
+# gate watches the W-scaling shape — and a fleet configuration vanishing
+# from the sweep still fails loudly via the usual missing-key path.
+AGGREGATE_SUFFIX = "_aggregate_walk" + METRIC_SUFFIX
+_AGGREGATE_RE = re.compile(
+    r"^(?P<prefix>.+)_w(?P<w>\d+)" + re.escape(AGGREGATE_SUFFIX) + r"$"
+)
+
+
+def aggregate_ratios(derived: dict) -> dict:
+    """Fleet aggregate-throughput keys normalized by the smallest-W row of
+    the same ``{prefix}_w{W}`` group (which is omitted, trivially 1)."""
+    groups: dict = {}
+    for key, val in derived.items():
+        m = _AGGREGATE_RE.match(key)
+        if m and val:
+            groups.setdefault(m["prefix"], []).append((int(m["w"]), key, val))
+    out = {}
+    for rows in groups.values():
+        rows.sort()
+        ref = rows[0][2]
+        for _, key, val in rows[1:]:
+            out[key] = val / ref
+    return out
 
 
 def fresh_smoke_derived() -> dict:
@@ -65,12 +91,15 @@ def normalized_ratios(derived: dict) -> dict:
     SAME run: ``{tag}_{label}_steps_per_sec`` -> value / value of
     ``{tag}_sparse_steps_per_sec``.  Machine speed cancels in the ratio.
     The sparse keys themselves (trivially 1) and keys without a sparse
-    sibling are omitted."""
+    sibling are omitted.  Fleet aggregate keys normalize within their own
+    W-sweep instead (:func:`aggregate_ratios`)."""
     ref_suffix = f"_{REFERENCE_LABEL}{METRIC_SUFFIX}"
     tags = [k[: -len(ref_suffix)] for k in derived if k.endswith(ref_suffix)]
-    out = {}
+    out = aggregate_ratios(derived)
     for key, val in derived.items():
         if not key.endswith(METRIC_SUFFIX) or not val:
+            continue
+        if _AGGREGATE_RE.match(key):  # handled by aggregate_ratios above
             continue
         fam = key[: -len(METRIC_SUFFIX)]
         tag = next(

@@ -43,6 +43,24 @@ rotted path fails tier-1, not just the default; its derived steps/sec
 also feed the CI regression gate (``benchmarks/check_regression.py``).
 The JSON result lands in ``results/BENCH_large_graph.json`` (plus the
 harness's usual ``bench_large_graph_walk.json``).
+
+The **fleet sweep** (every tier, the ``fleet`` section of the JSON)
+measures the mesh-sharded W-walker path of ``repro.walk_sgd.fleet``: the
+walker batch is sharded over the ``walker`` logical axis of
+``repro.sharding.rules`` (``repro.launch.mesh.make_walker_mesh`` — on
+CPU, multi-device only under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and the ragged
+engine's ``run`` is timed end to end, recording ``num_walkers`` and
+**aggregate** walk-steps/s per fleet size (the ROADMAP's 10M+ aggregate
+target is this number), plus a convergence-vs-num-walkers training sweep
+through ``repro.walk_sgd.run_rw_sgd_multi`` with periodic averaging —
+the arXiv:2604.12260 multi-walker claim (variance term ~1/W, bias floor
+unchanged) measured in the same JSON the regression gate watches.  The
+fleet rows run on the scan backend: off-TPU the pallas interpret path
+would time the interpreter, not the sharded engine, and the gate
+normalizes fleet rows against their own smallest-W row
+(``benchmarks/check_regression.py``), so the two backends never mix in
+one ratio.
 """
 from __future__ import annotations
 
@@ -206,6 +224,105 @@ def _sweep_one(
     }
 
 
+def _fleet_sweep(scale: str) -> tuple[dict, dict]:
+    """Mesh-sharded fleet throughput + convergence-vs-num-walkers sweep.
+
+    Returns ``(fleet_section, derived)``.  Throughput rows time the ragged
+    engine's batched ``run`` with the walker batch sharded over the
+    ``walker`` logical axis (replication fallback when W doesn't divide
+    the mesh) and record **aggregate** walk-steps/s; the convergence rows
+    train W walks with periodic averaging through ``run_rw_sgd_multi``
+    on the multi-walk benchmark's regression setting and record the
+    final averaged-model excess over the least-squares floor — the
+    arXiv:2604.12260 ~1/W variance claim, next to the throughput it buys.
+    """
+    from repro.data import make_heterogeneous_regression
+    from repro.launch.mesh import make_walker_mesh
+    from repro.sharding.rules import resolve_walker_axis
+    from repro.walk_sgd import run_rw_sgd_multi
+
+    mesh = make_walker_mesh()
+    n_dev = int(mesh.devices.size)
+    fleet_sizes = {
+        "smoke": (64, 128), "quick": (1024, 4096), "full": (2048, 8192),
+    }[scale]
+    num_steps = {"smoke": 30, "quick": 100, "full": 200}[scale]
+    if scale == "smoke":
+        graph = ring(1_500, layout="csr")
+    else:
+        graph_n = {"quick": 8_000, "full": 100_000}[scale]
+        graph = barabasi_albert(graph_n, 3, seed=0, layout="csr")
+    rng = np.random.default_rng(11)
+    lips = jnp.asarray(np.exp(rng.normal(0.0, 1.0, graph.n)), jnp.float32)
+    # ragged layout on the scan backend: off-TPU the pallas interpret path
+    # would time the interpreter, not the sharded engine (module docstring)
+    engine = WalkEngine.from_graph(
+        graph, PARAMS, lipschitz=lips, backend="scan", layout="ragged"
+    )
+
+    fleet: dict = {"mesh_devices": n_dev, "graph_n": graph.n,
+                   "layout": "ragged", "backend": "scan"}
+    derived: dict = {"fleet_mesh_devices": n_dev}
+    for w in fleet_sizes:
+        sharding = resolve_walker_axis(w, mesh)
+        eng_w = (
+            engine.with_walker_sharding(sharding)
+            if sharding is not None else engine
+        )
+        v0s = jnp.asarray(rng.integers(0, graph.n, w), jnp.int32)
+        if sharding is not None:
+            v0s = jax.device_put(v0s, sharding)
+        run_fn = jax.jit(
+            lambda k, v, e=eng_w: e.run(k, v, num_steps)
+        )
+        nodes, _ = run_fn(jax.random.PRNGKey(3), v0s)  # compile + warm
+        nodes.block_until_ready()
+        t0 = time.perf_counter()
+        nodes, _ = run_fn(jax.random.PRNGKey(4), v0s)
+        nodes.block_until_ready()
+        dt = time.perf_counter() - t0
+        agg = float(w * num_steps / dt)
+        fleet[f"w{w}"] = {
+            "num_walkers": w,
+            "sharded": sharding is not None,
+            "aggregate_walk_steps_per_sec": agg,
+        }
+        derived[f"fleet_w{w}_num_walkers"] = w
+        derived[f"fleet_w{w}_aggregate_walk_steps_per_sec"] = agg
+
+    # convergence-vs-num-walkers: same recipe as benchmarks/multi_walk.py,
+    # but through the mesh-sharded fleet path with *periodic* averaging
+    conv_n = 128
+    conv_graph = ring(conv_n)
+    data = make_heterogeneous_regression(
+        conv_n, dim=6, sigma_high_sq=100.0, p_high=0.03, seed=7,
+        x_star_scale=3.0,
+    )
+    gamma = float(0.3 / data.lipschitz.mean())
+    conv_T = {"smoke": 2_000, "quick": 10_000, "full": 20_000}[scale]
+    conv_ws = (1, 8) if scale == "smoke" else (1, 2, 4, 8)
+    avg_every = 50
+    floor = float(data.mse(data.optimum()))
+    conv: dict = {}
+    for w in conv_ws:
+        res = run_rw_sgd_multi(
+            "mhlj", conv_graph, data, gamma, conv_T, w,
+            mhlj_params=PARAMS, seed=0, avg_every=avg_every, mesh=mesh,
+        )
+        final = float(res.avg_mse[-1])
+        conv[f"w{w}"] = {
+            "num_walkers": w,
+            "avg_every": avg_every,
+            "final_avg_mse": final,
+            "excess_over_floor": final - floor,
+            "transitions_per_update": res.transitions_per_update,
+        }
+        derived[f"fleet_conv_w{w}_excess"] = final - floor
+    fleet["ls_floor_mse"] = floor
+    fleet["convergence_vs_num_walkers"] = conv
+    return fleet, derived
+
+
 def run(quick: bool = False, scale: str | None = None) -> dict:
     scale = scale or ("quick" if quick else "full")
     num_walks = {"smoke": 128, "quick": 1024, "full": 2048}[scale]
@@ -275,6 +392,9 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
                 / fam["bucketed_compact"]["walk_steps_per_sec"]
             )
         out[tag] = fam
+    fleet, fleet_derived = _fleet_sweep(scale)
+    out["fleet"] = fleet
+    derived.update(fleet_derived)
     out["derived"] = derived
 
     if scale != "smoke":  # don't clobber real sweeps from the anti-rot tier

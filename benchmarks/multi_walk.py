@@ -1,22 +1,31 @@
 """Beyond-paper: W parallel MHLJ walks + parameter averaging.
 
 The paper runs ONE walk.  On a multi-pod mesh we can run one walk per pod
-and average (walk_sgd/multi_walk.py).  Theorem 1's variance term scales
+and average (``repro.walk_sgd.fleet``).  Theorem 1's variance term scales
 like 1/W under averaging while the O(p_J^2) bias term does not — so
 averaging should cut the noisy component of the error, not the floor.
 
 This benchmark measures exactly that on the paper's regression setting,
-through the unified walk engine: each repetition trains all W walks in ONE
-``run_rw_sgd_multi`` scan (a single batched ``WalkEngine.step`` services
-every walk per iteration), models averaged at the end (one-shot local-SGD
-averaging), vs the single-walk baseline.
+through the unified fleet scan: each repetition trains all W walks in ONE
+``run_rw_sgd_multi`` call (a single batched ``WalkEngine.step`` services
+every walk per iteration, the walker batch sharded over the ``walker``
+mesh axis of ``repro.launch.mesh.make_walker_mesh``), models averaged at
+the end (one-shot local-SGD averaging), vs the single-walk baseline.
+Each W row also records ``num_walkers`` and the fleet's **aggregate**
+update throughput (W x T / wall-clock, min over repetitions so compile
+time drops out); the periodic-averaging variant and the sharded
+steps/s-vs-W scaling live in the fleet section of
+``benchmarks/large_graph_walk.py``.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.core import MHLJParams, ring
 from repro.data import make_heterogeneous_regression
+from repro.launch.mesh import make_walker_mesh
 from repro.walk_sgd import run_rw_sgd_multi
 
 NAME = "multi_walk"
@@ -36,29 +45,37 @@ def run(quick: bool = False) -> dict:
     T = 10_000 if quick else 20_000
     params = MHLJParams(0.1, 0.5, 3)
     reps = 3 if quick else 5
+    mesh = make_walker_mesh()
 
     rng = np.random.default_rng(0)
     out_w = {}
     for w in (1, 2, 4, 8):
         final_mses = []
         hops_per_update = []
+        rep_secs = []
         for rep in range(reps):
+            t0 = time.perf_counter()
             res = run_rw_sgd_multi(
                 "mhlj", graph, data, gamma, T, w, mhlj_params=params,
-                seed=1000 * rep, v0s=rng.integers(0, n, size=w),
+                seed=1000 * rep, v0s=rng.integers(0, n, size=w), mesh=mesh,
             )
+            rep_secs.append(time.perf_counter() - t0)
             final_mses.append(data.mse(res.x_avg))
             hops_per_update.append(res.transitions_per_update)
         out_w[w] = {
+            "num_walkers": w,
             "mean_final_mse": float(np.mean(final_mses)),
             "std_final_mse": float(np.std(final_mses)),
             "hops_per_update": float(np.mean(hops_per_update)),
+            # min over reps: rep 0 pays jit compile, the rest are steady-state
+            "aggregate_walk_steps_per_sec": float(w * T / min(rep_secs)),
         }
 
     floor = data.mse(data.optimum())
     excess = {w: out_w[w]["mean_final_mse"] - floor for w in out_w}
     return {
         "claim": PAPER_CLAIM,
+        "mesh_devices": int(mesh.devices.size),
         "walks": out_w,
         "ls_floor_mse": floor,
         "excess_over_floor": {str(w): float(e) for w, e in excess.items()},
@@ -66,5 +83,8 @@ def run(quick: bool = False) -> dict:
             "excess_w1": excess[1],
             "excess_w8": excess[8],
             "variance_reduction_w8": excess[1] / max(excess[8], 1e-12),
+            "aggregate_walk_steps_per_sec_w8": (
+                out_w[8]["aggregate_walk_steps_per_sec"]
+            ),
         },
     }

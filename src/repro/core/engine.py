@@ -570,6 +570,13 @@ class WalkEngine:
     # -- ragged-layout state (the O(E) true-degree path) --------------------
     edge_cdf: Optional[jnp.ndarray] = None  # (nnz,) float32 flat per-edge CDF
     max_degree: Optional[int] = None  # static bound for the binary search
+    # -- fleet sharding (static; see repro.walk_sgd.fleet) -------------------
+    walker_sharding: Optional[object] = None  # jax NamedSharding for the W
+    #   walker axis; None = single-device (no constraints emitted).  When
+    #   set, step/run pin the per-walk uniform block and outputs to the
+    #   walker mesh axis so GSPMD keeps the whole transition
+    #   walker-parallel (graph state stays replicated per
+    #   repro.sharding.rules.fleet_specs).
 
     @classmethod
     def from_graph(
@@ -1015,6 +1022,31 @@ class WalkEngine:
 
         return jax.lax.cond(overflow, fallback, compacted, None), overflow
 
+    # -- fleet sharding ------------------------------------------------------
+
+    def with_walker_sharding(self, sharding) -> "WalkEngine":
+        """Shard-aware engine: pin walker-axis intermediates/outputs of
+        :meth:`step`/:meth:`run` to ``sharding`` (a ``NamedSharding`` for a
+        1-D ``(W,)`` walker batch, e.g. from
+        ``repro.sharding.rules.resolve_walker_axis``).  The constraint is
+        value-preserving — sharded results stay bitwise-identical per key
+        to the single-device engine (``tests/test_fleet.py``)."""
+        return dataclasses.replace(self, walker_sharding=sharding)
+
+    def _constrain_walkers(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Pin dim 0 of ``x`` to the walker mesh axis (no-op when unset)."""
+        s = self.walker_sharding
+        if s is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        spec = PartitionSpec(
+            *(tuple(s.spec) + (None,) * x.ndim)[: x.ndim]
+        )
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(s.mesh, spec)
+        )
+
     # -- the transition -----------------------------------------------------
 
     def step(
@@ -1057,6 +1089,8 @@ class WalkEngine:
         )
         flag = (u[:, U_JUMP] < p_j_t).astype(jnp.float32)
         u = u.at[:, U_JUMP].set(flag)
+        if self.walker_sharding is not None and not squeeze:
+            u = self._constrain_walkers(u)
         overflow = jnp.asarray(False)
 
         if self.layout == "ragged":
@@ -1160,6 +1194,9 @@ class WalkEngine:
                 self.p_d,
                 self.r,
             )
+        if self.walker_sharding is not None and not squeeze:
+            nxt = self._constrain_walkers(nxt)
+            hops = self._constrain_walkers(hops)
         if squeeze:
             nxt, hops = nxt[0], hops[0]
         if with_aux:
@@ -1237,6 +1274,7 @@ _ENGINE_DATA_FIELDS = (
 _ENGINE_META_FIELDS = (
     "p_d", "r", "backend", "layout", "block_w", "interpret",
     "compact", "capacity_factor", "bucket_share", "max_degree",
+    "walker_sharding",  # NamedSharding is hashable -> valid static aux
 )
 
 

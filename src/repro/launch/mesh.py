@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_smoke_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_smoke_mesh", "make_walker_mesh", "HW"]
 
 
 def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
@@ -27,6 +27,18 @@ def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
 def make_smoke_mesh():
     """1-device mesh for CPU smoke tests (same axis names as production)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_walker_mesh(num_devices: int | None = None):
+    """1-D fleet mesh: ``num_devices`` (default: all visible devices) on the
+    ``data`` axis — the mesh axis the ``walker`` logical axis of
+    ``repro.sharding.rules`` maps to, so a W-walker ``WalkFleet`` shards
+    its walker batch across every device and the periodic cross-walker
+    model average becomes one all-reduce along ``data``.  On CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes to get a multi-device fleet mesh (the CI sharded leg)."""
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return jax.make_mesh((n,), ("data",))
 
 
 class HW:

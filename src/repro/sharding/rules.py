@@ -37,6 +37,9 @@ __all__ = [
     "cache_specs",
     "opt_state_specs",
     "named_shardings",
+    "resolve_walker_axis",
+    "walker_batch_specs",
+    "fleet_specs",
 ]
 
 # logical axes for the TRAILING dims of each known leaf name
@@ -85,6 +88,10 @@ CACHE_RULES: dict[str, tuple] = {
 }
 
 # logical -> mesh axis, per profile.  "batch" resolves to pod+data jointly.
+# "walker" is the W-walker fleet axis of repro.walk_sgd.fleet: the leading
+# dim of every walker-batch leaf (walk nodes, stacked per-walker model /
+# optimizer / walk state) maps to the data mesh axis, so the periodic
+# cross-walker model average lowers to an all-reduce along "data".
 PROFILES: dict[str, dict] = {
     "fsdp_tp": {
         "embed": "data",
@@ -96,6 +103,7 @@ PROFILES: dict[str, dict] = {
         "expert": "model",
         "batch": ("pod", "data"),
         "kv_seq": None,
+        "walker": "data",
     },
     "tp_decode": {
         "embed": None,
@@ -107,6 +115,7 @@ PROFILES: dict[str, dict] = {
         "expert": "model",
         "batch": ("pod", "data"),
         "kv_seq": None,
+        "walker": "data",
     },
     "fsdp_decode": {
         "embed": "data",
@@ -118,6 +127,12 @@ PROFILES: dict[str, dict] = {
         "expert": "model",
         "batch": ("pod", "data"),
         "kv_seq": None,
+        "walker": "data",
+    },
+    # pure walker-parallel fleet (regression path / engine sweeps): the
+    # whole mesh is one walker axis, graph state replicated.
+    "fleet": {
+        "walker": "data",
     },
 }
 
@@ -270,3 +285,63 @@ def named_shardings(spec_tree, mesh: Mesh):
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Walker-fleet specs (repro.walk_sgd.fleet): the "walker" logical axis.
+# ---------------------------------------------------------------------------
+
+
+def resolve_walker_axis(
+    num_walks: int, mesh: Mesh, profile_name: str = "fleet"
+) -> Optional[NamedSharding]:
+    """NamedSharding for a 1-D ``(W,)`` walker-axis leaf, or ``None`` when
+    the profile's walker mesh axis is absent or W does not divide it
+    (replication fallback — same degradation rule as every other logical
+    axis here)."""
+    used: set = set()
+    axis = _resolve_axis(
+        "walker", PROFILES[profile_name], _mesh_sizes(mesh), num_walks, used
+    )
+    if axis is None:
+        return None
+    return NamedSharding(mesh, P(axis))
+
+
+def walker_batch_specs(
+    tree, num_walks: int, mesh: Mesh, profile_name: str = "fleet"
+):
+    """Spec tree for a walker-stacked pytree: every leaf whose leading dim
+    equals ``num_walks`` gets the walker mesh axis on dim 0 (stacked
+    per-walker params / optimizer state / walk state / ``x0s``); leaves
+    without the walker batch dim — and everything when W does not divide
+    the axis — replicate."""
+    profile = PROFILES[profile_name]
+    mesh_sizes = _mesh_sizes(mesh)
+
+    def assign(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 1 and shape[0] == num_walks:
+            used: set = set()
+            axis = _resolve_axis("walker", profile, mesh_sizes, shape[0], used)
+            if axis is not None:
+                return P(axis, *([None] * (len(shape) - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(assign, tree)
+
+
+def fleet_specs(fleet, mesh: Mesh, profile_name: str = "fleet"):
+    """Spec tree matching a ``repro.walk_sgd.fleet.WalkFleet``: the walk
+    ``nodes`` ride the walker axis, every engine leaf (padded neighbor
+    tables, ragged CSR ``indptr``/``indices`` row state, the flat per-edge
+    ``edge_cdf``) is **replicated** — walker positions are data-dependent
+    gathers into the graph, so keeping graph state whole on every device
+    avoids cross-device gathers on the walk's hot path."""
+    import dataclasses
+
+    wspec = walker_batch_specs(
+        {"nodes": fleet.nodes}, fleet.num_walks, mesh, profile_name
+    )["nodes"]
+    engine_specs = jax.tree_util.tree_map(lambda _: P(), fleet.engine)
+    return dataclasses.replace(fleet, engine=engine_specs, nodes=wspec)

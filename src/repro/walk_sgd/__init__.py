@@ -4,7 +4,20 @@ from repro.walk_sgd.trainer import (
     run_rw_sgd,
     run_rw_sgd_multi,
 )
-from repro.walk_sgd.comm_model import CommModel, comm_report
+from repro.walk_sgd.comm_model import (
+    CommModel,
+    comm_report,
+    fleet_averaging_traffic,
+)
+from repro.walk_sgd.fleet import (
+    WalkFleet,
+    fleet_average,
+    init_fleet_walk_state,
+    make_fleet_step,
+    run_fleet,
+    sample_initial_nodes,
+    shard_walker_batch,
+)
 
 __all__ = [
     "MultiRWSGDResult",
@@ -13,4 +26,12 @@ __all__ = [
     "run_rw_sgd_multi",
     "CommModel",
     "comm_report",
+    "fleet_averaging_traffic",
+    "WalkFleet",
+    "fleet_average",
+    "init_fleet_walk_state",
+    "make_fleet_step",
+    "run_fleet",
+    "sample_initial_nodes",
+    "shard_walker_batch",
 ]

@@ -1,0 +1,410 @@
+"""One fleet loop: the W-walker batch behind every walk-SGD training path.
+
+The repo used to carry three divergent walk-SGD loops — the single-walk
+``trainer._run_scan``, the batched ``trainer._run_scan_multi`` and the
+LLM orchestrator's ``WalkContext.advance``/``make_train_step`` step — none
+of which touched the mesh/sharding stack.  This module collapses them into
+one **fleet** abstraction: the W walker batch (walk nodes, per-walker
+model/optimizer state, per-walker PRNG streams on the LLM path) is one
+pytree whose walker-batch leaves carry a leading ``(W, ...)`` axis, the
+``walker`` logical axis of ``repro.sharding.rules``.  Sharded over the
+mesh ``data`` axis (``repro.sharding.rules.fleet_specs`` /
+``repro.launch.mesh.make_walker_mesh``) the fleet trains W walks across
+devices off ONE batched :class:`~repro.core.engine.WalkEngine` transition
+per step, with the graph state — padded tables, ragged CSR row state,
+the flat per-edge CDF — **replicated** (walk positions are data-dependent
+gathers into the graph; replication keeps them local).
+
+Periodic cross-walker model averaging (``avg_every``-style local SGD) is
+:func:`fleet_average`: a mean over the leading walker axis, which XLA
+lowers to an all-reduce along the mesh axis the walker axis is sharded
+over — so the only cross-device traffic of the fleet is one model-sized
+collective every ``avg_every`` steps
+(``repro.walk_sgd.comm_model.fleet_averaging_traffic`` prices it).
+
+This is the multi-walker regime of the journal extension *Decentralized
+Learning via Random Walk with Jumps* (arXiv:2604.12260): W independent
+MHLJ walks over the same graph, each carrying its own model, periodically
+averaged.  Averaging divides the Markov-sampling variance term of
+Theorem 1 by ~W while the O(p_J^2) perturbation bias is unchanged — the
+convergence-vs-num-walkers sweep in ``benchmarks/multi_walk.py`` /
+``benchmarks/large_graph_walk.py`` measures exactly that.
+
+Consumers (all three former loops route through here):
+
+* ``repro.walk_sgd.trainer.run_rw_sgd`` — the W=1 case of
+  :func:`run_fleet` (bitwise-identical per key to the pre-refactor
+  single-walk scan; ``tests/test_fleet.py`` pins it against a frozen
+  oracle copy).
+* ``repro.walk_sgd.trainer.run_rw_sgd_multi`` — constructs a
+  :class:`WalkFleet` and calls :func:`run_fleet`, optionally under a
+  mesh.
+* ``repro.walk_sgd.llm_trainer`` / ``repro.walk_sgd.multi_walk`` — thin
+  consumers: ``WalkContext.advance`` advances a one-walker fleet, and
+  :func:`make_fleet_step` is THE W-walker LLM step
+  (``make_multi_walk_step`` delegates here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import WalkEngine
+from repro.models import regression as reg
+from repro.sharding.rules import (
+    fleet_specs,
+    named_shardings,
+    resolve_walker_axis,
+    walker_batch_specs,
+)
+
+__all__ = [
+    "WalkFleet",
+    "sample_initial_nodes",
+    "fleet_average",
+    "run_fleet",
+    "shard_fleet",
+    "shard_walker_batch",
+    "make_fleet_step",
+    "init_fleet_walk_state",
+]
+
+
+def sample_initial_nodes(
+    n: int,
+    num_walks: int,
+    *,
+    seed: int = 0,
+    v0s: Optional[Sequence[int]] = None,
+) -> np.ndarray:
+    """THE initial-node seeding + validation for every multi-walk path.
+
+    ``v0s=None`` samples ``num_walks`` start nodes with
+    ``np.random.default_rng(seed)`` (without replacement while the fleet
+    fits the graph, with replacement beyond) — the exact stream the
+    pre-fleet ``run_rw_sgd_multi`` and ``init_multi_walk_state`` each
+    duplicated, now in one place so the regression and LLM paths sample
+    identical fleets for the same seed.  Explicit ``v0s`` are validated
+    (shape ``(num_walks,)``, every node in ``[0, n)``).
+    """
+    if v0s is None:
+        rng = np.random.default_rng(seed)
+        v0s = rng.choice(n, size=num_walks, replace=num_walks > n)
+    v0s = np.asarray(v0s, np.int32)
+    if v0s.shape != (num_walks,):
+        raise ValueError(f"v0s must have shape ({num_walks},), got {v0s.shape}")
+    if v0s.size and (int(v0s.min()) < 0 or int(v0s.max()) >= n):
+        raise ValueError(
+            f"v0s must be node ids in [0, {n}), got range "
+            f"[{int(v0s.min())}, {int(v0s.max())}]"
+        )
+    return v0s
+
+
+def fleet_average(tree, do_avg=None):
+    """Cross-walker model average — THE ``avg_every`` collective.
+
+    Every leaf is averaged over its leading walker axis and re-broadcast
+    to all W walkers.  When the walker axis is sharded over a mesh axis
+    (``repro.sharding.rules.fleet_specs``), XLA lowers the mean to an
+    all-reduce along that axis — one model-sized collective, independent
+    of W (each device contributes its local partial mean; see
+    ``repro.walk_sgd.comm_model.fleet_averaging_traffic``).
+
+    ``do_avg=None`` averages unconditionally; a traced boolean makes the
+    average conditional per step (the ``(t + 1) % avg_every == 0`` gate of
+    the fleet loops) while keeping shapes static.
+    """
+
+    def avg(p):
+        m = jnp.broadcast_to(
+            jnp.mean(p, axis=0, keepdims=True), p.shape
+        ).astype(p.dtype)
+        return m if do_avg is None else jnp.where(do_avg, m, p)
+
+    return jax.tree_util.tree_map(avg, tree)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WalkFleet:
+    """W parallel walkers riding one batched engine — THE walker batch.
+
+    ``nodes`` is the ``(W,)`` walk-position vector (a scalar for the
+    one-walker LLM adapter, which keeps the engine's squeeze semantics),
+    the ``walker`` logical axis of ``repro.sharding.rules``; ``engine``
+    holds the replicated graph/row state.  Registered as a pytree
+    (``engine``/``nodes`` are children, ``num_walks``/``avg_every`` ride
+    as static aux data) so a fleet crosses ``jax.jit`` boundaries as a
+    plain argument exactly like the engine itself does.
+    """
+
+    engine: WalkEngine
+    nodes: jnp.ndarray  # (W,) int32 walk positions (scalar for W=1 adapter)
+    num_walks: int = 1  # static
+    avg_every: int = 0  # static: 0 = never average
+
+    @classmethod
+    def create(
+        cls,
+        engine: WalkEngine,
+        num_walks: int,
+        *,
+        v0s: Optional[Sequence[int]] = None,
+        seed: int = 0,
+        avg_every: int = 0,
+    ) -> "WalkFleet":
+        """Fleet with :func:`sample_initial_nodes` seeding/validation."""
+        n = int(engine.degrees.shape[0])
+        v0 = sample_initial_nodes(n, num_walks, seed=seed, v0s=v0s)
+        return cls(
+            engine=engine,
+            nodes=jnp.asarray(v0),
+            num_walks=num_walks,
+            avg_every=avg_every,
+        )
+
+    def advance(
+        self,
+        key: jax.Array,
+        *,
+        p_j=None,
+        lipschitz: Optional[jnp.ndarray] = None,
+    ):
+        """ONE batched MHLJ transition for all W walkers.
+
+        Returns ``(advanced_fleet, hops)``; ``hops`` is the Remark-1
+        physical transition count per walker.
+        """
+        nxt, hops = self.engine.step(
+            key, self.nodes, p_j=p_j, lipschitz=lipschitz
+        )
+        return dataclasses.replace(self, nodes=nxt), hops
+
+
+def _fleet_flatten(f: WalkFleet):
+    return (f.engine, f.nodes), (f.num_walks, f.avg_every)
+
+
+def _fleet_unflatten(aux, children) -> WalkFleet:
+    engine, nodes = children
+    num_walks, avg_every = aux
+    return WalkFleet(
+        engine=engine, nodes=nodes, num_walks=num_walks, avg_every=avg_every
+    )
+
+
+jax.tree_util.register_pytree_node(WalkFleet, _fleet_flatten, _fleet_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# THE fleet training scan (regression path): the single implementation that
+# replaced trainer._run_scan (its W=1 case) and trainer._run_scan_multi.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "use_weights", "loss_grad"),
+)
+def _fleet_scan(
+    key,
+    x0s,  # (W, dim) per-walker models
+    features,
+    targets,
+    weights,  # (n,) L_bar / L_v (ones when unweighted)
+    fleet: WalkFleet,  # pytree arg: arrays traced, W/avg_every/layout static
+    num_steps: int,
+    gamma: float,
+    p_j_sched,  # (num_steps,)
+    use_weights: bool,
+    loss_grad,  # static callable: grad of per-node loss
+):
+    engine = fleet.engine
+    avg_every = fleet.avg_every
+    grad_w = jax.vmap(loss_grad, in_axes=(0, 0, 0))
+
+    def step(carry, inputs):
+        xs, vs, t = carry
+        key_t, p_j_t = inputs
+        gs = grad_w(xs, features[vs], targets[vs])  # (W, dim)
+        ws = jnp.where(use_weights, weights[vs], 1.0)[:, None]
+        xs_new = xs - gamma * ws * gs
+        if avg_every > 0:
+            do_avg = (t + 1) % avg_every == 0
+            xs_new = fleet_average(xs_new, do_avg)
+        vs_next, hops = engine.step(key_t, vs, p_j=p_j_t)  # ONE batched call
+        mses = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
+            xs_new, features, targets
+        )
+        avg_mse = reg.mse_objective(xs_new.mean(axis=0), features, targets)
+        return (xs_new, vs_next, t + 1), (mses, avg_mse, vs, hops)
+
+    keys = jax.random.split(key, num_steps)
+    (xs_fin, _, _), (mses, avg_mses, nodes, hops) = jax.lax.scan(
+        step, (x0s, fleet.nodes, jnp.int32(0)), (keys, p_j_sched)
+    )
+    mse0 = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
+        x0s, features, targets
+    )
+    avg0 = reg.mse_objective(x0s.mean(axis=0), features, targets)
+    return (
+        xs_fin,
+        jnp.concatenate([mse0[None], mses]).T,  # (W, T+1)
+        jnp.concatenate([avg0[None], avg_mses]),  # (T+1,)
+        nodes.T,  # (W, T) node holding the model at update t
+        hops.T,  # (W, T)
+    )
+
+
+def shard_fleet(fleet: WalkFleet, mesh) -> WalkFleet:
+    """Place a fleet on ``mesh``: walker-axis leaves sharded, engine
+    replicated, and the engine made shard-aware.
+
+    The fleet's ``nodes`` get the ``walker`` logical axis's mesh axis
+    (``repro.sharding.rules.fleet_specs``; replication fallback when W
+    does not divide the axis), every engine leaf — padded tables, ragged
+    CSR state, the flat per-edge CDF — is replicated, and the engine is
+    handed the walker ``NamedSharding`` so its ``step``/``run`` keep the
+    per-walk uniforms and outputs partitioned over the walker axis
+    (:meth:`repro.core.engine.WalkEngine.with_walker_sharding`).
+    """
+    specs = fleet_specs(fleet, mesh)
+    fleet = jax.device_put(fleet, named_shardings(specs, mesh))
+    walker_sharding = resolve_walker_axis(fleet.num_walks, mesh)
+    if walker_sharding is not None:
+        fleet = dataclasses.replace(
+            fleet, engine=fleet.engine.with_walker_sharding(walker_sharding)
+        )
+    return fleet
+
+
+def shard_walker_batch(tree, num_walks: int, mesh):
+    """Place a walker-stacked pytree (leading ``(W, ...)`` leaves — stacked
+    params/opt/walk state on the LLM path, ``x0s`` on the regression path)
+    per ``repro.sharding.rules.walker_batch_specs``."""
+    specs = walker_batch_specs(tree, num_walks, mesh)
+    return jax.device_put(tree, named_shardings(specs, mesh))
+
+
+def run_fleet(
+    key: jax.Array,
+    x0s: jnp.ndarray,  # (W, dim)
+    features: jnp.ndarray,
+    targets: jnp.ndarray,
+    weights: jnp.ndarray,
+    fleet: WalkFleet,
+    num_steps: int,
+    gamma: float,
+    p_j_sched: jnp.ndarray,
+    use_weights: bool,
+    loss_grad: Callable,
+    *,
+    mesh=None,
+):
+    """Run the fleet training scan, optionally mesh-sharded.
+
+    With ``mesh``, the walker batch (``x0s`` and the fleet's nodes) is
+    sharded over the ``walker`` logical axis, graph/data state is
+    replicated, and the scan's periodic :func:`fleet_average` lowers to an
+    all-reduce along the walker mesh axis.  Without a mesh this is exactly
+    the pre-fleet single-device scan — bitwise-identical per key
+    (``tests/test_fleet.py`` pins both paths against the frozen
+    pre-refactor oracle).
+
+    Returns ``(x_final (W, dim), mse (W, T+1), avg_mse (T+1,),
+    update_nodes (W, T), hops (W, T))``.
+    """
+    if mesh is not None:
+        fleet = shard_fleet(fleet, mesh)
+        x0s = shard_walker_batch(x0s, fleet.num_walks, mesh)
+        repl = named_shardings(
+            jax.tree_util.tree_map(lambda _: jax.sharding.PartitionSpec(),
+                                   (features, targets, weights, p_j_sched)),
+            mesh,
+        )
+        features, targets, weights, p_j_sched = jax.device_put(
+            (features, targets, weights, p_j_sched), repl
+        )
+    return _fleet_scan(
+        key,
+        x0s,
+        features,
+        targets,
+        weights,
+        fleet,
+        num_steps,
+        gamma,
+        p_j_sched,
+        use_weights,
+        loss_grad,
+    )
+
+
+# ---------------------------------------------------------------------------
+# THE fleet step for the LLM path (pjit-sharded models): vmapped per-walker
+# update + one batched walk advance + the periodic averaging collective.
+# ---------------------------------------------------------------------------
+
+
+def make_fleet_step(model, optimizer, walk, avg_every: int = 0) -> Callable:
+    """Jittable ``(params_w, opt_w, walk_w, batches_w, step_idx)`` fleet
+    step for the large-architecture path.
+
+    Each leaf of ``params_w``/``opt_w``/``walk_w``/``batches_w`` carries a
+    leading walker axis (shard with :func:`shard_walker_batch`).  The
+    single-walker train step (``repro.walk_sgd.llm_trainer``'s update
+    body, walk advance disabled) is vmapped over walkers, all W walk
+    positions advance through ONE batched engine transition
+    (``walk.advance_batched`` → :meth:`WalkFleet.advance`), and
+    ``avg_every > 0`` applies :func:`fleet_average` every that many steps.
+    ``multi_walk.make_multi_walk_step`` is a thin alias of this.
+    """
+    from repro.walk_sgd.llm_trainer import make_train_step
+
+    single = make_train_step(model, optimizer, walk, advance_walk=False)
+    vstep = jax.vmap(single)
+
+    def fleet_step(params_w, opt_w, walk_w, batches_w, step_idx):
+        params_w, opt_w, walk_w, metrics = vstep(
+            params_w, opt_w, walk_w, batches_w
+        )
+        walk_w = walk.advance_batched(walk_w)
+        if avg_every > 0:
+            do_avg = (step_idx + 1) % avg_every == 0
+            params_w = fleet_average(params_w, do_avg)
+        return params_w, opt_w, walk_w, metrics
+
+    return fleet_step
+
+
+def init_fleet_walk_state(
+    n_nodes: int,
+    num_walks: int,
+    lipschitz: Optional[np.ndarray] = None,
+    v0s: Optional[Sequence[int]] = None,
+    seed: int = 0,
+    online: bool = False,
+):
+    """Stacked LLM walk states for a W-walker fleet.
+
+    Start nodes come from :func:`sample_initial_nodes` (the same
+    seeding/validation the regression fleet constructor uses, so both
+    paths sample identical fleets per seed); each walker gets its own
+    PRNG stream (``seed * 1009 + i``).  Every leaf carries a leading
+    walker axis — shard with :func:`shard_walker_batch`.
+    """
+    from repro.walk_sgd.llm_trainer import init_walk_state
+
+    v0s = sample_initial_nodes(n_nodes, num_walks, seed=seed, v0s=v0s)
+    states = [
+        init_walk_state(
+            n_nodes, lipschitz, v0=int(v), seed=seed * 1009 + i, online=online
+        )
+        for i, v in enumerate(v0s)
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)

@@ -14,7 +14,11 @@ estimator for losses without closed-form smoothness (DESIGN.md §2).
 
 The MHLJ transition itself is NOT implemented here: ``WalkContext`` is a
 thin adapter over :class:`repro.core.engine.WalkEngine`, the single source
-of truth for Algorithm 1 (live Eq.-7 rows via ``engine.p_is_rows``).
+of truth for Algorithm 1 (live Eq.-7 rows via ``engine.p_is_rows``), and
+the walk advance routes through the fleet abstraction
+(``repro.walk_sgd.fleet.WalkFleet`` — ``advance`` is the one-walker
+fleet, ``advance_batched`` the W-walker fleet; the W-walker *training*
+step lives in ``repro.walk_sgd.fleet.make_fleet_step``).
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ from repro.core.graphs import Graph
 from repro.core.transition import MHLJParams
 from repro.models.base import Model
 from repro.optim.base import GradientTransformation, apply_updates, global_norm
+from repro.walk_sgd.fleet import WalkFleet
 
 __all__ = ["WalkContext", "make_train_step", "make_serve_step", "init_walk_state"]
 
@@ -79,23 +84,28 @@ class WalkContext:
         )
 
     def advance(self, state: dict) -> dict:
+        """Advance one walk state: the one-walker case of the fleet loop
+        (``repro.walk_sgd.fleet.WalkFleet.advance`` over a scalar node —
+        the engine's squeeze semantics make it bitwise-identical to the
+        historical direct ``engine.step`` call)."""
         key, key_step = jax.random.split(state["rng"])
-        v_next, hops = self.engine().step(
+        fleet = WalkFleet(engine=self.engine(), nodes=state["node"], num_walks=1)
+        fleet, hops = fleet.advance(
             key_step,
-            state["node"],
             p_j=state.get("p_j", self.p_j),
             lipschitz=state["lipschitz"],
         )
         return {
             **state,
             "rng": key,
-            "node": v_next.astype(jnp.int32),
+            "node": fleet.nodes.astype(jnp.int32),
             "hops": state["hops"] + hops,
             "updates": state["updates"] + 1,
         }
 
     def advance_batched(self, states: dict) -> dict:
-        """Advance W stacked walk states (leading walk axis on every leaf)."""
+        """Advance W stacked walk states (leading walk axis on every leaf) —
+        the fleet advance used by ``repro.walk_sgd.fleet.make_fleet_step``."""
         return jax.vmap(self.advance)(states)
 
     def weight(self, state: dict) -> jnp.ndarray:

@@ -1,24 +1,27 @@
-"""Beyond-paper: W parallel MHLJ walks with periodic parameter averaging.
+"""W parallel MHLJ walks with periodic parameter averaging — thin consumer
+of the fleet abstraction (``repro.walk_sgd.fleet``).
 
 The paper's algorithm is a SINGLE walk — communication-minimal but
-sequential.  At datacenter scale the multi-pod mesh gives us W pods; we run
-one independent MHLJ walk per pod and average parameters every
-``avg_every`` updates (a token-algorithm analogue of local-SGD/FedAvg).
+sequential.  The journal extension (arXiv:2604.12260) analyzes W
+independent walks whose models are averaged every ``avg_every`` updates (a
+token-algorithm analogue of local-SGD/FedAvg): averaging divides the
+Markov-sampling variance term of Theorem 1 by ~W while keeping per-walk
+communication at the paper's Remark-1 budget; the only extra cost is one
+all-reduce of the parameters per averaging round along the walker mesh
+axis.  The error-gap term is unchanged (each walk runs the same perturbed
+chain).  Benchmarked in ``benchmarks/multi_walk.py`` and the fleet sweep
+of ``benchmarks/large_graph_walk.py``.
 
-Averaging W walks divides the Markov-sampling variance term of Theorem 1 by
-~W while keeping per-walk communication at the paper's Remark-1 budget; the
-only extra cost is one all-reduce of the parameters every ``avg_every``
-steps over the 'pod' axis.  The error-gap term is unchanged (each walk runs
-the same perturbed chain).  Benchmarked against the faithful single walk in
-benchmarks/ (EXPERIMENTS.md §Perf "beyond-paper").
-
-Implementation: parameters/optimizer/walk states are stacked on a leading
-walk axis and the single-walk train step is vmapped (with its per-walk
-advance disabled); all W walk positions then advance together through ONE
-batched transition of the unified Algorithm-1 sampler
-(``core.engine.WalkEngine`` via ``WalkContext.advance_batched``).  On the
-production mesh the walk axis is sharded over 'pod' so each pod executes
-exactly one walk.  ``average_params`` is the periodic all-reduce.
+This module is the historical entry point for the large-architecture
+path; every function now delegates to the single fleet implementation:
+``make_multi_walk_step`` is ``repro.walk_sgd.fleet.make_fleet_step``
+(vmapped per-walker update + ONE batched engine transition + the
+conditional :func:`~repro.walk_sgd.fleet.fleet_average` collective),
+``init_multi_walk_state`` seeds start nodes through
+``repro.walk_sgd.fleet.sample_initial_nodes`` — the same
+seeding/validation the regression fleet constructor uses — and
+``average_params`` is the unconditional fleet average.  Shard the stacked
+states over the mesh with ``repro.walk_sgd.fleet.shard_walker_batch``.
 """
 from __future__ import annotations
 
@@ -30,7 +33,12 @@ import numpy as np
 
 from repro.models.base import Model
 from repro.optim.base import GradientTransformation
-from repro.walk_sgd.llm_trainer import WalkContext, init_walk_state, make_train_step
+from repro.walk_sgd.fleet import (
+    fleet_average,
+    init_fleet_walk_state,
+    make_fleet_step,
+)
+from repro.walk_sgd.llm_trainer import WalkContext
 
 __all__ = [
     "init_multi_walk_state",
@@ -54,27 +62,19 @@ def init_multi_walk_state(
     v0s: Optional[Sequence[int]] = None,
     seed: int = 0,
 ):
-    """Stacked walk states with distinct start nodes and RNG streams."""
-    if v0s is None:
-        rng = np.random.default_rng(seed)
-        v0s = rng.choice(n_nodes, size=num_walks, replace=num_walks > n_nodes)
-    states = [
-        init_walk_state(n_nodes, lipschitz, v0=int(v), seed=seed * 1009 + i)
-        for i, v in enumerate(v0s)
-    ]
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    """Stacked walk states with distinct start nodes and RNG streams
+    (``repro.walk_sgd.fleet.init_fleet_walk_state``)."""
+    return init_fleet_walk_state(
+        n_nodes, num_walks, lipschitz=lipschitz, v0s=v0s, seed=seed
+    )
 
 
 def average_params(params_w):
-    """All-walk parameter average, re-broadcast to every walk (the periodic
-    'pod'-axis all-reduce; XLA lowers the mean to an all-reduce when the
-    walk axis is sharded over 'pod')."""
-    return jax.tree_util.tree_map(
-        lambda p: jnp.broadcast_to(
-            jnp.mean(p, axis=0, keepdims=True), p.shape
-        ).astype(p.dtype),
-        params_w,
-    )
+    """All-walk parameter average, re-broadcast to every walk — the
+    unconditional ``repro.walk_sgd.fleet.fleet_average`` (XLA lowers the
+    mean to an all-reduce when the walk axis is sharded over a mesh
+    axis)."""
+    return fleet_average(params_w)
 
 
 def make_multi_walk_step(
@@ -85,23 +85,9 @@ def make_multi_walk_step(
 ) -> Callable:
     """Jittable (params_w, opt_w, walk_w, batches_w, step_idx) -> updated.
 
-    ``batches_w`` carries one batch per walk (leading walk axis).  When
-    ``avg_every > 0``, parameters are averaged across walks every
+    Alias of ``repro.walk_sgd.fleet.make_fleet_step`` — THE W-walker fleet
+    step.  ``batches_w`` carries one batch per walk (leading walk axis).
+    When ``avg_every > 0``, parameters are averaged across walks every
     ``avg_every`` steps (local-SGD style).
     """
-    single = make_train_step(model, optimizer, walk, advance_walk=False)
-    vstep = jax.vmap(single)
-
-    def step(params_w, opt_w, walk_w, batches_w, step_idx):
-        params_w, opt_w, walk_w, metrics = vstep(params_w, opt_w, walk_w, batches_w)
-        walk_w = walk.advance_batched(walk_w)
-        if avg_every > 0:
-            do_avg = (step_idx + 1) % avg_every == 0
-            params_w = jax.tree_util.tree_map(
-                lambda avg, raw: jnp.where(do_avg, avg, raw),
-                average_params(params_w),
-                params_w,
-            )
-        return params_w, opt_w, walk_w, metrics
-
-    return step
+    return make_fleet_step(model, optimizer, walk, avg_every)

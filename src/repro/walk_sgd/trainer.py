@@ -13,19 +13,27 @@ importance-weighted stochastic gradient of the visited node's local loss
 The walk advances through :class:`repro.core.engine.WalkEngine` (the single
 implementation of the MHLJ transition); non-jump methods are the engine at
 p_J = 0.  The engine is built once per training run from the graph —
-``Graph``, ``CSRGraph`` or ``BucketedCSRGraph`` — and passed *into* the
-jitted scan as a pytree argument, so every layout (dense analysis graphs,
-padded CSR, degree-bucketed hub-heavy graphs) rides the identical training
-loop.  :func:`run_rw_sgd_multi` runs W walks at once off one batched
-engine transition per step (the multi-walk benchmark path).
+``Graph``, ``CSRGraph``, ``BucketedCSRGraph`` or ``RaggedCSRGraph`` — and
+passed *into* the jitted scan as a pytree argument, so every layout rides
+the identical training loop.
+
+There is exactly ONE training scan: ``repro.walk_sgd.fleet.run_fleet``,
+the W-walker fleet loop.  :func:`run_rw_sgd` is its W=1 case (bitwise
+identical per key to the historical single-walk scan — the engine's
+uniform block for one walk is the same whether the node is scalar or a
+``(1,)`` batch) and :func:`run_rw_sgd_multi` is the fleet-construction
+seam: it builds a :class:`repro.walk_sgd.fleet.WalkFleet` and, given a
+``mesh``, shards the walker batch over the ``walker`` logical axis of
+``repro.sharding.rules`` so W walks train across devices with the
+periodic model average running as one collective.
 
 This is the regression-scale trainer used for the paper's figures; the
-pjit-sharded LLM engine is ``walk_sgd.llm_trainer``.
+pjit-sharded LLM engine is ``walk_sgd.llm_trainer`` (whose W-walker step
+is the same fleet abstraction — ``repro.walk_sgd.fleet.make_fleet_step``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -38,6 +46,7 @@ from repro.core.graphs import Graph
 from repro.core.transition import MHLJParams
 from repro.data.synthetic import RegressionData
 from repro.models import regression as reg
+from repro.walk_sgd.fleet import WalkFleet, run_fleet
 
 __all__ = ["RWSGDResult", "MultiRWSGDResult", "run_rw_sgd", "run_rw_sgd_multi"]
 
@@ -55,42 +64,6 @@ class RWSGDResult:
     @property
     def transitions_per_update(self) -> float:
         return float(self.transitions.mean())
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_steps", "use_weights", "loss_grad"),
-)
-def _run_scan(
-    key,
-    x0,
-    features,
-    targets,
-    weights,  # (n,) L_bar / L_v (ones when unweighted)
-    engine: WalkEngine,  # pytree arg: arrays traced, layout/backend static
-    v0,
-    num_steps: int,
-    gamma: float,
-    p_j_sched,  # (num_steps,)
-    use_weights: bool,
-    loss_grad,  # static callable: grad of per-node loss
-):
-    def step(carry, inputs):
-        x, v = carry
-        key_t, p_j_t = inputs
-        g = loss_grad(x, features[v], targets[v])
-        w = jnp.where(use_weights, weights[v], 1.0)
-        x_new = x - gamma * w * g
-        v_next, hops = engine.step(key_t, v, p_j=p_j_t)
-        mse = reg.mse_objective(x_new, features, targets)
-        return (x_new, v_next), (mse, v, hops)
-
-    keys = jax.random.split(key, num_steps)
-    (x_fin, _), (mses, nodes, hops) = jax.lax.scan(
-        step, (x0, jnp.asarray(v0, jnp.int32)), (keys, p_j_sched)
-    )
-    mse0 = reg.mse_objective(x0, features, targets)
-    return x_fin, jnp.concatenate([mse0[None], mses]), nodes, hops
 
 
 def _setup_method(
@@ -174,6 +147,16 @@ def _setup_method(
     return row_probs, weights, p_j_sched, p_d, r, use_weights
 
 
+def _build_engine(graph, p_d, r, row_probs, engine_kwargs, default_backend):
+    """Engine for a training run; ``engine_kwargs`` may override backend."""
+    kwargs = dict(engine_kwargs or {})
+    backend = kwargs.pop("backend", default_backend)
+    return WalkEngine.from_graph(
+        graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
+        row_probs=row_probs, backend=backend, **kwargs,
+    )
+
+
 def run_rw_sgd(
     method: str,
     graph: Graph,
@@ -191,6 +174,12 @@ def run_rw_sgd(
 ) -> RWSGDResult:
     """Run one RW-SGD training; returns the Fig-3 style MSE trace.
 
+    The W=1 case of the fleet loop (``repro.walk_sgd.fleet.run_fleet``):
+    a one-walker :class:`~repro.walk_sgd.fleet.WalkFleet` rides the same
+    scan as :func:`run_rw_sgd_multi`, and the result is bitwise-identical
+    per key to the historical dedicated single-walk scan
+    (``tests/test_fleet.py`` pins this against a frozen oracle).
+
     ``graph`` may be a dense ``Graph``, an O(E) ``CSRGraph``, a
     degree-bucketed ``BucketedCSRGraph`` or a bare-core
     ``RaggedCSRGraph`` (the true-degree engine layout; its flat per-edge
@@ -203,21 +192,18 @@ def run_rw_sgd(
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )
-    engine = WalkEngine.from_graph(
-        graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
-        row_probs=row_probs, backend="scan", **(engine_kwargs or {}),
-    )
+    engine = _build_engine(graph, p_d, r, row_probs, engine_kwargs, "scan")
+    fleet = WalkFleet.create(engine, 1, v0s=[v0])
     grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
 
-    x_fin, mses, nodes, hops = _run_scan(
+    xs_fin, mses, _, nodes, hops = run_fleet(
         jax.random.PRNGKey(seed),
-        x0,
+        jnp.broadcast_to(x0[None], (1, data.dim)),
         jnp.asarray(data.features, jnp.float32),
         jnp.asarray(data.targets, jnp.float32),
         weights,
-        engine,
-        v0,
+        fleet,
         num_steps,
         gamma,
         p_j_sched,
@@ -225,16 +211,16 @@ def run_rw_sgd(
         grad_fn,
     )
     return RWSGDResult(
-        mse=np.asarray(mses),
-        update_nodes=np.asarray(nodes),
-        transitions=np.asarray(hops),
-        x_final=np.asarray(x_fin),
+        mse=np.asarray(mses[0]),
+        update_nodes=np.asarray(nodes[0]),
+        transitions=np.asarray(hops[0]),
+        x_final=np.asarray(xs_fin[0]),
         method=method,
     )
 
 
 # ---------------------------------------------------------------------------
-# Batched multi-walk training (beyond-paper, benchmarks/multi_walk.py)
+# Batched multi-walk training (arXiv:2604.12260 regime, mesh-shardable)
 # ---------------------------------------------------------------------------
 
 
@@ -244,6 +230,7 @@ class MultiRWSGDResult:
 
     mse: np.ndarray  # (W, T+1) per-walk objective traces
     avg_mse: np.ndarray  # (T+1,) objective of the walk-averaged model
+    update_nodes: np.ndarray  # (W, T) node holding each model at update t
     transitions: np.ndarray  # (W, T) physical hops (Remark 1)
     x_final: np.ndarray  # (W, dim) per-walk models
     method: str
@@ -255,59 +242,6 @@ class MultiRWSGDResult:
     @property
     def transitions_per_update(self) -> float:
         return float(self.transitions.mean())
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_steps", "use_weights", "loss_grad", "avg_every"),
-)
-def _run_scan_multi(
-    key,
-    x0s,  # (W, dim)
-    features,
-    targets,
-    weights,
-    engine: WalkEngine,  # pytree arg: arrays traced, layout/backend static
-    v0s,  # (W,)
-    num_steps: int,
-    gamma: float,
-    p_j_sched,
-    use_weights: bool,
-    loss_grad,
-    avg_every: int,
-):
-    grad_w = jax.vmap(loss_grad, in_axes=(0, 0, 0))
-
-    def step(carry, inputs):
-        xs, vs, t = carry
-        key_t, p_j_t = inputs
-        gs = grad_w(xs, features[vs], targets[vs])  # (W, dim)
-        ws = jnp.where(use_weights, weights[vs], 1.0)[:, None]
-        xs_new = xs - gamma * ws * gs
-        if avg_every > 0:
-            do_avg = (t + 1) % avg_every == 0
-            xs_new = jnp.where(do_avg, xs_new.mean(axis=0)[None], xs_new)
-        vs_next, hops = engine.step(key_t, vs, p_j=p_j_t)  # ONE batched call
-        mses = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
-            xs_new, features, targets
-        )
-        avg_mse = reg.mse_objective(xs_new.mean(axis=0), features, targets)
-        return (xs_new, vs_next, t + 1), (mses, avg_mse, hops)
-
-    keys = jax.random.split(key, num_steps)
-    (xs_fin, _, _), (mses, avg_mses, hops) = jax.lax.scan(
-        step, (x0s, v0s, jnp.int32(0)), (keys, p_j_sched)
-    )
-    mse0 = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
-        x0s, features, targets
-    )
-    avg0 = reg.mse_objective(x0s.mean(axis=0), features, targets)
-    return (
-        xs_fin,
-        jnp.concatenate([mse0[None], mses]).T,  # (W, T+1)
-        jnp.concatenate([avg0[None], avg_mses]),
-        hops.T,  # (W, T)
-    )
 
 
 def run_rw_sgd_multi(
@@ -326,54 +260,61 @@ def run_rw_sgd_multi(
     avg_every: int = 0,
     seed: int = 0,
     engine_kwargs: Optional[dict] = None,
+    mesh=None,
 ) -> MultiRWSGDResult:
     """W parallel RW-SGD trainings sharing one batched engine transition.
 
-    Each walk carries its own model; ``avg_every > 0`` averages the models
-    across walks every that many updates (local-SGD style).  All W
-    transitions per step are sampled by a single ``WalkEngine.step`` call —
-    the Pallas kernel on TPU — instead of W independent scans.
+    The fleet-construction seam: builds a
+    :class:`~repro.walk_sgd.fleet.WalkFleet` (whose constructor owns the
+    v0 seeding/validation shared with the LLM path) and runs it through
+    the single fleet scan.  Each walk carries its own model;
+    ``avg_every > 0`` averages the models across walks every that many
+    updates (local-SGD style — the multi-walker regime of
+    arXiv:2604.12260).  All W transitions per step are sampled by a
+    single ``WalkEngine.step`` call — the Pallas kernel on TPU — instead
+    of W independent scans.
+
+    ``mesh`` (e.g. ``repro.launch.mesh.make_walker_mesh``) shards the
+    walker batch over the ``walker`` logical axis of
+    ``repro.sharding.rules``: per-walk model state and walk positions
+    split across devices, graph/row state replicates, and the periodic
+    average lowers to an all-reduce along the walker mesh axis.  On one
+    device the sharded path is bitwise-identical to ``mesh=None``.
+
     ``engine_kwargs`` forwards extra knobs to
     :meth:`WalkEngine.from_graph` (bucketed compaction, ``block_w``, a
-    backend override, …).
+    ``backend`` override, …).
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps
     )
-    engine = WalkEngine.from_graph(
-        graph, MHLJParams(p_j=0.0, p_d=p_d, r=r),
-        row_probs=row_probs, backend="auto", **(engine_kwargs or {}),
+    engine = _build_engine(graph, p_d, r, row_probs, engine_kwargs, "auto")
+    fleet = WalkFleet.create(
+        engine, num_walks, v0s=v0s, seed=seed, avg_every=avg_every
     )
-
-    if v0s is None:
-        rng = np.random.default_rng(seed)
-        v0s = rng.choice(graph.n, size=num_walks, replace=num_walks > graph.n)
-    v0s = jnp.asarray(np.asarray(v0s, np.int32))
-    if v0s.shape != (num_walks,):
-        raise ValueError(f"v0s must have shape ({num_walks},), got {v0s.shape}")
 
     grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
     x0s = jnp.broadcast_to(x0[None], (num_walks, data.dim))
 
-    xs_fin, mses, avg_mses, hops = _run_scan_multi(
+    xs_fin, mses, avg_mses, nodes, hops = run_fleet(
         jax.random.PRNGKey(seed),
         x0s,
         jnp.asarray(data.features, jnp.float32),
         jnp.asarray(data.targets, jnp.float32),
         weights,
-        engine,
-        v0s,
+        fleet,
         num_steps,
         gamma,
         p_j_sched,
         use_weights,
         grad_fn,
-        avg_every,
+        mesh=mesh,
     )
     return MultiRWSGDResult(
         mse=np.asarray(mses),
         avg_mse=np.asarray(avg_mses),
+        update_nodes=np.asarray(nodes),
         transitions=np.asarray(hops),
         x_final=np.asarray(xs_fin),
         method=method,

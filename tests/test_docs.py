@@ -70,5 +70,5 @@ def test_doc_references_exist(doc):
 
 def test_doc_tree_is_present():
     """The documented doc set itself: a rename here must be deliberate."""
-    for name in ("theory_map.md", "layouts.md", "benchmarks.md"):
+    for name in ("theory_map.md", "layouts.md", "benchmarks.md", "fleet.md"):
         assert os.path.exists(os.path.join(REPO, "docs", name)), name

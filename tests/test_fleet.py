@@ -1,0 +1,390 @@
+"""Fleet-loop tests: the unified W-walker scan vs the pre-refactor oracle,
+sharded-vs-unsharded parity, shared v0 seeding, and the averaging-traffic
+model.
+
+The oracle functions below are FROZEN copies of the two training scans the
+fleet refactor replaced (``trainer._run_scan`` and ``trainer._run_scan_multi``
+as of the last pre-fleet commit).  They are the ground truth for "the
+refactor changed no numerics": every path through
+``repro.walk_sgd.fleet.run_fleet`` — including the W=1 case behind
+``run_rw_sgd`` and the mesh-sharded path on a 1-device mesh — must be
+bitwise-identical to them per key.  The multi-device leg only pins the
+walk stream bitwise (the cross-device all-reduce may re-associate the
+float mean) and bounds the trace drift.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import WalkEngine
+from repro.core.graphs import barabasi_albert, ring
+from repro.core.transition import MHLJParams
+from repro.data.synthetic import make_heterogeneous_regression
+from repro.launch.mesh import make_walker_mesh
+from repro.models import regression as reg
+from repro.sharding.rules import resolve_walker_axis, walker_batch_specs
+from repro.walk_sgd import run_rw_sgd, run_rw_sgd_multi
+from repro.walk_sgd.comm_model import CommModel, fleet_averaging_traffic
+from repro.walk_sgd.fleet import (
+    init_fleet_walk_state,
+    sample_initial_nodes,
+)
+from repro.walk_sgd.multi_walk import init_multi_walk_state
+from repro.walk_sgd.trainer import _build_engine, _setup_method
+
+# ---------------------------------------------------------------------------
+# Frozen pre-refactor oracles (verbatim from the pre-fleet trainer, except
+# _oracle_scan_multi additionally scans out ``vs`` — a pure observation of
+# the carry that perturbs no computed value).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_steps", "use_weights", "loss_grad")
+)
+def _oracle_scan(
+    key, x0, features, targets, weights, engine, v0,
+    num_steps, gamma, p_j_sched, use_weights, loss_grad,
+):
+    def step(carry, inputs):
+        x, v = carry
+        key_t, p_j_t = inputs
+        g = loss_grad(x, features[v], targets[v])
+        w = jnp.where(use_weights, weights[v], 1.0)
+        x_new = x - gamma * w * g
+        v_next, hops = engine.step(key_t, v, p_j=p_j_t)
+        mse = reg.mse_objective(x_new, features, targets)
+        return (x_new, v_next), (mse, v, hops)
+
+    keys = jax.random.split(key, num_steps)
+    (x_fin, _), (mses, nodes, hops) = jax.lax.scan(
+        step, (x0, jnp.asarray(v0, jnp.int32)), (keys, p_j_sched)
+    )
+    mse0 = reg.mse_objective(x0, features, targets)
+    return x_fin, jnp.concatenate([mse0[None], mses]), nodes, hops
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_steps", "use_weights", "loss_grad", "avg_every"),
+)
+def _oracle_scan_multi(
+    key, x0s, features, targets, weights, engine, v0s,
+    num_steps, gamma, p_j_sched, use_weights, loss_grad, avg_every,
+):
+    grad_w = jax.vmap(loss_grad, in_axes=(0, 0, 0))
+
+    def step(carry, inputs):
+        xs, vs, t = carry
+        key_t, p_j_t = inputs
+        gs = grad_w(xs, features[vs], targets[vs])
+        ws = jnp.where(use_weights, weights[vs], 1.0)[:, None]
+        xs_new = xs - gamma * ws * gs
+        if avg_every > 0:
+            do_avg = (t + 1) % avg_every == 0
+            xs_new = jnp.where(do_avg, xs_new.mean(axis=0)[None], xs_new)
+        vs_next, hops = engine.step(key_t, vs, p_j=p_j_t)
+        mses = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
+            xs_new, features, targets
+        )
+        avg_mse = reg.mse_objective(xs_new.mean(axis=0), features, targets)
+        return (xs_new, vs_next, t + 1), (mses, avg_mse, vs, hops)
+
+    keys = jax.random.split(key, num_steps)
+    (xs_fin, _, _), (mses, avg_mses, nodes, hops) = jax.lax.scan(
+        step, (x0s, v0s, jnp.int32(0)), (keys, p_j_sched)
+    )
+    mse0 = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
+        x0s, features, targets
+    )
+    avg0 = reg.mse_objective(x0s.mean(axis=0), features, targets)
+    return (
+        xs_fin,
+        jnp.concatenate([mse0[None], mses]).T,
+        jnp.concatenate([avg0[None], avg_mses]),
+        nodes.T,
+        hops.T,
+    )
+
+
+def _oracle_single(method, graph, data, gamma, num_steps, *, v0, seed, mhlj):
+    row_probs, weights, p_j_sched, p_d, r, use_w = _setup_method(
+        method, graph, data, mhlj, None, num_steps
+    )
+    engine = _build_engine(graph, p_d, r, row_probs, None, "scan")
+    x0 = jnp.zeros(data.dim, jnp.float32)
+    return _oracle_scan(
+        jax.random.PRNGKey(seed), x0,
+        jnp.asarray(data.features, jnp.float32),
+        jnp.asarray(data.targets, jnp.float32),
+        weights, engine, v0, num_steps, gamma, p_j_sched, use_w,
+        reg.linear_grad,
+    )
+
+
+def _oracle_multi(
+    method, graph, data, gamma, num_steps, num_walks,
+    *, v0s, seed, avg_every, mhlj,
+):
+    row_probs, weights, p_j_sched, p_d, r, use_w = _setup_method(
+        method, graph, data, mhlj, None, num_steps
+    )
+    engine = _build_engine(graph, p_d, r, row_probs, None, "auto")
+    x0s = jnp.zeros((num_walks, data.dim), jnp.float32)
+    return _oracle_scan_multi(
+        jax.random.PRNGKey(seed), x0s,
+        jnp.asarray(data.features, jnp.float32),
+        jnp.asarray(data.targets, jnp.float32),
+        weights, engine, jnp.asarray(v0s, jnp.int32),
+        num_steps, gamma, p_j_sched, use_w, reg.linear_grad, avg_every,
+    )
+
+
+MHLJ = MHLJParams(0.2, 0.5, 3)
+
+
+@pytest.fixture(scope="module")
+def ring_case():
+    g = ring(32)
+    return g, make_heterogeneous_regression(g.n, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity with the pre-refactor loops
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["uniform", "mhlj"])
+def test_single_walk_matches_prerefactor_oracle(ring_case, method):
+    """run_rw_sgd is now the W=1 fleet — results must not move a bit."""
+    g, data = ring_case
+    mhlj = MHLJ if method == "mhlj" else None
+    res = run_rw_sgd(
+        method, g, data, 1e-3, 250, mhlj_params=mhlj, v0=3, seed=7
+    )
+    x_fin, mses, nodes, hops = _oracle_single(
+        method, g, data, 1e-3, 250, v0=3, seed=7, mhlj=mhlj
+    )
+    np.testing.assert_array_equal(res.mse, np.asarray(mses))
+    np.testing.assert_array_equal(res.update_nodes, np.asarray(nodes))
+    np.testing.assert_array_equal(res.transitions, np.asarray(hops))
+    np.testing.assert_array_equal(res.x_final, np.asarray(x_fin))
+
+
+@pytest.mark.parametrize("avg_every", [0, 3])
+def test_multi_walk_matches_prerefactor_oracle(ring_case, avg_every):
+    g, data = ring_case
+    v0s = sample_initial_nodes(g.n, 5, seed=11)
+    res = run_rw_sgd_multi(
+        "mhlj", g, data, 1e-3, 250, 5,
+        mhlj_params=MHLJ, seed=11, avg_every=avg_every,
+    )
+    xs, mses, avg, nodes, hops = _oracle_multi(
+        "mhlj", g, data, 1e-3, 250, 5,
+        v0s=v0s, seed=11, avg_every=avg_every, mhlj=MHLJ,
+    )
+    np.testing.assert_array_equal(res.mse, np.asarray(mses))
+    np.testing.assert_array_equal(res.avg_mse, np.asarray(avg))
+    np.testing.assert_array_equal(res.update_nodes, np.asarray(nodes))
+    np.testing.assert_array_equal(res.transitions, np.asarray(hops))
+    np.testing.assert_array_equal(res.x_final, np.asarray(xs))
+
+
+def test_sharded_one_device_matches_oracle_bitwise(ring_case):
+    """The fleet loop under jax.sharding on a 1-device mesh: every field of
+    MultiRWSGDResult bitwise-identical to the pre-refactor oracle."""
+    g, data = ring_case
+    mesh = make_walker_mesh(1)
+    v0s = sample_initial_nodes(g.n, 4, seed=5)
+    res = run_rw_sgd_multi(
+        "mhlj", g, data, 1e-3, 250, 4,
+        mhlj_params=MHLJ, seed=5, avg_every=4, mesh=mesh,
+    )
+    xs, mses, avg, nodes, hops = _oracle_multi(
+        "mhlj", g, data, 1e-3, 250, 4,
+        v0s=v0s, seed=5, avg_every=4, mhlj=MHLJ,
+    )
+    np.testing.assert_array_equal(res.mse, np.asarray(mses))
+    np.testing.assert_array_equal(res.avg_mse, np.asarray(avg))
+    np.testing.assert_array_equal(res.update_nodes, np.asarray(nodes))
+    np.testing.assert_array_equal(res.transitions, np.asarray(hops))
+    np.testing.assert_array_equal(res.x_final, np.asarray(xs))
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >1 device (CI leg sets "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+def test_sharded_multi_device_fleet(ring_case):
+    """W walkers sharded across the real device fleet: the walk stream
+    (nodes, hops — pure PRNG functions) stays bitwise-identical to the
+    unsharded run; float traces may differ only by all-reduce
+    re-association of the periodic average."""
+    g, data = ring_case
+    n_dev = len(jax.devices())
+    w = 2 * n_dev
+    mesh = make_walker_mesh()
+    kw = dict(mhlj_params=MHLJ, seed=5, avg_every=4)
+    plain = run_rw_sgd_multi("mhlj", g, data, 1e-3, 200, w, **kw)
+    shard = run_rw_sgd_multi("mhlj", g, data, 1e-3, 200, w, mesh=mesh, **kw)
+    np.testing.assert_array_equal(plain.update_nodes, shard.update_nodes)
+    np.testing.assert_array_equal(plain.transitions, shard.transitions)
+    np.testing.assert_allclose(plain.mse, shard.mse, rtol=1e-5)
+    np.testing.assert_allclose(plain.avg_mse, shard.avg_mse, rtol=1e-5)
+    np.testing.assert_allclose(
+        plain.x_final, shard.x_final, rtol=1e-4, atol=1e-6
+    )
+    # non-divisible fleets degrade to replication, not an error
+    odd = run_rw_sgd_multi(
+        "mhlj", g, data, 1e-3, 50, n_dev + 1, mesh=mesh,
+        mhlj_params=MHLJ, seed=5,
+    )
+    assert np.isfinite(odd.avg_mse).all()
+
+
+def test_shard_aware_engine_step_is_value_preserving(ring_case):
+    g, _ = ring_case
+    mesh = make_walker_mesh(1)
+    engine = WalkEngine.from_graph(
+        g, MHLJ, lipschitz=np.ones(g.n, np.float32), backend="scan"
+    )
+    sharded = engine.with_walker_sharding(resolve_walker_axis(8, mesh))
+    key = jax.random.PRNGKey(0)
+    nodes = jnp.arange(8, dtype=jnp.int32) % g.n
+    a = engine.step(key, nodes, p_j=0.2)
+    b = sharded.step(key, nodes, p_j=0.2)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# ---------------------------------------------------------------------------
+# Shared v0 seeding (the former duplication between run_rw_sgd_multi and
+# init_multi_walk_state)
+# ---------------------------------------------------------------------------
+
+
+def test_initial_node_seeding_is_shared():
+    n, w, seed = 40, 6, 13
+    expect = np.random.default_rng(seed).choice(n, size=w, replace=False)
+    got = sample_initial_nodes(n, w, seed=seed)
+    np.testing.assert_array_equal(got, expect.astype(np.int32))
+    # the LLM path samples the identical fleet for the same seed
+    walk_w = init_fleet_walk_state(n, w, seed=seed)
+    np.testing.assert_array_equal(np.asarray(walk_w["node"]), got)
+    legacy = init_multi_walk_state(n, w, seed=seed)
+    np.testing.assert_array_equal(np.asarray(legacy["node"]), got)
+    # and the regression fleet starts its walks there too
+    g = ring(n)
+    data = make_heterogeneous_regression(n, seed=0)
+    res = run_rw_sgd_multi(
+        "mhlj", g, data, 1e-3, 1, w, mhlj_params=MHLJ, seed=seed
+    )
+    np.testing.assert_array_equal(res.update_nodes[:, 0], got)
+    # oversubscribed fleets sample with replacement instead of crashing
+    assert sample_initial_nodes(4, 9, seed=0).shape == (9,)
+
+
+def test_initial_node_validation():
+    with pytest.raises(ValueError, match="shape"):
+        sample_initial_nodes(10, 3, v0s=[1, 2])
+    with pytest.raises(ValueError, match="node ids"):
+        sample_initial_nodes(10, 2, v0s=[0, 10])
+    with pytest.raises(ValueError, match="node ids"):
+        init_fleet_walk_state(10, 2, v0s=[-1, 3])
+
+
+# ---------------------------------------------------------------------------
+# Walker-axis spec resolution
+# ---------------------------------------------------------------------------
+
+
+def test_walker_axis_resolution_and_fallback():
+    mesh = make_walker_mesh(1)
+    s = resolve_walker_axis(8, mesh)
+    assert s is not None and s.spec == jax.sharding.PartitionSpec("data")
+    specs = walker_batch_specs(
+        {"x": jnp.zeros((8, 3)), "graph": jnp.zeros((5,))}, 8, mesh
+    )
+    assert specs["x"] == jax.sharding.PartitionSpec("data", None)
+    assert specs["graph"] == jax.sharding.PartitionSpec()  # not walker-stacked
+
+
+# ---------------------------------------------------------------------------
+# Averaging-traffic model (satellite: comm_model fleet extension)
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_averaging_traffic():
+    mb = 4_000_000
+    # single device: the average is local, zero wire bytes
+    t1 = fleet_averaging_traffic(8, 1000, 10, mb, mesh_devices=1)
+    assert t1["num_collectives"] == 100
+    assert t1["total_wire_bytes"] == 0.0
+    # ring all-reduce over D devices: 2*(D-1)*model_bytes per collective
+    t8 = fleet_averaging_traffic(8, 1000, 10, mb, mesh_devices=8)
+    assert t8["participating_devices"] == 8
+    assert t8["bytes_per_collective"] == pytest.approx(2 * 7 * mb)
+    assert t8["total_wire_bytes"] == pytest.approx(100 * 2 * 7 * mb)
+    # payload is W-independent once W >= D (local partial means are free)
+    t64 = fleet_averaging_traffic(64, 1000, 10, mb, mesh_devices=8)
+    assert t64["bytes_per_collective"] == t8["bytes_per_collective"]
+    # ... but W < D shrinks the participant set to the walker count
+    t2 = fleet_averaging_traffic(2, 1000, 10, mb, mesh_devices=8)
+    assert t2["participating_devices"] == 2
+    assert t2["bytes_per_collective"] == pytest.approx(2 * 1 * mb)
+    # linear in model size; avg_every<=0 means no collectives at all
+    assert (
+        fleet_averaging_traffic(8, 1000, 10, 2 * mb, mesh_devices=8)[
+            "total_wire_bytes"
+        ]
+        == 2 * t8["total_wire_bytes"]
+    )
+    assert (
+        fleet_averaging_traffic(8, 1000, 0, mb, mesh_devices=8)[
+            "num_collectives"
+        ]
+        == 0
+    )
+    # wall-clock estimate appears with a CommModel attached
+    priced = fleet_averaging_traffic(
+        8, 1000, 10, mb, mesh_devices=8, comm=CommModel(model_bytes=mb)
+    )
+    assert priced["wire_seconds_total"] > 0
+    with pytest.raises(ValueError):
+        fleet_averaging_traffic(0, 100, 10, mb)
+
+
+def test_multi_result_exposes_update_nodes(ring_case):
+    """The fleet scan surfaces per-step nodes for W>1 (new in the fleet
+    refactor; the single-walk path always had them)."""
+    g, data = ring_case
+    res = run_rw_sgd_multi(
+        "mhlj", g, data, 1e-3, 50, 3, mhlj_params=MHLJ, seed=2
+    )
+    assert res.update_nodes.shape == (3, 50)
+    assert res.update_nodes.dtype == np.int32
+    assert (res.update_nodes >= 0).all() and (res.update_nodes < g.n).all()
+
+
+@pytest.mark.parametrize("ba_graph", [True, False])
+def test_fleet_rides_every_layout(ring_case, ba_graph):
+    """Fleet + ragged layout parity: same seeds, same trajectories across
+    engine layouts (the property test_rw_sgd pins for W=1, here for W>1)."""
+    if ba_graph:
+        g = barabasi_albert(48, 3, seed=2)
+    else:
+        g, _ = ring_case
+    data = make_heterogeneous_regression(g.n, seed=0)
+    base = run_rw_sgd_multi(
+        "mhlj", g, data, 1e-3, 120, 4, mhlj_params=MHLJ, seed=3, avg_every=5
+    )
+    ragged = run_rw_sgd_multi(
+        "mhlj", g.to_csr().to_ragged(), data, 1e-3, 120, 4,
+        mhlj_params=MHLJ, seed=3, avg_every=5,
+    )
+    np.testing.assert_array_equal(base.update_nodes, ragged.update_nodes)
+    np.testing.assert_array_equal(base.mse, ragged.mse)
