@@ -49,6 +49,12 @@ if REPO not in sys.path:  # allow `python benchmarks/check_regression.py`
 BASELINE_PATH = os.path.join(REPO, "results", "BENCH_large_graph.json")
 METRIC_SUFFIX = "_steps_per_sec"
 REFERENCE_LABEL = "sparse"
+# Presence-gated keys: the law sweep's `{family}_{law}_herfindahl`
+# telemetry.  Herfindahl values are statistical (walk occupancy), not
+# step-times, so their magnitude is not compared — each key is pinned to
+# ratio 1.0 and only its EXISTENCE is gated: a chain law silently dropped
+# from the sweep is a loud missing-key failure, a noisy herfindahl is not.
+PRESENCE_SUFFIX = "_herfindahl"
 # Fleet rows (`fleet_w{W}_aggregate_walk_steps_per_sec`) have no sparse
 # sibling: they normalize against the same sweep's smallest-W row, so the
 # gate watches the W-scaling shape — and a fleet configuration vanishing
@@ -78,11 +84,11 @@ def aggregate_ratios(derived: dict) -> dict:
 
 def fresh_smoke_derived() -> dict:
     """Run the smoke tiers in-process; returns {module: derived}."""
-    from benchmarks import fig5_sparse_graphs, large_graph_walk
+    from benchmarks import fig5_sparse_graphs, large_graph_walk, law_sweep
 
     return {
         mod.NAME: mod.run_smoke().get("derived", {})
-        for mod in (fig5_sparse_graphs, large_graph_walk)
+        for mod in (fig5_sparse_graphs, large_graph_walk, law_sweep)
     }
 
 
@@ -92,10 +98,15 @@ def normalized_ratios(derived: dict) -> dict:
     ``{tag}_sparse_steps_per_sec``.  Machine speed cancels in the ratio.
     The sparse keys themselves (trivially 1) and keys without a sparse
     sibling are omitted.  Fleet aggregate keys normalize within their own
-    W-sweep instead (:func:`aggregate_ratios`)."""
+    W-sweep instead (:func:`aggregate_ratios`); presence-gated keys
+    (``PRESENCE_SUFFIX``) are pinned to ratio 1.0 so only their existence
+    is compared."""
     ref_suffix = f"_{REFERENCE_LABEL}{METRIC_SUFFIX}"
     tags = [k[: -len(ref_suffix)] for k in derived if k.endswith(ref_suffix)]
     out = aggregate_ratios(derived)
+    for key in derived:
+        if key.endswith(PRESENCE_SUFFIX):
+            out[key] = 1.0  # presence-only gate (see PRESENCE_SUFFIX)
     for key, val in derived.items():
         if not key.endswith(METRIC_SUFFIX) or not val:
             continue

@@ -1,0 +1,142 @@
+"""Convergence-vs-chain-law sweep with entrapment telemetry.
+
+One protocol, every transition law the repo implements: simple RW,
+MH-uniform, P_IS (Eq. 7), MHLJ (Algorithm 1), the heterogeneity-aware law
+(MH targeting the dissimilarity-optimized pi of arXiv:2204.06477) and the
+private weighted walk (arXiv:2009.01790) at several privacy levels gamma —
+each swept over the trap-prone graph families (hub-heavy Barabasi-Albert,
+the dumbbell bottleneck, the lollipop hitting-time stressor).
+
+Per (family, law) cell the sweep records the MSE milestones AND the
+entrapment telemetry of the update-node sequence (Herfindahl index, top-k
+visit share) — so the convergence/entrapment trade-off each law makes is
+one JSON apart from the others, including how the private law's gamma knob
+buys privacy with stationary drift and how the heterogeneity law shifts
+visit mass onto the high-dissimilarity nodes.
+
+The full sweep lands in ``results/BENCH_law_sweep.json``.  The smoke tier
+runs every law at toy sizes and its ``{family}_{law}_herfindahl`` derived
+keys are presence-gated by ``benchmarks/check_regression.py`` against the
+committed ``smoke_baseline`` (in ``results/BENCH_large_graph.json``, next
+to the other modules') — so a law that stops building, or silently drops
+out of the sweep, fails tier 1 via the gate's missing-key path, on both
+``REPRO_BACKEND`` legs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, milestones
+from repro.core import MHLJParams
+from repro.core.entrapment import occupancy_concentration
+from repro.core.graphs import barabasi_albert, dumbbell, lollipop
+
+NAME = "law_sweep"
+PAPER_CLAIM = (
+    "C7: the chain law is an open design axis — simple RW, MH-uniform, "
+    "P_IS, MHLJ, heterogeneity-aware and private weighted walks run the "
+    "same trap-prone protocol, and the entrapment telemetry (Herfindahl, "
+    "top-k share) separates the laws the convergence curves alone blur."
+)
+
+# (label, trainer method, law_kwargs) — the private law is swept at several
+# gammas so the privacy/convergence trade-off is a column, not a footnote
+LAWS = (
+    ("simple", "simple", None),
+    ("uniform", "uniform", None),
+    ("importance", "importance", None),
+    ("mhlj", "mhlj", None),
+    ("heterogeneity", "heterogeneity", None),
+    ("private_g0.1", "private", {"gamma": 0.1}),
+    ("private_g1.0", "private", {"gamma": 1.0}),
+)
+
+
+def _graphs(scale: str) -> dict:
+    if scale == "smoke":
+        return {
+            "ba": barabasi_albert(48, 3, seed=0),
+            "dumbbell": dumbbell(12, 6),
+            "lollipop": lollipop(16, 9),
+        }
+    if scale == "quick":
+        return {
+            "ba": barabasi_albert(256, 3, seed=0),
+            "dumbbell": dumbbell(48, 32),
+            "lollipop": lollipop(96, 64),
+        }
+    return {
+        "ba": barabasi_albert(1000, 3, seed=0),
+        "dumbbell": dumbbell(128, 64),
+        "lollipop": lollipop(256, 128),
+    }
+
+
+def run(quick: bool = False, scale: str | None = None) -> dict:
+    from repro.data import make_heterogeneous_regression
+    from repro.walk_sgd import run_rw_sgd
+
+    scale = scale or ("quick" if quick else "full")
+    T = {"smoke": 600, "quick": 15_000, "full": 40_000}[scale]
+    graphs = _graphs(scale)
+    params = MHLJParams(0.1, 0.5, 3)
+    out = {"T": T, "claim": PAPER_CLAIM, "laws": [l[0] for l in LAWS]}
+    derived: dict = {}
+    for tag, graph in graphs.items():
+        n = graph.n
+        data = make_heterogeneous_regression(
+            n, dim=10, sigma_high_sq=100.0, p_high=0.002, seed=3,
+            force_min_high=2, x_star_scale=10.0,
+        )
+        gamma_max = 0.5 / data.lipschitz.max()
+        gamma_mean = 0.5 / data.lipschitz.mean()
+        v0 = int(np.argmax(data.lipschitz))  # start inside the trap
+        sub = {}
+        for label, method, law_kwargs in LAWS:
+            # per-law stable step sizes: laws whose gradient weights cancel
+            # the per-node smoothness (P_IS/MHLJ, and the private walk up
+            # to its (1+gamma) weight inflation from the Gamma mean shift)
+            # take the mean-L rate; laws that don't (simple, uniform, the
+            # heterogeneity target — its pi tracks dissimilarity, not L)
+            # need the worst-case max-L rate
+            if method in ("importance", "mhlj"):
+                lr = gamma_mean
+            elif method == "private":
+                lr = gamma_mean / (1.0 + law_kwargs["gamma"])
+            else:
+                lr = gamma_max
+            res = run_rw_sgd(
+                method, graph, data, lr, T,
+                mhlj_params=params if method == "mhlj" else None,
+                law_kwargs=law_kwargs, seed=4, v0=v0,
+            )
+            conc = occupancy_concentration(res.update_nodes, n, topk=3)
+            sub[label] = {
+                **milestones(res.mse),
+                "herfindahl": conc["herfindahl"],
+                "topk_share": conc["topk_share"],
+            }
+            # the gate key: presence says the law is still swept (a law
+            # vanishing from the sweep is a loud missing-key CI failure)
+            derived[f"{tag}_{label}_herfindahl"] = conc["herfindahl"]
+        out[tag] = sub
+    out["derived"] = derived
+
+    if scale != "smoke":  # don't clobber real sweeps from the anti-rot tier
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "BENCH_law_sweep.json")
+        # (the smoke-tier regression baseline lives with the other modules'
+        # in BENCH_large_graph.json's smoke_baseline section)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, default=float)
+    return out
+
+
+def run_smoke() -> dict:
+    """Tiny tier exercised by the tier-1 bench-smoke test: every law in
+    ``LAWS`` trains on every trap family, so a law that stops building
+    fails CI instead of rotting."""
+    return run(scale="smoke")

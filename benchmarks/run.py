@@ -31,6 +31,7 @@ from benchmarks import (
     fig5_sparse_graphs,
     fig6_annealing,
     large_graph_walk,
+    law_sweep,
     llm_walk_throughput,
     multi_walk,
     roofline,
@@ -47,6 +48,7 @@ MODULES = [
     multi_walk,
     llm_walk_throughput,
     large_graph_walk,
+    law_sweep,
     roofline,
 ]
 

@@ -46,8 +46,24 @@ def trap_score(p: np.ndarray) -> np.ndarray:
 
 
 def visit_fractions(trajectory: np.ndarray, n: int) -> np.ndarray:
-    """Empirical node-visit distribution of a trajectory of node ids."""
-    counts = np.bincount(np.asarray(trajectory).ravel(), minlength=n).astype(np.float64)
+    """Empirical node-visit distribution of a trajectory of node ids.
+
+    Ids must lie in ``[0, n)``: an out-of-range id means the trajectory and
+    the graph disagree (wrong n, stale trajectory, transposed axes) and every
+    downstream concentration statistic would be silently wrong — ``bincount``
+    would happily grow past ``n`` and the returned vector would have the
+    wrong length.
+    """
+    traj = np.asarray(trajectory).ravel()
+    if traj.size == 0:
+        raise ValueError("empty trajectory has no visit distribution")
+    lo, hi = int(traj.min()), int(traj.max())
+    if lo < 0 or hi >= n:
+        raise ValueError(
+            f"trajectory node ids must lie in [0, {n}): found range "
+            f"[{lo}, {hi}] — trajectory and graph size disagree"
+        )
+    counts = np.bincount(traj, minlength=n).astype(np.float64)
     return counts / counts.sum()
 
 

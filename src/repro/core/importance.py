@@ -29,6 +29,8 @@ __all__ = [
     "logistic_regression_lipschitz",
     "importance_distribution",
     "importance_weights",
+    "FINGERPRINT_SEED",
+    "param_fingerprint",
     "OnlineLipschitzState",
     "online_lipschitz_init",
     "online_lipschitz_update",
@@ -65,26 +67,63 @@ def importance_weights(lipschitz: jnp.ndarray | np.ndarray) -> jnp.ndarray:
 # Online L_v estimation for losses without closed forms (LLM adaptation)
 # ---------------------------------------------------------------------------
 
+# Fixed seed of the random-projection fingerprint.  The fingerprint must be
+# the SAME deterministic functional of the parameters at every visit of every
+# node (otherwise the secant denominator compares apples to oranges), so the
+# projection direction is frozen once per state and recorded in it.
+FINGERPRINT_SEED = 0
+
+
+def param_fingerprint(params, seed: int = FINGERPRINT_SEED) -> jnp.ndarray:
+    """Deterministic random-projection fingerprint <r, vec(x)> / sqrt(D).
+
+    The secant estimator needs a scalar summary f(x) whose difference
+    |f(x_t) - f(x_{t'})| tracks ||x_t - x_{t'}||.  The norm ||x|| is NOT such
+    a summary: two far-apart parameter vectors of equal norm give df = 0 and
+    the secant blows up to its clip ceiling.  A fixed random projection
+    r ~ N(0, I/D) collides only on the measure-zero hyperplane orthogonal to
+    r, and E[(r·(x-x'))^2] = ||x - x'||^2 / D, so differences are calibrated
+    to parameter distance.  ``r`` is regenerated from ``seed`` on each call
+    (pure function of the fixed seed — jit folds it into the compiled step).
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    dim = sum(int(np.prod(leaf.shape)) for leaf in leaves) or 1
+    base = jax.random.PRNGKey(seed)
+    total = jnp.float32(0.0)
+    for i, leaf in enumerate(leaves):
+        r = jax.random.normal(
+            jax.random.fold_in(base, i), leaf.shape, dtype=jnp.float32
+        )
+        total = total + jnp.vdot(r, jnp.asarray(leaf, jnp.float32))
+    return total / np.sqrt(dim)
+
 
 @dataclasses.dataclass
 class OnlineLipschitzState:
-    """Per-node secant-based curvature estimates, JAX pytree-compatible."""
+    """Per-node secant-based curvature estimates, JAX pytree-compatible.
+
+    ``proj_seed`` (static aux data) records the fixed seed of the
+    random-projection fingerprint the stored ``last_param_fingerprint``
+    values were computed with — callers must feed
+    ``param_fingerprint(params, seed=state.proj_seed)`` so consecutive
+    visits are fingerprinted identically.
+    """
 
     lipschitz: jnp.ndarray  # (n,) current estimates
     last_grad_norm: jnp.ndarray  # (n,) ||g_v|| at last visit
-    last_param_fingerprint: jnp.ndarray  # (n,) ||x|| fingerprint at last visit
+    last_param_fingerprint: jnp.ndarray  # (n,) projection fingerprint at last visit
     visited: jnp.ndarray  # (n,) bool
+    proj_seed: int = FINGERPRINT_SEED  # static: fingerprint projection seed
 
     def tree_flatten(self):
         return (
             (self.lipschitz, self.last_grad_norm, self.last_param_fingerprint, self.visited),
-            None,
+            self.proj_seed,
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(*children, proj_seed=aux)
 
 
 jax.tree_util.register_pytree_node(
@@ -94,12 +133,15 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def online_lipschitz_init(n: int, init: float = 1.0) -> OnlineLipschitzState:
+def online_lipschitz_init(
+    n: int, init: float = 1.0, proj_seed: int = FINGERPRINT_SEED
+) -> OnlineLipschitzState:
     return OnlineLipschitzState(
         lipschitz=jnp.full((n,), init, dtype=jnp.float32),
         last_grad_norm=jnp.zeros((n,), dtype=jnp.float32),
         last_param_fingerprint=jnp.zeros((n,), dtype=jnp.float32),
         visited=jnp.zeros((n,), dtype=bool),
+        proj_seed=proj_seed,
     )
 
 
@@ -118,6 +160,12 @@ def online_lipschitz_update(
     L_new = |grad_norm - last_grad_norm| / |fingerprint - last_fingerprint|
     blended into an EMA; first visit keeps the prior.  All ops are gather/
     scatter on index ``node`` so the update jits inside lax.scan.
+
+    ``param_fingerprint`` must come from :func:`param_fingerprint` with
+    ``seed=state.proj_seed`` (a fixed random projection of the parameters).
+    The former ``||x||`` fingerprint collided for distinct params of equal
+    norm, driving the secant denominator to ~0 and the estimate to
+    ``clip_max`` — wrecking the IS weights w = L_bar / L_v.
     """
     node = jnp.asarray(node, dtype=jnp.int32)
     prev_g = state.last_grad_norm[node]
@@ -133,4 +181,5 @@ def online_lipschitz_update(
         last_grad_norm=state.last_grad_norm.at[node].set(grad_norm),
         last_param_fingerprint=state.last_param_fingerprint.at[node].set(param_fingerprint),
         visited=state.visited.at[node].set(True),
+        proj_seed=state.proj_seed,
     )

@@ -26,7 +26,27 @@ __all__ = [
     "tv_distance",
     "conductance",
     "is_reversible",
+    "NotMixedError",
 ]
+
+
+class NotMixedError(RuntimeError):
+    """Raised when a chain has not reached the TV threshold by ``max_t``.
+
+    Carries the horizon and the worst-case TV distance still standing there,
+    so callers can distinguish "does not mix" (disconnected, periodic,
+    absorbing) from "mixes slowly — raise max_t" without parsing strings.
+    """
+
+    def __init__(self, max_t: int, worst_tv: float, eps: float):
+        self.max_t = int(max_t)
+        self.worst_tv = float(worst_tv)
+        self.eps = float(eps)
+        super().__init__(
+            f"chain has not mixed by t={max_t}: worst-case TV distance "
+            f"{worst_tv:.4g} > eps={eps} — the chain may be reducible or "
+            "periodic; if it merely mixes slowly, raise max_t"
+        )
 
 
 def stationary_distribution(p: np.ndarray, tol: float = 1e-12) -> np.ndarray:
@@ -76,6 +96,12 @@ def mixing_time_tv(
     Uses repeated squaring of P to reach large t in O(log t) matmuls, then
     refines by bisection over the doubling bracket.  Worst-case distance is
     monotone non-increasing in t, which makes bisection valid.
+
+    Raises :class:`NotMixedError` when the chain is still above ``eps`` at
+    ``max_t`` — a reducible/periodic chain never mixes, and returning
+    ``max_t`` for it (as this function once did) is indistinguishable from
+    "mixed at exactly max_t", silently corrupting every tau_mix consumer
+    (Theorem-1 terms, entrapment comparisons).
     """
     pi = stationary_distribution(p)
 
@@ -88,7 +114,7 @@ def mixing_time_tv(
     pt = p
     while worst_tv(pt) > eps:
         if t >= max_t:
-            return max_t
+            raise NotMixedError(max_t, worst_tv(pt), eps)
         pt = pt @ pt
         powers.append(pt)
         t *= 2

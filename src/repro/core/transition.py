@@ -11,6 +11,15 @@ Designs implemented:
 3. ``mh_uniform``       MH targeting uniform π                  (Eq. choice 2)
 4. ``mh_importance``    P_IS of Eq. (7): MH targeting π_IS ∝ L_v
 5. ``mhlj``             P = (1-p_J) P_IS + p_J P_Lévy           (paper §V)
+6. ``heterogeneity_mh``   MH targeting the heterogeneity-optimized π of
+   ``repro.core.heterogeneity`` (Dandi et al., arXiv:2204.06477)
+7. ``private_weighted_mh``  MH targeting Gamma-noised weights ŵ = w + G —
+   the private weighted walk of Ayache & El Rouayheb (arXiv:2009.01790)
+
+Every MH-family law (3, 4, 6, 7) is "MH targeting a weight vector" and all
+its padded / bucketed / ragged row builders route through the ONE shared
+block ``_mh_rows_block`` — a new law inherits the four-layout bitwise
+parity contract by construction instead of re-proving it.
 """
 from __future__ import annotations
 
@@ -44,6 +53,15 @@ __all__ = [
     "simple_rw_rows_ragged",
     "mh_uniform_rows_ragged",
     "mh_importance_rows_ragged",
+    "heterogeneity_mh",
+    "heterogeneity_rows",
+    "heterogeneity_rows_bucketed",
+    "heterogeneity_rows_ragged",
+    "private_weights",
+    "private_weighted_mh",
+    "private_weighted_rows",
+    "private_weighted_rows_bucketed",
+    "private_weighted_rows_ragged",
     "is_row_stochastic",
     "supported_on_graph",
 ]
@@ -77,6 +95,12 @@ def mh(graph: Graph, pi: np.ndarray, q: Optional[np.ndarray] = None) -> np.ndarr
 
     P(i,j) = Q(i,j) min{1, pi_j Q(j,i) / (pi_i Q(i,j))} for i != j on edges,
     diagonal = leftover mass.  Q defaults to the simple random walk.
+
+    A custom proposal ``q`` must be a valid chain for the MH construction to
+    return the MH chain *of that proposal*: row-stochastic and supported on
+    the graph (plus self-loops).  An invalid ``q`` raises — masking off-graph
+    mass or renormalizing a non-stochastic proposal would silently return a
+    chain with a different (and wrong) stationary distribution.
     """
     pi = np.asarray(pi, dtype=np.float64)
     if pi.shape != (graph.n,):
@@ -84,14 +108,35 @@ def mh(graph: Graph, pi: np.ndarray, q: Optional[np.ndarray] = None) -> np.ndarr
     if np.any(pi <= 0):
         raise ValueError("pi must be strictly positive")
     pi = pi / pi.sum()
-    q = simple_rw(graph) if q is None else np.asarray(q, dtype=np.float64)
+    if q is None:
+        q = simple_rw(graph)
+    else:
+        q = np.asarray(q, dtype=np.float64)
+        if q.shape != (graph.n, graph.n):
+            raise ValueError(
+                f"proposal q must have shape ({graph.n}, {graph.n}), "
+                f"got {q.shape}"
+            )
+        if not is_row_stochastic(q, atol=1e-8):
+            bad = np.abs(q.sum(axis=1) - 1.0).argmax()
+            raise ValueError(
+                "proposal q is not row-stochastic (row "
+                f"{bad} sums to {q.sum(axis=1)[bad]:.6g} or carries "
+                "negative mass); refusing to renormalize silently"
+            )
+        if not supported_on_graph(q, graph, atol=1e-12):
+            raise ValueError(
+                "proposal q places mass on non-edges; the MH chain of an "
+                "off-graph proposal is not implementable by a walk on this "
+                "graph"
+            )
 
     a = graph.adj
     with np.errstate(divide="ignore", invalid="ignore"):
         ratio = (pi[None, :] * q.T) / (pi[:, None] * q)
     ratio = np.where(q > 0, ratio, 0.0)
     p = q * np.minimum(1.0, ratio)
-    p *= a  # support constraint (redundant when q respects the graph)
+    p *= a  # support constraint (redundant now that q is validated)
     np.fill_diagonal(p, 0.0)
     np.fill_diagonal(p, 1.0 - p.sum(axis=1))
     # numerical guard: tiny negative diagonals from float error
@@ -367,6 +412,146 @@ def mh_importance_rows_ragged(
         lambda nbrs, ids, deg_v: _mh_rows_block(
             nbrs, ids, deg_v, deg, lipschitz
         ),
+        chunk_rows,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneity-aware law (Dandi et al., arXiv:2204.06477)
+# ---------------------------------------------------------------------------
+#
+# MH targeting the pi optimized by ``repro.core.heterogeneity`` against the
+# measured gradient-dissimilarity matrix.  Structurally this is Eq. (6) with
+# w = pi, so every variant is one call into the shared block math — the
+# four-layout bitwise parity contract is inherited, not re-proven.
+
+
+def _check_target_pi(graph, pi) -> np.ndarray:
+    pi = np.asarray(pi, dtype=np.float64)
+    if pi.shape != (graph.n,):
+        raise ValueError(f"pi must have shape ({graph.n},), got {pi.shape}")
+    if np.any(pi <= 0):
+        raise ValueError(
+            "heterogeneity target pi must be strictly positive — a zero "
+            "entry disconnects the MH chain (use the optimizer's floor)"
+        )
+    return pi
+
+
+def heterogeneity_mh(graph: Graph, pi: np.ndarray) -> np.ndarray:
+    """Dense MH chain targeting a heterogeneity-optimized pi.
+
+    ``pi`` comes from ``repro.core.heterogeneity.optimize_pi`` (or
+    ``heterogeneity_pi``); any strictly positive (n,) target is accepted.
+    """
+    return mh(graph, _check_target_pi(graph, pi))
+
+
+def heterogeneity_rows(graph, pi: np.ndarray) -> np.ndarray:
+    """Padded MH rows targeting a heterogeneity-optimized pi."""
+    pi = _check_target_pi(graph, pi)
+    nbrs, ids, deg = _graph_locals(graph)
+    return _mh_rows_block(nbrs, ids, deg, deg, pi)
+
+
+def heterogeneity_rows_bucketed(graph, pi: np.ndarray) -> tuple:
+    """Per-bucket heterogeneity-law rows for a :class:`BucketedCSRGraph`."""
+    return _mh_rows_bucketed(graph, _check_target_pi(graph, pi))
+
+
+def heterogeneity_rows_ragged(
+    graph, pi: np.ndarray, chunk_rows: Optional[int] = None
+) -> np.ndarray:
+    """Flat (nnz,) heterogeneity-law probabilities for any CSR-core graph."""
+    pi = _check_target_pi(graph, pi)
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    return _rows_ragged(
+        graph,
+        lambda nbrs, ids, deg_v: _mh_rows_block(nbrs, ids, deg_v, deg, pi),
+        chunk_rows,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Private weighted walk (Ayache & El Rouayheb, arXiv:2009.01790)
+# ---------------------------------------------------------------------------
+#
+# A weighted random walk whose stationary distribution encodes node
+# importance, run on Gamma-perturbed weights ŵ_v = w_v + G_v so no node's
+# true weight (its data's worth — e.g. its Lipschitz constant) is revealed
+# to neighbors.  The noise exploits Gamma infinite divisibility: with
+# G_v ~ Gamma(1/n, theta) i.i.d., the aggregate Σ_v G_v ~ Gamma(1, theta)
+# is an Exponential(theta) regardless of n, so total distortion of the
+# stationary law stays bounded while each node's share is maximally vague.
+# ``gamma`` scales theta = gamma · n · mean(w): gamma = 0 is the exact
+# weighted walk, larger gamma trades convergence (stationary TV deviation)
+# for privacy — the knob the law sweep benchmark exposes.
+
+
+def private_weights(
+    weights: np.ndarray, gamma: float, *, seed: int = 0
+) -> np.ndarray:
+    """Gamma-noised node weights ŵ = w + G, G_v ~ Gamma(1/n, gamma·n·w̄).
+
+    Drawn ONCE per chain from a fixed ``seed`` (numpy Generator): the
+    perturbed weights are then an ordinary static MH target, so all four
+    engine layouts built from the same (weights, gamma, seed) triple sample
+    the identical chain bitwise.  ``gamma=0`` returns ``w`` exactly.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    if w.ndim != 1:
+        raise ValueError(f"weights must be (n,), got shape {w.shape}")
+    if np.any(w <= 0):
+        raise ValueError("node weights must be strictly positive")
+    if gamma < 0:
+        raise ValueError(f"privacy gamma must be >= 0, got {gamma}")
+    if gamma == 0.0:
+        return w.copy()
+    n = w.size
+    rng = np.random.default_rng(seed)
+    noise = rng.gamma(shape=1.0 / n, scale=gamma * n * w.mean(), size=n)
+    return w + noise
+
+
+def private_weighted_mh(
+    graph: Graph, weights: np.ndarray, gamma: float, *, seed: int = 0
+) -> np.ndarray:
+    """Dense private weighted walk: MH targeting ŵ = ``private_weights``."""
+    w_hat = private_weights(_check_lipschitz(graph, weights), gamma, seed=seed)
+    return mh(graph, w_hat / w_hat.sum())
+
+
+def private_weighted_rows(
+    graph, weights: np.ndarray, gamma: float, *, seed: int = 0
+) -> np.ndarray:
+    """Padded private-weighted-walk rows (MH targeting ŵ)."""
+    w_hat = private_weights(_check_lipschitz(graph, weights), gamma, seed=seed)
+    nbrs, ids, deg = _graph_locals(graph)
+    return _mh_rows_block(nbrs, ids, deg, deg, w_hat)
+
+
+def private_weighted_rows_bucketed(
+    graph, weights: np.ndarray, gamma: float, *, seed: int = 0
+) -> tuple:
+    """Per-bucket private-weighted-walk rows for a :class:`BucketedCSRGraph`."""
+    w_hat = private_weights(_check_lipschitz(graph, weights), gamma, seed=seed)
+    return _mh_rows_bucketed(graph, w_hat)
+
+
+def private_weighted_rows_ragged(
+    graph,
+    weights: np.ndarray,
+    gamma: float,
+    *,
+    seed: int = 0,
+    chunk_rows: Optional[int] = None,
+) -> np.ndarray:
+    """Flat (nnz,) private-weighted-walk probabilities for any CSR-core graph."""
+    w_hat = private_weights(_check_lipschitz(graph, weights), gamma, seed=seed)
+    deg = np.asarray(graph.degrees, dtype=np.int64)
+    return _rows_ragged(
+        graph,
+        lambda nbrs, ids, deg_v: _mh_rows_block(nbrs, ids, deg_v, deg, w_hat),
         chunk_rows,
     )
 

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.engine import WalkEngine
 from repro.core.graphs import Graph
+from repro.core.importance import param_fingerprint
 from repro.core.transition import MHLJParams
 from repro.models.base import Model
 from repro.optim.base import GradientTransformation, apply_updates, global_norm
@@ -186,7 +187,9 @@ def make_train_step(
         params = apply_updates(params, updates)
         if walk.online_lipschitz:
             gn = global_norm(grads)
-            fp = global_norm(params)
+            # random-projection fingerprint, NOT ||params||: equal-norm
+            # param states must not collapse the secant denominator
+            fp = param_fingerprint(params)
             walk_state = walk.update_lipschitz(walk_state, gn, fp)
         if advance_walk:
             walk_state = walk.advance(walk_state)

@@ -5,10 +5,17 @@ carried state is (model x, walk position v); the update applies the
 importance-weighted stochastic gradient of the visited node's local loss
 (Eq. 12), and the walk advances per the chosen method:
 
-  method='uniform'    MH targeting uniform pi, plain gradient (w=1)
-  method='importance' MH-IS (Eq. 7), weighted gradient w(v)=L_bar/L_v
-  method='mhlj'       Algorithm 1 (MH-IS + Levy jumps), weighted gradient
-  method='simple'     simple random walk, plain gradient (degree-biased)
+  method='uniform'       MH targeting uniform pi, plain gradient (w=1)
+  method='importance'    MH-IS (Eq. 7), weighted gradient w(v)=L_bar/L_v
+  method='mhlj'          Algorithm 1 (MH-IS + Levy jumps), weighted gradient
+  method='simple'        simple random walk, plain gradient (degree-biased)
+  method='heterogeneity' MH targeting the gradient-heterogeneity-optimized
+                         pi of ``repro.core.heterogeneity`` (Dandi et al.,
+                         arXiv:2204.06477), weighted gradient w ∝ 1/pi
+  method='private'       private weighted walk on Gamma-noised weights
+                         (Ayache & El Rouayheb, arXiv:2009.01790), weighted
+                         gradient w ∝ 1/ŵ; ``law_kwargs={"gamma": ...}``
+                         sets the privacy knob
 
 The walk advances through :class:`repro.core.engine.WalkEngine` (the single
 implementation of the MHLJ transition); non-jump methods are the engine at
@@ -40,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import heterogeneity as het_mod
 from repro.core import transition as trans_mod
 from repro.core.engine import WalkEngine
 from repro.core.graphs import Graph
@@ -50,7 +58,9 @@ from repro.walk_sgd.fleet import WalkFleet, run_fleet
 
 __all__ = ["RWSGDResult", "MultiRWSGDResult", "run_rw_sgd", "run_rw_sgd_multi"]
 
-METHODS = ("uniform", "importance", "mhlj", "simple")
+METHODS = (
+    "uniform", "importance", "mhlj", "simple", "heterogeneity", "private"
+)
 
 
 @dataclasses.dataclass
@@ -73,6 +83,7 @@ def _setup_method(
     mhlj_params: Optional[MHLJParams],
     p_j_schedule: Optional[np.ndarray],
     num_steps: int,
+    law_kwargs: Optional[dict] = None,
 ):
     """Shared method dispatch: padded P rows, weights, p_J schedule, (p_d, r).
 
@@ -85,9 +96,21 @@ def _setup_method(
     padded table) or a :class:`~repro.core.graphs.RaggedCSRGraph` (flat
     per-edge rows — the true-degree engine layout, exactly-O(E) row
     state, no padded tensor anywhere in the training loop).
+
+    ``law_kwargs`` parameterizes the chain law itself:
+
+    * ``method="heterogeneity"`` — ``pi`` (precomputed (n,) target; when
+      absent it is measured+optimized from ``data`` via
+      ``repro.core.heterogeneity.heterogeneity_pi``, whose ``floor`` /
+      ``num_probes`` / ``probe_scale`` / ``seed`` / ``steps`` knobs pass
+      through).
+    * ``method="private"`` — ``gamma`` (privacy knob, default 0.1) and
+      ``noise_seed`` (Gamma-noise draw seed, default 0).
     """
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
+    if law_kwargs and method not in ("heterogeneity", "private"):
+        raise ValueError(f"law_kwargs is not consumed by method={method!r}")
     lips = data.lipschitz
     dense = getattr(graph, "adj", None) is not None
     bucketed = hasattr(graph, "buckets")
@@ -99,6 +122,11 @@ def _setup_method(
         if bucketed:
             return bucket_rows()
         return ragged_rows() if ragged else padded_rows()
+
+    # the chain's target weight vector, for the laws whose gradient scaling
+    # must undo the visit bias (w(v) = mean(target)/target(v), the Eq.-12
+    # structure); None = the lipschitz default
+    target_weight = None
 
     if method == "uniform":
         use_weights, use_jumps = False, False
@@ -116,6 +144,50 @@ def _setup_method(
             lambda: trans_mod.simple_rw_rows_bucketed(graph),
             lambda: trans_mod.simple_rw_rows_ragged(graph),
         )
+    elif method == "heterogeneity":
+        use_weights, use_jumps = True, False
+        kw = dict(law_kwargs or {})
+        pi = kw.pop("pi", None)
+        if pi is None:
+            pi = het_mod.heterogeneity_pi(data, **kw)
+        elif kw:
+            raise ValueError(
+                f"unused heterogeneity law_kwargs besides pi: {sorted(kw)}"
+            )
+        pi = np.asarray(pi, dtype=np.float64)
+        rows = pick(
+            lambda: trans_mod.heterogeneity_mh(graph, pi),
+            lambda: trans_mod.heterogeneity_rows(graph, pi),
+            lambda: trans_mod.heterogeneity_rows_bucketed(graph, pi),
+            lambda: trans_mod.heterogeneity_rows_ragged(graph, pi),
+        )
+        target_weight = pi
+    elif method == "private":
+        use_weights, use_jumps = True, False
+        kw = dict(law_kwargs or {})
+        priv_gamma = float(kw.pop("gamma", 0.1))
+        noise_seed = int(kw.pop("noise_seed", 0))
+        if kw:
+            raise ValueError(f"unknown private-walk law_kwargs: {sorted(kw)}")
+        rows = pick(
+            lambda: trans_mod.private_weighted_mh(
+                graph, lips, priv_gamma, seed=noise_seed
+            ),
+            lambda: trans_mod.private_weighted_rows(
+                graph, lips, priv_gamma, seed=noise_seed
+            ),
+            lambda: trans_mod.private_weighted_rows_bucketed(
+                graph, lips, priv_gamma, seed=noise_seed
+            ),
+            lambda: trans_mod.private_weighted_rows_ragged(
+                graph, lips, priv_gamma, seed=noise_seed
+            ),
+        )
+        # the update sees only the noised weights (they ARE the chain's
+        # stationary target); true weights stay private to their nodes
+        target_weight = trans_mod.private_weights(
+            np.asarray(lips, dtype=np.float64), priv_gamma, seed=noise_seed
+        )
     else:  # importance / mhlj share the P_IS rows; jumps sampled live
         use_weights = True
         use_jumps = method == "mhlj"
@@ -130,7 +202,9 @@ def _setup_method(
         )
 
     row_probs = rows if bucketed else jnp.asarray(rows)
-    weights = jnp.asarray(lips.mean() / lips, jnp.float32)
+    if target_weight is None:
+        target_weight = np.asarray(lips, dtype=np.float64)
+    weights = jnp.asarray(target_weight.mean() / target_weight, jnp.float32)
 
     if use_jumps:
         if p_j_schedule is not None:
@@ -171,6 +245,7 @@ def run_rw_sgd(
     v0: int = 0,
     seed: int = 0,
     engine_kwargs: Optional[dict] = None,
+    law_kwargs: Optional[dict] = None,
 ) -> RWSGDResult:
     """Run one RW-SGD training; returns the Fig-3 style MSE trace.
 
@@ -190,7 +265,7 @@ def run_rw_sgd(
     compaction, or ``block_w``).
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
-        method, graph, data, mhlj_params, p_j_schedule, num_steps
+        method, graph, data, mhlj_params, p_j_schedule, num_steps, law_kwargs
     )
     engine = _build_engine(graph, p_d, r, row_probs, engine_kwargs, "scan")
     fleet = WalkFleet.create(engine, 1, v0s=[v0])
@@ -260,6 +335,7 @@ def run_rw_sgd_multi(
     avg_every: int = 0,
     seed: int = 0,
     engine_kwargs: Optional[dict] = None,
+    law_kwargs: Optional[dict] = None,
     mesh=None,
 ) -> MultiRWSGDResult:
     """W parallel RW-SGD trainings sharing one batched engine transition.
@@ -286,7 +362,7 @@ def run_rw_sgd_multi(
     ``backend`` override, …).
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
-        method, graph, data, mhlj_params, p_j_schedule, num_steps
+        method, graph, data, mhlj_params, p_j_schedule, num_steps, law_kwargs
     )
     engine = _build_engine(graph, p_d, r, row_probs, engine_kwargs, "auto")
     fleet = WalkFleet.create(

@@ -2,8 +2,8 @@
 
 Runs ``python -m benchmarks.run --smoke`` as a subprocess: every benchmark
 module must satisfy the harness contract (NAME / PAPER_CLAIM / run) and the
-modules with a smoke tier (fig5_sparse_graphs, large_graph_walk) must
-actually execute at toy sizes.  The large-graph tier must take real walk
+modules with a smoke tier (fig5_sparse_graphs, large_graph_walk, law_sweep)
+must actually execute at toy sizes.  The large-graph tier must take real walk
 steps through EVERY registered engine layout (``repro.core.engine.LAYOUTS``)
 plus the compacted bucketed dispatch, so a rotted path — not just the
 default one — fails tier 1 here instead of rotting until someone runs the
@@ -48,6 +48,7 @@ def test_benchmarks_smoke_tier_passes(tmp_path):
     # the executed smoke tiers must have reported derived metrics
     assert "large_graph_walk[smoke]" in out
     assert "fig5_sparse_graphs[smoke]" in out
+    assert "law_sweep[smoke]" in out
     assert "FAILED" not in out
     # every registered engine layout + the compacted bucketed dispatch must
     # have taken real walk steps
@@ -62,6 +63,19 @@ def test_benchmarks_smoke_tier_passes(tmp_path):
         k.endswith("_steps_per_sec")
         for k in derived.get("large_graph_walk", {})
     )
+    # every chain law must have swept every trap family — the law sweep's
+    # presence-gated telemetry keys feed check_regression's missing-key
+    # path (labels spelled out here on purpose: shrinking LAWS must break
+    # this test, not silently shrink it)
+    law_keys = set(derived.get("law_sweep", {}))
+    for family in ("ba", "dumbbell", "lollipop"):
+        for label in (
+            "simple", "uniform", "importance", "mhlj", "heterogeneity",
+            "private_g0.1", "private_g1.0",
+        ):
+            assert f"{family}_{label}_herfindahl" in law_keys, (
+                f"law {label!r} vanished from the {family} sweep"
+            )
 
     # step-time regression gate: fresh smoke numbers vs the committed
     # baseline (generous 2.5x tolerance — catches rot, not noise)

@@ -103,3 +103,49 @@ def test_needell_speedup_prediction(hetero_lipschitz):
     # heterogeneous: L_max >> L_bar ~ L_min => IS rate better than uniform
     assert rates["importance"] < rates["uniform"]
     assert rates["speedup_predicted"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Non-mixing sentinel + trajectory validation — satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_mixing_time_raises_on_non_mixing_chain():
+    """Pre-fix, mixing_time_tv returned max_t for a chain that NEVER mixes
+    (reducible identity chain) — indistinguishable from 'mixed exactly at
+    max_t', so sweeps recorded garbage mixing times."""
+    p = np.eye(4)  # reducible: TV to pi never decays
+    with pytest.raises(mixing.NotMixedError) as exc:
+        mixing.mixing_time_tv(p, max_t=64)
+    assert exc.value.max_t == 64
+    assert exc.value.worst_tv > 0.25  # genuinely far from mixed
+    assert "not mixed" in str(exc.value)
+
+
+def test_mixing_time_raises_on_periodic_chain():
+    """A 2-cycle is periodic: TV oscillates and never stays below eps."""
+    p = np.array([[0.0, 1.0], [1.0, 0.0]])
+    with pytest.raises(mixing.NotMixedError):
+        mixing.mixing_time_tv(p, max_t=128)
+
+
+def test_mixing_time_still_returns_for_mixing_chain():
+    """Validation must not break the happy path: a lazy ring chain mixes
+    and reports a finite time well under max_t."""
+    t = mixing.mixing_time_tv(mh_uniform(ring(8)))
+    assert 1 <= t < 4096
+
+
+def test_visit_fractions_rejects_out_of_range_ids():
+    """Pre-fix, ids >= n were silently dropped by bincount truncation —
+    occupancy summed to < 1 and entrapment metrics were quietly wrong
+    whenever a trajectory was paired with the wrong graph size."""
+    with pytest.raises(ValueError, match="trajectory and graph size"):
+        entrapment.visit_fractions(np.array([0, 1, 7]), 4)
+    with pytest.raises(ValueError, match="trajectory and graph size"):
+        entrapment.visit_fractions(np.array([-1, 0, 1]), 4)
+    with pytest.raises(ValueError, match="empty"):
+        entrapment.visit_fractions(np.array([], dtype=int), 4)
+    # happy path unchanged: fractions over n bins summing to 1
+    f = entrapment.visit_fractions(np.array([0, 0, 3]), 4)
+    np.testing.assert_allclose(f, [2 / 3, 0.0, 0.0, 1 / 3])

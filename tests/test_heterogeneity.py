@@ -1,0 +1,216 @@
+"""The heterogeneity-aware law's measurement + optimization stack
+(arXiv:2204.06477 adaptation), the private walk's weight perturbation
+(arXiv:2009.01790), and the online-estimator fingerprint regression.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heterogeneity as het
+from repro.core import private_weights
+from repro.core.importance import (
+    online_lipschitz_init,
+    online_lipschitz_update,
+    param_fingerprint,
+)
+from repro.data import make_heterogeneous_regression
+
+
+# ---------------------------------------------------------------------------
+# Dissimilarity measurement
+# ---------------------------------------------------------------------------
+
+
+def test_pairwise_dissimilarity_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    grads = rng.normal(size=(3, 12, 5))
+    h = het.pairwise_gradient_dissimilarity(grads)
+    brute = np.zeros((12, 12))
+    for g in grads:
+        for u in range(12):
+            for v in range(12):
+                brute[u, v] += ((g[u] - g[v]) ** 2).sum()
+    brute /= 3
+    np.testing.assert_allclose(h, brute, atol=1e-10)
+    assert np.allclose(h, h.T) and np.all(np.diag(h) == 0) and np.all(h >= 0)
+
+
+def test_measure_dissimilarity_flags_heterogeneous_nodes():
+    """High-variance nodes (the paper's sigma_H^2 outliers) must carry the
+    largest mean dissimilarity — that is the signal the law re-weights on."""
+    data = make_heterogeneous_regression(
+        64, dim=8, sigma_high_sq=100.0, p_high=0.05, seed=0, force_min_high=3
+    )
+    h = het.measure_dissimilarity(data, num_probes=6, seed=1)
+    hbar = het.mean_dissimilarity(h)
+    hot = hbar[data.high_variance_mask].min()
+    cold = hbar[~data.high_variance_mask].max()
+    assert hot > cold
+
+
+def test_measure_dissimilarity_deterministic_in_seed():
+    data = make_heterogeneous_regression(16, dim=4, seed=3)
+    a = het.measure_dissimilarity(data, seed=7)
+    b = het.measure_dissimilarity(data, seed=7)
+    c = het.measure_dissimilarity(data, seed=8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# Simplex projection + pi optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_project_to_simplex_properties():
+    rng = np.random.default_rng(1)
+    for floor in (0.0, 0.2, 0.5):
+        v = rng.normal(size=20)
+        p = het.project_to_simplex(v, floor=floor)
+        assert abs(p.sum() - 1.0) < 1e-12
+        assert p.min() >= floor / 20 - 1e-12
+    # already-feasible points are fixed points
+    u = np.full(10, 0.1)
+    np.testing.assert_allclose(het.project_to_simplex(u, 0.3), u, atol=1e-12)
+
+
+def test_optimizer_matches_closed_form_without_floor():
+    """KKT oracle: argmin_pi sum h_bar/pi on the simplex is pi ∝ sqrt(h_bar).
+    The projected-descent path must land on it when the floor is off."""
+    rng = np.random.default_rng(2)
+    h = het.pairwise_gradient_dissimilarity(rng.normal(size=(4, 24, 6)))
+    oracle = het.optimal_pi_closed_form(h)
+    # from the cold (uniform) start, not the oracle warm start
+    pi = het.optimize_pi(h, floor=0.0, steps=600, init=np.full(24, 1 / 24))
+    hbar = het.mean_dissimilarity(h)
+    hbar = hbar / hbar.max()
+    obj = float(np.sum(hbar / pi))
+    obj_star = float(np.sum(hbar / oracle))
+    assert obj <= obj_star * 1.001  # optimizer reached the optimum
+    np.testing.assert_allclose(pi, oracle, atol=5e-3)
+
+
+def test_optimizer_respects_floor_and_stays_stochastic():
+    rng = np.random.default_rng(3)
+    h = het.pairwise_gradient_dissimilarity(rng.normal(size=(2, 30, 4)))
+    pi = het.optimize_pi(h, floor=0.4)
+    assert abs(pi.sum() - 1.0) < 1e-9
+    assert pi.min() >= 0.4 / 30 - 1e-12
+    # the floor binds somewhere on a genuinely heterogeneous instance, and
+    # the objective at the floored solution beats the floored oracle
+    hbar = het.mean_dissimilarity(h)
+    hbar = hbar / hbar.max()
+    floored_oracle = het.project_to_simplex(het.optimal_pi_closed_form(h), 0.4)
+    assert np.sum(hbar / pi) <= np.sum(hbar / floored_oracle) + 1e-9
+
+
+def test_homogeneous_data_gives_uniform_pi():
+    """H = 0 (identical nodes) must degenerate to MH-uniform's target."""
+    h = np.zeros((12, 12))
+    np.testing.assert_allclose(het.optimize_pi(h), np.full(12, 1 / 12))
+    np.testing.assert_allclose(
+        het.optimal_pi_closed_form(h), np.full(12, 1 / 12)
+    )
+
+
+def test_heterogeneity_pi_pipeline_upweights_outliers():
+    data = make_heterogeneous_regression(
+        48, dim=6, sigma_high_sq=100.0, p_high=0.04, seed=5, force_min_high=2
+    )
+    pi = het.heterogeneity_pi(data, floor=0.25, seed=0)
+    assert abs(pi.sum() - 1.0) < 1e-9 and pi.min() > 0
+    hot = pi[data.high_variance_mask].min()
+    cold = pi[~data.high_variance_mask].max()
+    assert hot > cold  # outlier nodes get more visit mass
+
+
+# ---------------------------------------------------------------------------
+# Private weight perturbation (arXiv:2009.01790)
+# ---------------------------------------------------------------------------
+
+
+def test_private_weights_gamma_zero_is_exact():
+    w = np.array([1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(private_weights(w, 0.0), w)
+
+
+def test_private_weights_seeded_and_additive():
+    rng = np.random.default_rng(4)
+    w = np.exp(rng.normal(size=32))
+    a = private_weights(w, 0.7, seed=9)
+    b = private_weights(w, 0.7, seed=9)
+    c = private_weights(w, 0.7, seed=10)
+    np.testing.assert_array_equal(a, b)  # one chain, one draw
+    assert not np.array_equal(a, c)
+    assert np.all(a >= w)  # Gamma noise is nonnegative — weights stay valid
+
+
+def test_private_weights_aggregate_noise_bounded():
+    """Infinite divisibility: sum_v G_v ~ Gamma(1, gamma n w_bar), so the
+    MEAN total distortion is gamma * n * w_bar independent of how it is
+    split across nodes — check the empirical mean over many draws."""
+    w = np.ones(64)
+    gamma = 0.5
+    totals = [
+        (private_weights(w, gamma, seed=s) - w).sum() for s in range(300)
+    ]
+    expected = gamma * 64 * 1.0
+    assert abs(np.mean(totals) - expected) < 0.2 * expected
+
+
+def test_private_weights_validation():
+    with pytest.raises(ValueError, match="gamma"):
+        private_weights(np.ones(4), -0.1)
+    with pytest.raises(ValueError, match="positive"):
+        private_weights(np.array([1.0, 0.0]), 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Online-estimator fingerprint regression (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_distinguishes_equal_norm_params():
+    """THE collision regression: x and -x share ||x||; the old norm
+    fingerprint made dx = 0 so the secant clipped to clip_max (1e3),
+    wrecking the IS weights.  The random-projection fingerprint keeps the
+    secant calibrated."""
+    x1 = jnp.asarray(np.array([1.0, 2.0, 3.0], np.float32))
+    x2 = -x1  # same norm, maximally different params
+    f1, f2 = param_fingerprint(x1), param_fingerprint(x2)
+    assert float(jnp.abs(f1 - f2)) > 1e-3  # fingerprints separate
+
+    state = online_lipschitz_init(4)
+    state = online_lipschitz_update(state, 0, jnp.float32(1.0), f1)
+    state = online_lipschitz_update(state, 0, jnp.float32(2.0), f2)
+    est = float(state.lipschitz[0])
+    # pre-fix the secant was clip_max=1e3, EMA-blended to ~100.9; post-fix
+    # it is |2-1| / |f1-f2| ~ O(1)
+    assert est < 50.0, f"secant blew up to {est} — fingerprint collided"
+
+
+def test_fingerprint_tracks_parameter_distance():
+    """E[(r.(x-x'))^2] = ||x-x'||^2 / D: across many leaf shapes the
+    fingerprint gap stays on the scale of the parameter gap."""
+    rng = np.random.default_rng(6)
+    tree1 = {
+        "a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(16,)), jnp.float32),
+    }
+    tree2 = {
+        "a": tree1["a"] + 1.0,
+        "b": tree1["b"] - 1.0,
+    }
+    gap = float(jnp.abs(param_fingerprint(tree1) - param_fingerprint(tree2)))
+    assert 0.0 < gap < 10.0  # nonzero, and calibrated (not clip-scale)
+    # determinism: same tree, same seed, same fingerprint
+    assert float(param_fingerprint(tree1)) == float(param_fingerprint(tree1))
+
+
+def test_fingerprint_seed_registered_in_state():
+    state = online_lipschitz_init(3, proj_seed=11)
+    assert state.proj_seed == 11
+    state2 = online_lipschitz_update(
+        state, 1, jnp.float32(1.0), param_fingerprint(jnp.ones(4), seed=11)
+    )
+    assert state2.proj_seed == 11  # survives updates (static aux data)

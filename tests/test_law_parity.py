@@ -1,0 +1,282 @@
+"""Four-layout contract for the two new chain laws.
+
+``heterogeneity_rows*`` (MH targeting a dissimilarity-optimized pi,
+arXiv:2204.06477) and ``private_weighted_rows*`` (MH targeting
+Gamma-noised weights, arXiv:2009.01790) must honour the same acceptance
+contract as every existing law:
+
+1. The padded builder reproduces the dense-matrix truncation
+   (``row_probs_padded`` of the dense MH chain) entry for entry, and the
+   bucketed/ragged builders flatten it exactly.
+2. All four engine layouts × both backends sample the law BITWISE
+   identically per PRNG key — inherited from ``_mh_rows_block``, but
+   asserted here so a law-specific regression cannot hide.
+3. The one-step engine law matches the dense effective chain
+   ``(1-p_j) P_mh + p_j P_levy`` by chi-square at ~4-sigma.
+4. Long-run occupancy of the pure MH walk matches the law's target:
+   pi itself for the heterogeneity law, ŵ/Σŵ for the private law —
+   and gamma=0 degenerates the private law to the exact weighted walk.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MHLJParams,
+    WalkEngine,
+    barabasi_albert,
+    flat_edge_values,
+    heterogeneity,
+    heterogeneity_mh,
+    heterogeneity_rows,
+    heterogeneity_rows_bucketed,
+    heterogeneity_rows_ragged,
+    mh_importance,
+    mixing,
+    private_weighted_mh,
+    private_weighted_rows,
+    private_weighted_rows_bucketed,
+    private_weighted_rows_ragged,
+    private_weights,
+    row_probs_padded,
+    star,
+)
+from repro.core import levy as levy_mod
+from repro.core.walk import (
+    empirical_distribution,
+    graph_tensors,
+    walk_markov_batched,
+)
+from tests.test_sparse_engine import _chi_square_stat, _engine
+
+GAMMA = 0.6
+NOISE_SEED = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Hub-heavy BA graph + one pi per law, shared across the module."""
+    g = barabasi_albert(48, 3, seed=1, layout="dense")
+    csr = g.to_csr()
+    rng = np.random.default_rng(0)
+    # a genuinely non-uniform optimized target: optimize_pi on a random
+    # dissimilarity instance (floor keeps it strictly positive)
+    h = heterogeneity.pairwise_gradient_dissimilarity(
+        rng.normal(size=(3, g.n, 5))
+    )
+    pi = heterogeneity.optimize_pi(h, floor=0.25)
+    weights = np.exp(rng.normal(0.0, 0.8, g.n))
+    params = MHLJParams(0.25, 0.5, 3)
+    return g, csr, pi, weights, params
+
+
+def _law_cases(g, csr, pi, weights):
+    """(tag, dense chain, padded rows, bucketed rows, ragged rows)."""
+    bg = csr.to_bucketed()
+    rg = csr.to_ragged()
+    kw = dict(gamma=GAMMA, seed=NOISE_SEED)
+    return [
+        (
+            "heterogeneity",
+            heterogeneity_mh(g, pi),
+            heterogeneity_rows(csr, pi),
+            heterogeneity_rows_bucketed(bg, pi),
+            heterogeneity_rows_ragged(rg, pi),
+        ),
+        (
+            "private",
+            private_weighted_mh(g, weights, **kw),
+            private_weighted_rows(csr, weights, **kw),
+            private_weighted_rows_bucketed(bg, weights, **kw),
+            private_weighted_rows_ragged(rg, weights, **kw),
+        ),
+    ]
+
+
+def test_builders_reproduce_dense_truncation(setup):
+    """Claim 1: padded builder == row_probs_padded(dense chain); bucketed
+    and ragged builders are its exact per-bucket / flat views."""
+    g, csr, pi, weights, _ = setup
+    bg = csr.to_bucketed()
+    for tag, dense, rows, rows_b, flat in _law_cases(g, csr, pi, weights):
+        # dense chain (float64 matrix math) vs float32 block builder: the
+        # repo's contract here is allclose (cf. test_transitions); bitwise
+        # holds only BETWEEN the layout builders, asserted below
+        np.testing.assert_allclose(
+            rows,
+            row_probs_padded(dense, g),
+            atol=1e-6,
+            err_msg=f"{tag}: padded builder drifted from the dense chain",
+        )
+        np.testing.assert_array_equal(
+            flat.view(np.int32),
+            flat_edge_values(csr.indptr, csr.degrees, rows).view(np.int32),
+            err_msg=f"{tag}: ragged builder is not the exact flatten",
+        )
+        for b, bucket in enumerate(bg.buckets):
+            np.testing.assert_array_equal(
+                rows_b[b].view(np.int32),
+                rows[bucket.node_ids, : bucket.width].view(np.int32),
+                err_msg=f"{tag}: bucket {b} rows drifted",
+            )
+
+
+def test_all_layouts_bitwise_equal_per_key(setup):
+    """Claim 2: sparse/dense/bucketed/ragged × scan/pallas sample each new
+    law bitwise-identically, from the shared table AND from the
+    layout-native builders, at W values that are not block multiples."""
+    g, csr, pi, weights, params = setup
+    bg = csr.to_bucketed()
+    rg = csr.to_ragged()
+    for tag, dense, rows, rows_b, flat in _law_cases(g, csr, pi, weights):
+        rp = jnp.asarray(rows)
+        for w, block_w, key_seed in ((37, 16, 0), (300, 128, 1), (129, 64, 2)):
+            key = jax.random.PRNGKey(key_seed)
+            nodes = jnp.arange(w, dtype=jnp.int32) % csr.n
+            ref_n, ref_h = _engine(csr, params, rp, "scan").step(key, nodes)
+            candidates = [
+                _engine(csr, params, rp, "pallas", layout="sparse",
+                        block_w=block_w),
+                _engine(csr, params, rp, "pallas", layout="dense",
+                        block_w=block_w),
+                _engine(csr, params, rp, "pallas", layout="bucketed",
+                        block_w=block_w),
+                _engine(csr, params, rp, "scan", layout="bucketed"),
+                _engine(csr, params, rp, "pallas", layout="ragged",
+                        block_w=block_w),
+                _engine(csr, params, rp, "scan", layout="ragged"),
+                WalkEngine.from_graph(
+                    bg, params, row_probs=rows_b, backend="pallas",
+                    block_w=block_w,
+                ),
+                WalkEngine.from_graph(
+                    rg, params, row_probs=flat, backend="scan",
+                ),
+            ]
+            for eng in candidates:
+                n2, h2 = eng.step(key, nodes)
+                np.testing.assert_array_equal(
+                    np.asarray(ref_n), np.asarray(n2),
+                    err_msg=f"{tag}: {eng.backend}/{eng.layout} diverged",
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(ref_h), np.asarray(h2),
+                    err_msg=f"{tag}: {eng.backend}/{eng.layout} hops diverged",
+                )
+
+
+@pytest.mark.slow
+def test_one_step_law_matches_dense_chain_chi_square(setup):
+    """Claim 3: the engine's one-step law under each new chain equals the
+    dense effective chain (1-p_j) P_mh + p_j P_levy — chi-square at
+    ~4-sigma from the trap node, on sparse scan + bucketed/ragged pallas."""
+    g, csr, pi, weights, params = setup
+    p_levy = levy_mod.levy_matrix_chained(g, params.p_d, params.r)
+    start, w = 5, 30_000
+    nodes = jnp.full((w,), start, jnp.int32)
+    for tag, dense, rows, _, _ in _law_cases(g, csr, pi, weights):
+        expected_row = (
+            (1.0 - params.p_j) * dense + params.p_j * p_levy
+        )[start]
+        rp = jnp.asarray(rows)
+        for backend, layout, key in (
+            ("scan", "sparse", 21),
+            ("pallas", "bucketed", 22),
+            ("pallas", "ragged", 23),
+        ):
+            nxt, _ = _engine(csr, params, rp, backend, layout=layout).step(
+                jax.random.PRNGKey(key), nodes
+            )
+            counts = np.bincount(
+                np.asarray(nxt), minlength=csr.n
+            ).astype(np.float64)
+            stat, dof = _chi_square_stat(counts, expected_row)
+            crit = dof + 4.0 * np.sqrt(2.0 * dof)
+            assert stat < crit, (
+                f"{tag}/{backend}/{layout}: chi2={stat:.1f} >= {crit:.1f}"
+            )
+
+
+@pytest.mark.slow
+def test_stationary_occupancy_matches_law_target(setup):
+    """Claim 4: long-run occupancy of the pure MH walk hits each law's
+    target — pi for heterogeneity, ŵ/Σŵ for private."""
+    g, csr, pi, weights, _ = setup
+    w_hat = private_weights(weights, GAMMA, seed=NOISE_SEED)
+    targets = {
+        "heterogeneity": pi,
+        "private": w_hat / w_hat.sum(),
+    }
+    nbrs, _ = graph_tensors(g)
+    rng = np.random.default_rng(31)
+    for tag, dense, rows, _, _ in _law_cases(g, csr, pi, weights):
+        target = targets[tag]
+        # dense-chain stationarity is exact (the MH construction target)
+        pi_dense = mixing.stationary_distribution(dense)
+        assert mixing.tv_distance(target, pi_dense) < 1e-8, tag
+        v0s = jnp.asarray(
+            rng.choice(g.n, size=256, p=target), jnp.int32
+        )
+        traj = walk_markov_batched(
+            jax.random.PRNGKey(32), jnp.asarray(rows), nbrs, v0s, 800
+        )
+        emp = empirical_distribution(np.asarray(traj), g.n)
+        tv = mixing.tv_distance(emp, target)
+        assert tv < 0.08, f"{tag}: TV(occupancy, target)={tv:.3f}"
+
+
+def test_private_gamma_zero_is_exact_weighted_walk(setup):
+    """gamma=0 must recover the un-noised weighted walk exactly — the
+    privacy knob's zero point is the paper's plain MH weighted chain."""
+    from repro.core import mh_importance_rows
+
+    g, csr, _, weights, _ = setup
+    np.testing.assert_allclose(
+        private_weighted_mh(g, weights, 0.0),
+        mh_importance(g, weights),
+        atol=1e-12,
+    )
+    # the builders share _mh_rows_block with the identical target, so the
+    # zero point is BITWISE the P_IS builder — not merely close
+    np.testing.assert_array_equal(
+        private_weighted_rows(csr, weights, 0.0).view(np.int32),
+        mh_importance_rows(csr, weights).view(np.int32),
+    )
+
+
+def test_private_gamma_trades_stationary_fidelity(setup):
+    """More privacy (larger gamma) pulls the stationary law further from
+    the true weighted target, monotonically in expectation — the
+    privacy/convergence trade-off the law exists to expose."""
+    g, _, _, weights, _ = setup
+    target = weights / weights.sum()
+    tvs = []
+    for gamma in (0.0, 0.5, 4.0):
+        # average over noise seeds so the comparison is about gamma
+        tv = np.mean(
+            [
+                mixing.tv_distance(
+                    mixing.stationary_distribution(
+                        private_weighted_mh(g, weights, gamma, seed=s)
+                    ),
+                    target,
+                )
+                for s in range(5)
+            ]
+        )
+        tvs.append(tv)
+    assert tvs[0] < 1e-10  # gamma=0: exact
+    assert tvs[0] < tvs[1] < tvs[2]
+
+
+def test_heterogeneity_law_beats_uniform_on_hot_nodes():
+    """End-to-end sanity on a star: the optimized law visits the
+    high-dissimilarity hub more than MH-uniform would."""
+    g = star(12)
+    h = np.zeros((g.n, g.n))
+    h[0, 1:] = h[1:, 0] = 9.0  # hub disagrees with everyone
+    pi = heterogeneity.optimize_pi(h, floor=0.25)
+    assert pi[0] > 1.0 / g.n  # upweighted vs uniform
+    pi_dense = mixing.stationary_distribution(heterogeneity_mh(g, pi))
+    assert mixing.tv_distance(pi, pi_dense) < 1e-8

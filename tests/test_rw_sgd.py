@@ -131,3 +131,87 @@ def test_simple_rw_baseline_runs():
     res = run_rw_sgd("simple", g, data, 1e-3, 2_000, seed=0)
     assert np.isfinite(res.mse).all()
     assert res.transitions_per_update == 1.0
+
+
+# ---------------------------------------------------------------------------
+# New chain laws through the trainer
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneity_method_trains_and_is_layout_invariant():
+    """method='heterogeneity' converges, and — like every law — the walk
+    and MSE trace are bitwise-identical across graph classes."""
+    csr = barabasi_albert(40, 3, seed=2, layout="csr")
+    rg = csr.to_ragged()
+    data = make_heterogeneous_regression(
+        40, dim=5, sigma_high_sq=50.0, p_high=0.1, seed=3, x_star_scale=2.0
+    )
+    ref = run_rw_sgd("heterogeneity", csr, data, 1e-3, 3_000, seed=5)
+    assert np.isfinite(ref.mse).all()
+    assert ref.mse[-1] < 0.2 * ref.mse[0]
+    got = run_rw_sgd("heterogeneity", rg, data, 1e-3, 3_000, seed=5)
+    np.testing.assert_array_equal(ref.update_nodes, got.update_nodes)
+    np.testing.assert_array_equal(ref.mse, got.mse)
+
+
+def test_heterogeneity_method_accepts_precomputed_pi():
+    """law_kwargs={'pi': ...} skips the measurement pipeline; the walk then
+    targets exactly the supplied distribution."""
+    g = ring(24)
+    data = make_homogeneous_regression(24, dim=4, seed=0, x_star_scale=2.0)
+    rng = np.random.default_rng(0)
+    pi = rng.uniform(0.5, 2.0, 24)
+    pi /= pi.sum()
+    res = run_rw_sgd(
+        "heterogeneity", g, data, 1e-3, 20_000, seed=2, law_kwargs={"pi": pi}
+    )
+    emp = np.bincount(res.update_nodes, minlength=24) / res.update_nodes.size
+    assert 0.5 * np.abs(emp - pi).sum() < 0.1  # occupancy hits the target
+
+
+def test_private_method_trains_and_gamma_zero_matches_importance():
+    """method='private' converges; with gamma=0 the noised weights equal
+    the true ones, so the walk (and the whole trace) is bitwise the
+    importance run."""
+    csr = barabasi_albert(40, 3, seed=2, layout="csr")
+    data = make_heterogeneous_regression(
+        40, dim=5, sigma_high_sq=50.0, p_high=0.1, seed=3, x_star_scale=2.0
+    )
+    res = run_rw_sgd(
+        "private", csr, data, 1e-3, 3_000, seed=5, law_kwargs={"gamma": 0.5}
+    )
+    assert np.isfinite(res.mse).all()
+    assert res.mse[-1] < 0.2 * res.mse[0]
+    res0 = run_rw_sgd(
+        "private", csr, data, 1e-3, 3_000, seed=5, law_kwargs={"gamma": 0.0}
+    )
+    ref = run_rw_sgd("importance", csr, data, 1e-3, 3_000, seed=5)
+    np.testing.assert_array_equal(res0.update_nodes, ref.update_nodes)
+    np.testing.assert_array_equal(res0.mse, ref.mse)
+
+
+def test_private_noise_seed_changes_walk_not_validity():
+    csr = barabasi_albert(32, 3, seed=4, layout="csr")
+    data = make_heterogeneous_regression(32, dim=4, seed=1, x_star_scale=2.0)
+    kw = dict(gamma=2.0)
+    a = run_rw_sgd(
+        "private", csr, data, 1e-3, 1_500, seed=7,
+        law_kwargs={**kw, "noise_seed": 0},
+    )
+    b = run_rw_sgd(
+        "private", csr, data, 1e-3, 1_500, seed=7,
+        law_kwargs={**kw, "noise_seed": 1},
+    )
+    assert np.isfinite(a.mse).all() and np.isfinite(b.mse).all()
+    assert not np.array_equal(a.update_nodes, b.update_nodes)
+
+
+def test_law_kwargs_rejected_for_other_methods():
+    g = ring(16)
+    data = make_homogeneous_regression(16, dim=4, seed=0)
+    with pytest.raises(ValueError, match="law_kwargs"):
+        run_rw_sgd("mhlj", g, data, 1e-3, 100, law_kwargs={"gamma": 0.1})
+    with pytest.raises(ValueError, match="unknown"):
+        run_rw_sgd(
+            "private", g, data, 1e-3, 100, law_kwargs={"gammma": 0.1}
+        )

@@ -1,9 +1,24 @@
-"""Transition-matrix invariants (paper Eqs. 6-8) + hypothesis properties."""
+"""Transition-matrix invariants (paper Eqs. 6-8) + hypothesis properties.
+
+Only the property-based tests need hypothesis (a dev-only dependency,
+requirements-dev.txt); the deterministic invariants below must run even
+where it is absent — a module-level importorskip silently disabled ALL of
+them on bare installs.
+"""
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="dev-only dependency (requirements-dev.txt)",
+)
 
 from repro.core import (
     MHLJParams,
@@ -102,31 +117,34 @@ def test_mhlj_is_mixture(small_ring, hetero_lipschitz, mhlj_params):
     )
 
 
-@given(
-    p_d=st.floats(0.05, 0.95),
-    r=st.integers(1, 8),
-)
-@settings(max_examples=40, deadline=None)
-def test_trunc_geom_pmf_properties(p_d, r):
-    pmf = trunc_geom_pmf(p_d, r)
-    assert pmf.shape == (r,)
-    assert abs(pmf.sum() - 1.0) < 1e-9
-    assert np.all(np.diff(pmf) <= 1e-12)  # monotone decreasing
+if HAVE_HYPOTHESIS:
 
+    @needs_hypothesis
+    @given(
+        p_d=st.floats(0.05, 0.95),
+        r=st.integers(1, 8),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_trunc_geom_pmf_properties(p_d, r):
+        pmf = trunc_geom_pmf(p_d, r)
+        assert pmf.shape == (r,)
+        assert abs(pmf.sum() - 1.0) < 1e-9
+        assert np.all(np.diff(pmf) <= 1e-12)  # monotone decreasing
 
-@given(
-    n=st.integers(5, 24),
-    p_j=st.floats(0.0, 0.9),
-    seed=st.integers(0, 10),
-)
-@settings(max_examples=25, deadline=None)
-def test_mhlj_row_stochastic_property(n, p_j, seed):
-    g = erdos_renyi(n, 0.4, seed=seed)
-    lips = _rand_lipschitz(n, seed)
-    p = mhlj(g, lips, MHLJParams(p_j, 0.5, 3))
-    assert is_row_stochastic(p)
-    pi = mixing.stationary_distribution(p)
-    assert np.all(pi > 0) and abs(pi.sum() - 1) < 1e-8
+    @needs_hypothesis
+    @given(
+        n=st.integers(5, 24),
+        p_j=st.floats(0.0, 0.9),
+        seed=st.integers(0, 10),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_mhlj_row_stochastic_property(n, p_j, seed):
+        g = erdos_renyi(n, 0.4, seed=seed)
+        lips = _rand_lipschitz(n, seed)
+        p = mhlj(g, lips, MHLJParams(p_j, 0.5, 3))
+        assert is_row_stochastic(p)
+        pi = mixing.stationary_distribution(p)
+        assert np.all(pi > 0) and abs(pi.sum() - 1) < 1e-8
 
 
 def test_row_probs_padded_matches_dense(small_ring, hetero_lipschitz):
@@ -138,3 +156,107 @@ def test_row_probs_padded_matches_dense(small_ring, hetero_lipschitz):
         for slot in range(deg):
             dense_row[small_ring.neighbors[v, slot]] += padded[v, slot]
         np.testing.assert_allclose(dense_row, p[v], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mh() proposal validation — regression for the silent-repair bug
+# ---------------------------------------------------------------------------
+
+
+def test_mh_rejects_non_stochastic_proposal(small_ring):
+    """Pre-fix, mh() renormalized a non-row-stochastic q and returned a
+    chain targeting the WRONG stationary distribution without a word."""
+    from repro.core import mh
+
+    pi = np.full(small_ring.n, 1.0 / small_ring.n)
+    q = simple_rw(small_ring)
+    q[0] *= 0.5  # row 0 now sums to 0.5
+    with pytest.raises(ValueError, match="not row-stochastic"):
+        mh(small_ring, pi, q=q)
+
+
+def test_mh_rejects_off_graph_proposal(small_ring):
+    """Pre-fix, off-graph proposal mass was masked away — the resulting
+    chain was not the MH chain of q and its pi was silently wrong."""
+    from repro.core import mh
+
+    n = small_ring.n
+    pi = np.full(n, 1.0 / n)
+    q = np.full((n, n), 1.0 / n)  # complete-graph proposal: mass on non-edges
+    assert not supported_on_graph(q, small_ring)
+    with pytest.raises(ValueError, match="non-edges"):
+        mh(small_ring, pi, q=q)
+
+
+def test_mh_rejects_wrong_shape_proposal(small_ring):
+    from repro.core import mh
+
+    pi = np.full(small_ring.n, 1.0 / small_ring.n)
+    with pytest.raises(ValueError, match="shape"):
+        mh(small_ring, pi, q=np.eye(small_ring.n + 1))
+
+
+def test_mh_accepts_valid_custom_proposal(small_ring):
+    """A lazy (self-loop-holding) valid proposal passes validation and its
+    MH chain still targets pi — validation must not reject good input."""
+    from repro.core import mh
+
+    rng = np.random.default_rng(0)
+    pi = rng.uniform(0.5, 2.0, small_ring.n)
+    pi /= pi.sum()
+    q = 0.5 * simple_rw(small_ring) + 0.5 * np.eye(small_ring.n)
+    assert is_row_stochastic(q) and supported_on_graph(q, small_ring)
+    p = mh(small_ring, pi, q=q)
+    assert is_row_stochastic(p)
+    np.testing.assert_allclose(
+        mixing.stationary_distribution(p), pi, atol=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# New chain laws: dense invariants
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneity_mh_targets_pi(small_ring):
+    from repro.core import heterogeneity_mh
+
+    rng = np.random.default_rng(1)
+    pi = rng.uniform(0.5, 3.0, small_ring.n)
+    pi /= pi.sum()
+    p = heterogeneity_mh(small_ring, pi)
+    assert is_row_stochastic(p)
+    assert supported_on_graph(p, small_ring)
+    np.testing.assert_allclose(
+        mixing.stationary_distribution(p), pi, atol=1e-9
+    )
+
+
+def test_heterogeneity_mh_rejects_bad_targets(small_ring):
+    from repro.core import heterogeneity_mh
+
+    with pytest.raises(ValueError, match="shape"):
+        heterogeneity_mh(small_ring, np.ones(small_ring.n + 2))
+    bad = np.full(small_ring.n, 1.0 / small_ring.n)
+    bad[3] = 0.0
+    with pytest.raises(ValueError, match="positive"):
+        heterogeneity_mh(small_ring, bad)
+
+
+def test_private_weighted_mh_targets_noised_weights(small_ring):
+    """Stationary law of the private chain is ŵ/Σŵ — the NOISED weights,
+    not the true ones: that gap is the privacy mechanism."""
+    from repro.core import private_weighted_mh, private_weights
+
+    rng = np.random.default_rng(2)
+    w = np.exp(rng.normal(0.0, 0.6, small_ring.n))
+    gamma, seed = 0.8, 3
+    p = private_weighted_mh(small_ring, w, gamma, seed=seed)
+    assert is_row_stochastic(p)
+    assert supported_on_graph(p, small_ring)
+    w_hat = private_weights(w, gamma, seed=seed)
+    np.testing.assert_allclose(
+        mixing.stationary_distribution(p), w_hat / w_hat.sum(), atol=1e-9
+    )
+    # ... and it genuinely differs from the non-private chain's target
+    assert mixing.tv_distance(w_hat / w_hat.sum(), w / w.sum()) > 1e-4

@@ -104,3 +104,58 @@ def test_annealed_schedule_walk(setup):
     assert early > late
     assert early > 1.08
     assert late < 1.05
+
+
+# ---------------------------------------------------------------------------
+# Schedule factory validation — satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_step_decay_rejects_nonpositive_drop_every():
+    """Pre-fix, drop_every=0 crashed with a bare ZeroDivisionError and a
+    negative value silently produced a GROWING p_J staircase."""
+    with pytest.raises(ValueError, match="drop_every"):
+        schedules.step_decay(0.3, 100, drop_every=0)
+    with pytest.raises(ValueError, match="drop_every"):
+        schedules.step_decay(0.3, 100, drop_every=-5)
+
+
+@pytest.mark.parametrize("bad_pj0", [-0.1, 1.5])
+def test_all_schedules_reject_out_of_range_pj0(bad_pj0):
+    """Pre-fix no factory checked p_j0: an out-of-range value fed the
+    engine a Bernoulli parameter outside [0, 1]."""
+    with pytest.raises(ValueError, match="p_j0|p_j"):
+        schedules.constant(bad_pj0, 100)
+    with pytest.raises(ValueError, match="p_j0|p_j"):
+        schedules.polynomial_decay(bad_pj0, 100)
+    with pytest.raises(ValueError, match="p_j0|p_j"):
+        schedules.step_decay(bad_pj0, 100, drop_every=10)
+    with pytest.raises(ValueError, match="p_j0|p_j"):
+        schedules.linear_to_zero(bad_pj0, 100)
+
+
+def test_schedule_edge_param_validation():
+    with pytest.raises(ValueError, match="num_steps"):
+        schedules.constant(0.3, 0)
+    with pytest.raises(ValueError, match="t0"):
+        schedules.polynomial_decay(0.3, 10, t0=0)
+    with pytest.raises(ValueError, match="power"):
+        schedules.polynomial_decay(0.3, 10, power=-1.0)
+    with pytest.raises(ValueError, match="factor"):
+        schedules.step_decay(0.3, 10, drop_every=2, factor=0.0)
+    with pytest.raises(ValueError, match="zero_at"):
+        schedules.linear_to_zero(0.3, 10, zero_at=1.5)
+
+
+def test_schedules_valid_outputs_in_range():
+    """Validation must not perturb valid outputs: every schedule stays a
+    probability sequence, boundary p_j0 values included."""
+    for sched in (
+        schedules.constant(1.0, 32),
+        schedules.constant(0.0, 32),
+        schedules.polynomial_decay(1.0, 32, power=2.0, t0=3),
+        schedules.step_decay(1.0, 32, drop_every=7, factor=1.0),
+        schedules.linear_to_zero(1.0, 32, zero_at=1.0),
+    ):
+        assert sched.shape == (32,) and sched.dtype == np.float32
+        assert float(sched.min()) >= 0.0 and float(sched.max()) <= 1.0
