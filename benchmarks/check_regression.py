@@ -50,11 +50,13 @@ BASELINE_PATH = os.path.join(REPO, "results", "BENCH_large_graph.json")
 METRIC_SUFFIX = "_steps_per_sec"
 REFERENCE_LABEL = "sparse"
 # Presence-gated keys: the law sweep's `{family}_{law}_herfindahl`
-# telemetry.  Herfindahl values are statistical (walk occupancy), not
-# step-times, so their magnitude is not compared — each key is pinned to
-# ratio 1.0 and only its EXISTENCE is gated: a chain law silently dropped
-# from the sweep is a loud missing-key failure, a noisy herfindahl is not.
-PRESENCE_SUFFIX = "_herfindahl"
+# telemetry and the dynamic-graph sweep's `{family}_churn_speedup`.
+# These values are statistical (walk occupancy) or wall-clock ratios on a
+# tiny smoke batch, not step-times, so their magnitude is not compared —
+# each key is pinned to ratio 1.0 and only its EXISTENCE is gated: a
+# chain law or the churn sweep silently dropped from the run is a loud
+# missing-key failure, a noisy value is not.
+PRESENCE_SUFFIXES = ("_herfindahl", "_churn_speedup")
 # Fleet rows (`fleet_w{W}_aggregate_walk_steps_per_sec`) have no sparse
 # sibling: they normalize against the same sweep's smallest-W row, so the
 # gate watches the W-scaling shape — and a fleet configuration vanishing
@@ -99,14 +101,14 @@ def normalized_ratios(derived: dict) -> dict:
     The sparse keys themselves (trivially 1) and keys without a sparse
     sibling are omitted.  Fleet aggregate keys normalize within their own
     W-sweep instead (:func:`aggregate_ratios`); presence-gated keys
-    (``PRESENCE_SUFFIX``) are pinned to ratio 1.0 so only their existence
+    (``PRESENCE_SUFFIXES``) are pinned to ratio 1.0 so only their existence
     is compared."""
     ref_suffix = f"_{REFERENCE_LABEL}{METRIC_SUFFIX}"
     tags = [k[: -len(ref_suffix)] for k in derived if k.endswith(ref_suffix)]
     out = aggregate_ratios(derived)
     for key in derived:
-        if key.endswith(PRESENCE_SUFFIX):
-            out[key] = 1.0  # presence-only gate (see PRESENCE_SUFFIX)
+        if key.endswith(PRESENCE_SUFFIXES):
+            out[key] = 1.0  # presence-only gate (see PRESENCE_SUFFIXES)
     for key, val in derived.items():
         if not key.endswith(METRIC_SUFFIX) or not val:
             continue

@@ -323,6 +323,163 @@ def _fleet_sweep(scale: str) -> tuple[dict, dict]:
     return fleet, derived
 
 
+def _churn_sweep(scale: str) -> tuple[dict, dict]:
+    """Incremental edge churn vs full rebuild on a hub-heavy BA graph.
+
+    One batched churn of 0.1% of the undirected edges (half deletes —
+    both endpoints keep degree >= 3, halve-and-retry on disconnect —
+    half inserts) is applied two ways.  The batch fraction is the
+    scaling knob that decides whether incremental can win at all: an MH
+    row reads its neighbors' degrees, so the recompute set is the 1-hop
+    closure of the churn endpoints, and on a BA graph edge-uniform
+    deletes are hub-biased — the closure amplifies the batch ~25-30x
+    (measured at n=100k: 0.1% of edges -> 8% of rows, 1% -> 46%).  By
+    ~1% of edges the incremental path is recomputing half the graph and
+    necessarily converges to rebuild cost; at 0.1% the O(closure·width)
+    patch beats the O(n·width) rebuild by the pinned margin.  The batch
+    is applied two ways: (a) the incremental path,
+    ``graphs.apply_edge_churn`` + ``WalkEngine.apply_churn`` patching only
+    the touched CDF segments, and (b) the from-scratch path,
+    ``from_edges(layout="ragged")`` over the churned edge list +
+    ``WalkEngine.from_graph``.  Both are warmed once and the second run is
+    timed.  The incremental CDF must come out **bitwise identical** to an
+    untimed from-scratch oracle built at the engine's recorded
+    ``cdf_width`` (``RuntimeError`` otherwise — a fast wrong answer is
+    not a speedup).  The width matters: on a BA graph the hub is an
+    endpoint of some delete in almost every 1% batch, so the max degree
+    drops and a rebuild at the *new* natural width lands on different
+    XLA reduction lane splits — 1-ulp CDF diffs on rows the churn never
+    touched.  The sticky-width contract (``engine.cdf_width``) is exactly
+    what makes the incremental patch sound, and the oracle checks it at
+    that width.  ``ba_churn_speedup = rebuild_sec / incremental_sec``
+    lands in
+    ``derived`` under the presence gate of
+    ``benchmarks/check_regression.py`` (wall-clock ratios on the tiny
+    smoke batch are too noisy to magnitude-gate).
+    """
+    from repro.core.graphs import apply_edge_churn, from_edges
+
+    n, m = {
+        "smoke": (2_000, 3), "quick": (20_000, 3), "full": (100_000, 3),
+    }[scale]
+    graph = barabasi_albert(n, m, seed=0, layout="ragged")
+    rng = np.random.default_rng(5)
+    lips = jnp.asarray(np.exp(rng.normal(0.0, 1.0, n)), jnp.float32)
+    engine = WalkEngine.from_graph(
+        graph, PARAMS, lipschitz=lips, backend="scan", layout="ragged"
+    )
+
+    deg = np.asarray(graph.degrees, np.int64)
+    src = np.repeat(
+        np.arange(n, dtype=np.int64),
+        np.diff(np.asarray(graph.indptr, np.int64)),
+    )
+    dst = np.asarray(graph.indices, np.int64)
+    keep = src < dst
+    pairs = np.stack([src[keep], dst[keep]], axis=1)
+    budget = max(2, int(0.001 * pairs.shape[0]))
+    cand = pairs[(deg[pairs[:, 0]] >= 4) & (deg[pairs[:, 1]] >= 4)]
+    k_del = min(budget // 2, cand.shape[0])
+    dele = None
+    while k_del:
+        sel = rng.choice(cand.shape[0], size=k_del, replace=False)
+        try:
+            apply_edge_churn(
+                graph, delete=cand[sel], check_connectivity=True
+            )
+        except ValueError:
+            k_del //= 2
+            continue
+        dele = cand[sel]
+        break
+    num_del = 0 if dele is None else dele.shape[0]
+    codes = set((pairs[:, 0] * n + pairs[:, 1]).tolist())
+    ins = []
+    while len(ins) < budget - num_del:
+        a, b = (int(x) for x in rng.integers(0, n, size=2))
+        if a == b:
+            continue
+        lo, hi = min(a, b), max(a, b)
+        if lo * n + hi in codes:
+            continue
+        codes.add(lo * n + hi)
+        ins.append((lo, hi))
+    ins = np.asarray(ins, np.int64)
+
+    def incremental():
+        g2, churn = apply_edge_churn(graph, insert=ins, delete=dele)
+        eng2 = engine.apply_churn(g2, churn, lipschitz=lips)
+        eng2.edge_cdf.block_until_ready()
+        return g2, churn, eng2
+
+    # the rebuild path starts from the same churned edge list (extraction
+    # is shared state in a real system, so it is timed in neither path)
+    g2_warm, churn, eng_inc = incremental()  # warm the block-op jits
+    src2 = np.repeat(
+        np.arange(n, dtype=np.int64),
+        np.diff(np.asarray(g2_warm.indptr, np.int64)),
+    )
+    dst2 = np.asarray(g2_warm.indices, np.int64)
+    keep2 = src2 < dst2
+
+    def rebuild():
+        g3 = from_edges(n, src2[keep2], dst2[keep2], layout="ragged")
+        eng3 = WalkEngine.from_graph(
+            g3, PARAMS, lipschitz=lips, backend="scan", layout="ragged"
+        )
+        eng3.edge_cdf.block_until_ready()
+        return g3, eng3
+
+    rebuild()  # warm
+    t0 = time.perf_counter()
+    _, _, eng_inc = incremental()
+    incremental_sec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    g3, eng_reb = rebuild()
+    rebuild_sec = time.perf_counter() - t0
+
+    # untimed differential oracle: a from-scratch build at the engine's
+    # sticky cdf_width (the timed rebuild above built at the churned
+    # graph's own max degree, whose bits legitimately differ when the
+    # churn moved the max — see the docstring)
+    from repro.core.engine import ragged_edge_cdf
+
+    oracle = ragged_edge_cdf(
+        g3.indptr, g3.indices, g3.degrees,
+        lipschitz=lips, width=eng_inc.cdf_width,
+    )
+    same = (
+        np.array_equal(np.asarray(g2_warm.indptr), np.asarray(g3.indptr))
+        and np.array_equal(
+            np.asarray(g2_warm.indices), np.asarray(g3.indices)
+        )
+        and np.array_equal(
+            np.asarray(eng_inc.edge_cdf).view(np.int32),
+            np.asarray(oracle).view(np.int32),
+        )
+    )
+    if not same:
+        raise RuntimeError(
+            "incremental churn diverged bitwise from the from-scratch "
+            "same-width oracle — the differential contract is broken, "
+            "the timing is meaningless"
+        )
+    del eng_reb
+    speedup = rebuild_sec / incremental_sec
+    section = {
+        "graph_n": n,
+        "num_undirected_edges": int(pairs.shape[0]),
+        "batch_inserts": int(ins.shape[0]),
+        "batch_deletes": int(num_del),
+        "touched_rows": int(churn.touched_rows.size),
+        "incremental_sec": incremental_sec,
+        "rebuild_sec": rebuild_sec,
+        "speedup": speedup,
+        "bitwise_equal": True,
+    }
+    return section, {"ba_churn_speedup": speedup}
+
+
 def run(quick: bool = False, scale: str | None = None) -> dict:
     scale = scale or ("quick" if quick else "full")
     num_walks = {"smoke": 128, "quick": 1024, "full": 2048}[scale]
@@ -395,6 +552,9 @@ def run(quick: bool = False, scale: str | None = None) -> dict:
     fleet, fleet_derived = _fleet_sweep(scale)
     out["fleet"] = fleet
     derived.update(fleet_derived)
+    churn, churn_derived = _churn_sweep(scale)
+    out["churn"] = churn
+    derived.update(churn_derived)
     out["derived"] = derived
 
     if scale != "smoke":  # don't clobber real sweeps from the anti-rot tier

@@ -107,6 +107,7 @@ __all__ = [
     "p_is_rows_block",
     "mh_cdf_invert",
     "ragged_edge_cdf",
+    "ragged_edge_cdf_update",
     "ragged_mh_invert",
     "combine_bucketed",
     "bucket_capacities",
@@ -220,6 +221,7 @@ def ragged_edge_cdf(
     row_probs=None,
     lipschitz=None,
     chunk_rows: Optional[int] = None,
+    width: Optional[int] = None,
 ) -> jnp.ndarray:
     """THE flat per-edge CDF builder of the ragged layout — (nnz,) float32.
 
@@ -239,6 +241,16 @@ def ragged_edge_cdf(
     et al.), or live Eq.-7 rows from a ``lipschitz`` vector.  Host-side
     only (chunking is a python loop) — the engine builds this once at
     construction, never per step.
+
+    ``width`` pins the padded materialization width (default: the
+    graph's ``max_deg``).  The bits of a row's CDF prefix **depend on
+    that width**: XLA's CPU reductions lane-split by row length, so the
+    same probabilities summed at width 29 vs 600 differ in the last
+    ulp.  Incremental churn therefore rebuilds touched rows at the
+    *engine's recorded build width* (``WalkEngine.cdf_width``), not the
+    churned graph's possibly-different max degree — the only way copied
+    untouched segments and freshly patched rows can share one bitwise
+    story.  A ``width`` below the actual max degree raises.
     """
     from repro.core.graphs import (
         _pad_neighbor_lists,
@@ -250,6 +262,13 @@ def ragged_edge_cdf(
     indices_np = np.asarray(indices)
     deg_np = np.asarray(degrees, dtype=np.int64)
     n, nnz, max_deg = deg_np.size, indices_np.shape[0], int(deg_np.max())
+    if width is None:
+        width = max_deg
+    elif width < max_deg:
+        raise ValueError(
+            f"width={width} cannot cover max degree {max_deg}; CDF rows "
+            "must materialize at least as wide as the longest row"
+        )
     flat_probs = None
     if row_probs is not None:
         rp = np.asarray(row_probs)
@@ -274,20 +293,25 @@ def ragged_edge_cdf(
         lips = jnp.asarray(lipschitz, jnp.float32)
         deg_j = jnp.asarray(deg_np, jnp.int32)
     out = np.empty(nnz, dtype=np.float32)
-    cols = np.arange(max_deg)
-    for ids in _ragged_row_chunks(n, max_deg, chunk_rows):
+    cols = np.arange(width)
+    for ids in _ragged_row_chunks(n, width, chunk_rows):
         if flat_probs is not None:
-            rows = np.zeros((ids.size, max_deg), dtype=np.float32)
+            rows = np.zeros((ids.size, width), dtype=np.float32)
             mask = cols[None, :] < deg_np[ids][:, None]
             rows[mask] = flat_probs[
                 indptr_np[ids[0]] : indptr_np[ids[-1] + 1]
             ]
             rows = jnp.asarray(rows)
         elif row_probs is not None:
-            rows = jnp.asarray(rp[ids])
+            block = rp[ids]
+            if block.shape[1] < width:
+                block = np.pad(
+                    block, ((0, 0), (0, width - block.shape[1]))
+                )
+            rows = jnp.asarray(block)
         else:
             nbrs = _pad_neighbor_lists(
-                indptr_np, indices_np, deg_np, node_ids=ids, width=max_deg
+                indptr_np, indices_np, deg_np, node_ids=ids, width=width
             )
             rows = p_is_rows_block(
                 jnp.asarray(nbrs),
@@ -299,6 +323,157 @@ def ragged_edge_cdf(
         cdf = np.asarray(jnp.cumsum(rows, axis=1))
         out[indptr_np[ids[0]] : indptr_np[ids[-1] + 1]] = flat_edge_values(
             indptr_np, deg_np, cdf, node_ids=ids
+        )
+    return jnp.asarray(out)
+
+
+def ragged_edge_cdf_update(
+    old_indptr,
+    old_degrees,
+    old_edge_cdf,
+    new_indptr,
+    new_indices,
+    new_degrees,
+    touched_rows,
+    *,
+    touched_probs=None,
+    lipschitz=None,
+    width: Optional[int] = None,
+) -> jnp.ndarray:
+    """Incremental flat per-edge CDF after a batched edge churn — (nnz',).
+
+    The segment-local counterpart of :func:`ragged_edge_cdf`: every row
+    *not* in ``touched_rows`` keeps its old CDF segment **verbatim** (the
+    per-row cumsum makes each segment bitwise-independent of every other
+    row), and only the touched rows — ``graphs.EdgeChurn.touched_rows``:
+    churn endpoints plus new-graph neighbors of degree-changed nodes — are
+    recomputed, through the **identical** :func:`p_is_rows_block` /
+    ``jnp.cumsum`` / ``flat_edge_values`` ops the from-scratch builder
+    runs, at the **same materialization width**.  That last clause is
+    load-bearing: XLA's CPU reductions lane-split by row width, so the
+    same probabilities padded to a different width differ in the last
+    ulp — a row's bits are a function of (values, width), not values
+    alone.  Pass ``width`` = the width the *old* CDF was built at
+    (``WalkEngine.cdf_width``); the result is then bitwise-identical to
+    ``ragged_edge_cdf(new_graph, width=width)`` (the differential tests
+    in ``tests/test_dynamic_graphs.py`` pin this on every layout) while
+    the work is O(E) copies + O(touched·width) recompute instead of a
+    full O(E log E) rebuild.  Default width: the new graph's max degree
+    — only safe when churn did not change it.  A width below the new
+    max degree raises: the caller must escalate to a full
+    :func:`ragged_edge_cdf` rebuild at the wider width instead
+    (``WalkEngine.apply_churn`` does).
+
+    Row source for the touched rows: ``touched_probs`` — a flat float32
+    buffer of length ``sum(new_degrees[touched_rows])`` in ascending-row
+    CSR edge order, e.g. any ``transition.*_rows_ragged`` builder called
+    with ``node_ids=touched_rows`` — or live Eq.-7 rows from a full-length
+    ``lipschitz`` vector.  Exactly one must be given.
+
+    Validation is strict: the node count must be unchanged (churn moves
+    edges, never nodes), ``touched_rows`` must be unique ascending in
+    range, and any row outside it whose degree changed raises — an
+    incomplete touched set would silently corrupt the walk law otherwise.
+    """
+    from repro.core.graphs import (
+        _concat_ranges,
+        _pad_neighbor_lists,
+        flat_edge_values,
+    )
+
+    old_indptr_np = np.asarray(old_indptr, dtype=np.int64)
+    deg_old = np.asarray(old_degrees, dtype=np.int64)
+    old_cdf = np.asarray(old_edge_cdf, dtype=np.float32)
+    new_indptr_np = np.asarray(new_indptr, dtype=np.int64)
+    indices_np = np.asarray(new_indices)
+    deg_new = np.asarray(new_degrees, dtype=np.int64)
+    touched = np.asarray(touched_rows, dtype=np.int64)
+    n = deg_new.size
+    if deg_old.size != n:
+        raise ValueError(
+            "node count changed across the churn; apply_edge_churn moves "
+            "edges, never nodes"
+        )
+    if touched.size and (
+        np.any(np.diff(touched) <= 0) or touched[0] < 0 or touched[-1] >= n
+    ):
+        raise ValueError(
+            "touched_rows must be unique ascending node ids in range "
+            "(EdgeChurn.touched_rows is)"
+        )
+    if (touched_probs is None) == (lipschitz is None):
+        raise ValueError(
+            "pass exactly one row source: touched_probs (flat buffer over "
+            "the touched rows) or lipschitz (full vector, live Eq.-7 rows)"
+        )
+    keep = np.ones(n, dtype=bool)
+    keep[touched] = False
+    keep_ids = np.nonzero(keep)[0]
+    if not np.array_equal(deg_old[keep_ids], deg_new[keep_ids]):
+        raise ValueError(
+            "a row outside touched_rows changed degree; touched_rows must "
+            "cover every changed row (use EdgeChurn.touched_rows)"
+        )
+    out = np.empty(int(new_indptr_np[-1]), dtype=np.float32)
+    out[_concat_ranges(new_indptr_np[keep_ids], deg_new[keep_ids])] = old_cdf[
+        _concat_ranges(old_indptr_np[keep_ids], deg_old[keep_ids])
+    ]
+    max_deg = int(deg_new.max())
+    if width is None:
+        width = max_deg
+    elif width < max_deg:
+        raise ValueError(
+            f"width={width} cannot cover the new max degree {max_deg}; "
+            "the churn outgrew the old build width — escalate to a full "
+            "ragged_edge_cdf rebuild at the wider width"
+        )
+    if touched.size == 0:
+        return jnp.asarray(out)
+    deg_t = deg_new[touched]
+    if lipschitz is not None:
+        deg_j = jnp.asarray(deg_new, jnp.int32)
+        lips_j = jnp.asarray(lipschitz, jnp.float32)
+        tp = tp_off = None
+    else:
+        tp = np.asarray(touched_probs, dtype=np.float32)
+        expect = int(deg_t.sum())
+        if tp.ndim != 1 or tp.shape[0] != expect:
+            raise ValueError(
+                f"touched_probs must be a flat ({expect},) buffer covering "
+                f"the touched rows in CSR edge order, got {tp.shape}"
+            )
+        tp_off = np.concatenate([[0], np.cumsum(deg_t)])
+    # bounded-memory recompute: the same ~32 MB transient-block rule as
+    # the from-scratch builder (graphs._ragged_row_chunks), applied to
+    # slices of the touched list — a hub-heavy closure at a large width
+    # would otherwise materialize one (touched, width) block of hundreds
+    # of MB and fall off the builder's cell throughput
+    chunk = max(256, (32 << 20) // max(1, 4 * width))
+    cols = np.arange(width)
+    for a in range(0, touched.size, chunk):
+        ids = touched[a : a + chunk]
+        dt = deg_t[a : a + chunk]
+        if lipschitz is not None:
+            nbrs = _pad_neighbor_lists(
+                new_indptr_np, indices_np, deg_new, node_ids=ids,
+                width=width,
+            )
+            rows = p_is_rows_block(
+                jnp.asarray(nbrs),
+                jnp.asarray(ids, jnp.int32),
+                deg_j[ids],
+                deg_j,
+                lips_j,
+            )
+        else:
+            rows_np = np.zeros((ids.size, width), dtype=np.float32)
+            rows_np[cols[None, :] < dt[:, None]] = tp[
+                tp_off[a] : tp_off[a + ids.size]
+            ]
+            rows = jnp.asarray(rows_np)
+        cdf = np.asarray(jnp.cumsum(rows, axis=1))
+        out[_concat_ranges(new_indptr_np[ids], dt)] = flat_edge_values(
+            new_indptr_np, deg_new, cdf, node_ids=ids
         )
     return jnp.asarray(out)
 
@@ -570,6 +745,11 @@ class WalkEngine:
     # -- ragged-layout state (the O(E) true-degree path) --------------------
     edge_cdf: Optional[jnp.ndarray] = None  # (nnz,) float32 flat per-edge CDF
     max_degree: Optional[int] = None  # static bound for the binary search
+    cdf_width: Optional[int] = None  # width edge_cdf was materialized at —
+    #   XLA reduction bits depend on the padded row width, so incremental
+    #   churn must keep patching at THIS width (>= max_degree) to stay
+    #   bitwise vs a same-width rebuild; apply_churn escalates to a full
+    #   recompute only when an insert pushes max degree past it
     # -- fleet sharding (static; see repro.walk_sgd.fleet) -------------------
     walker_sharding: Optional[object] = None  # jax NamedSharding for the W
     #   walker axis; None = single-device (no constraints emitted).  When
@@ -577,6 +757,11 @@ class WalkEngine:
     #   walker mesh axis so GSPMD keeps the whole transition
     #   walker-parallel (graph state stays replicated per
     #   repro.sharding.rules.fleet_specs).
+    # -- dynamic graphs (static; see docs/dynamic_graphs.md) -----------------
+    graph_version: int = 0  # bumped by apply_churn — static aux, so jitted
+    #   consumers retrace across graph versions (an nnz change forces a
+    #   retrace anyway; the counter makes equal-nnz churns explicit too,
+    #   and walk-continuity bookkeeping keys off it)
 
     @classmethod
     def from_graph(
@@ -657,6 +842,7 @@ class WalkEngine:
                 indices=jnp.asarray(core.indices, jnp.int32),
                 edge_cdf=edge_cdf,
                 max_degree=int(np.asarray(core.degrees).max()),
+                cdf_width=int(np.asarray(core.degrees).max()),
             )
         if layout == "bucketed":
             # bucket_factor=None keeps an already-bucketed graph's ladder
@@ -757,6 +943,114 @@ class WalkEngine:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.layout not in LAYOUTS:
             raise ValueError(f"unknown layout {self.layout!r}")
+
+    def apply_churn(
+        self,
+        graph,
+        churn,
+        *,
+        lipschitz=None,
+        touched_probs=None,
+    ) -> "WalkEngine":
+        """New engine over a churned graph, recomputing only touched rows.
+
+        ``graph`` is the **post-churn** sparse graph and ``churn`` the
+        :class:`repro.core.graphs.EdgeChurn` receipt, both straight from
+        ``apply_edge_churn``.  Row state is refreshed by
+        :func:`ragged_edge_cdf_update` (untouched CDF segments copied
+        verbatim, ``churn.touched_rows`` recomputed from ``lipschitz`` or
+        ``touched_probs`` — exactly one) **at the engine's recorded
+        ``cdf_width``**, so the patched buffer stays bitwise-identical to
+        a same-width from-scratch rebuild even when the churn *lowered*
+        the max degree (XLA reduction bits depend on the padded row
+        width — see :func:`ragged_edge_cdf`).  Only when an insert pushes
+        the max degree **past** ``cdf_width`` does the update escalate to
+        a full :func:`ragged_edge_cdf` recompute at the new width — rare
+        under random churn (an insert must land on the current hub), and
+        the escalation needs a *full* row source: ``lipschitz`` works as
+        is, while a ``touched_probs`` buffer restricted to the touched
+        rows cannot rebuild untouched rows and must be passed full-length
+        (nnz,) instead.  ``graph_version`` is bumped by one and every
+        other engine knob carries over.  Walk positions are *not*
+        migrated here — that is the fleet's continuity rule
+        (:func:`repro.walk_sgd.fleet.migrate_walk_nodes`), which keys off
+        the new degree vector.
+
+        Ragged layout only: the other layouts' row state (padded tables /
+        per-bucket tiles) has no segment-local structure worth patching —
+        rebuild those engines via :meth:`from_graph`.
+        """
+        if self.layout != "ragged":
+            raise ValueError(
+                "incremental churn updates exist on layout='ragged' only "
+                "(the flat per-edge CDF is segment-local); rebuild other "
+                "layouts via WalkEngine.from_graph"
+            )
+        if not hasattr(graph, "indptr"):
+            raise TypeError(
+                "apply_churn needs the post-churn CSRGraph/RaggedCSRGraph "
+                f"(got {type(graph).__name__})"
+            )
+        new_max = int(np.asarray(graph.degrees).max())
+        old_width = self.cdf_width if self.cdf_width is not None else (
+            self.max_degree
+        )
+        if new_max <= old_width:
+            new_cdf = ragged_edge_cdf_update(
+                np.asarray(self.indptr, dtype=np.int64),
+                np.asarray(self.degrees),
+                self.edge_cdf,
+                graph.indptr,
+                graph.indices,
+                graph.degrees,
+                churn.touched_rows,
+                touched_probs=touched_probs,
+                lipschitz=lipschitz,
+                width=old_width,
+            )
+            new_width = old_width
+        else:
+            # escalation: the churn outgrew the recorded build width, so
+            # EVERY row's bits change (width-dependent reductions) — a
+            # segment patch cannot help; rebuild the whole flat CDF once
+            # at the new width and record it
+            if (touched_probs is None) == (lipschitz is None):
+                raise ValueError(
+                    "pass exactly one row source: touched_probs or "
+                    "lipschitz"
+                )
+            nnz = int(np.asarray(graph.indices).shape[0])
+            if touched_probs is not None:
+                tp = np.asarray(touched_probs, dtype=np.float32)
+                if tp.ndim != 1 or tp.shape[0] != nnz:
+                    raise ValueError(
+                        f"churn raised the max degree past the engine's "
+                        f"cdf_width ({old_width} -> {new_max}); the "
+                        "escalated full rebuild needs a full-length "
+                        f"({nnz},) row-probability buffer, not one "
+                        "restricted to the touched rows — recompute "
+                        f"without node_ids (got {tp.shape})"
+                    )
+                new_cdf = ragged_edge_cdf(
+                    graph.indptr, graph.indices, graph.degrees,
+                    row_probs=tp, width=new_max,
+                )
+            else:
+                new_cdf = ragged_edge_cdf(
+                    graph.indptr, graph.indices, graph.degrees,
+                    lipschitz=lipschitz, width=new_max,
+                )
+            new_width = new_max
+        return dataclasses.replace(
+            self,
+            degrees=jnp.asarray(graph.degrees, jnp.int32),
+            indptr=jnp.asarray(graph.indptr, jnp.int32),
+            indices=jnp.asarray(graph.indices, jnp.int32),
+            edge_cdf=new_cdf,
+            max_degree=new_max,
+            cdf_width=new_width,
+            graph_version=self.graph_version + 1,
+        )
 
     # -- backend resolution -------------------------------------------------
 
@@ -1274,7 +1568,9 @@ _ENGINE_DATA_FIELDS = (
 _ENGINE_META_FIELDS = (
     "p_d", "r", "backend", "layout", "block_w", "interpret",
     "compact", "capacity_factor", "bucket_share", "max_degree",
+    "cdf_width",
     "walker_sharding",  # NamedSharding is hashable -> valid static aux
+    "graph_version",
 )
 
 

@@ -1,0 +1,198 @@
+"""``jax.random`` ports of the trap-prone graph samplers.
+
+The numpy builders in ``core.graphs`` (``barabasi_albert``, ``sbm``) are
+host-side: a ``np.random.Generator`` stream, python retry loops, O(E)
+array passes.  That is the right tool for one-shot construction, but the
+dynamic-graph loop (docs/dynamic_graphs.md) re-samples graphs *between*
+jitted training epochs, and a resample that lives inside a jitted region
+needs fixed shapes and a ``jax.random`` key.  This module provides that:
+
+* :func:`barabasi_albert_edges` — the Batagelj–Brandes repeated-nodes
+  construction of ``graphs.barabasi_albert``, ported op for op to
+  ``jnp`` (the position→endpoint pointer chase becomes a
+  ``lax.while_loop``).  Fully jit-compatible: static ``(n, m)``, fixed
+  ``(m·(n-m),)`` output shapes, one key in.
+* :func:`sbm_pair_mask` — the jit-compatible core of the SBM sampler: a
+  fixed-shape Bernoulli mask over all ``n(n-1)/2`` unordered pairs with
+  the block-dependent edge probability.  Extracting the variable-length
+  edge list is inherently shape-dynamic, so that stays host-side.
+* :func:`barabasi_albert_jax` / :func:`sbm_jax` — host wrappers that turn
+  the device samples into validated ``core.graphs`` classes via the
+  usual ``from_edges`` machinery (any layout).
+
+Parity contract (pinned by ``tests/test_graphs.py``): **family-level,
+not stream-level**.  A ``jax.random`` key and a numpy ``Generator``
+produce different streams by design, so the ports match the numpy
+samplers in family properties — degree-sequence shape for BA (power-law
+hubs, min degree, edge count bounds), block densities for SBM — and in
+every structural invariant (``validate()`` passes), not edge for edge.
+The SBM mask is O(n²) pairs where the numpy sampler is O(E); that is the
+price of fixed shapes, and it bounds this port to the analysis/Dada
+scales (n ≲ a few thousand) — the numpy sampler remains THE large-graph
+constructor.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.graphs import (
+    _csr_graph_from_arrays,
+    _csr_is_connected,
+    _edges_to_csr,
+    from_edges,
+)
+
+__all__ = [
+    "barabasi_albert_edges",
+    "barabasi_albert_jax",
+    "sbm_pair_mask",
+    "sbm_jax",
+]
+
+
+def barabasi_albert_edges(
+    n: int, m: int, key: jax.Array
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Barabási–Albert attachment edges on device — jit-compatible.
+
+    The exact Batagelj–Brandes scheme of ``graphs.barabasi_albert``: edge
+    ``e`` of node ``v = m + e//m`` picks a uniform position of the
+    repeated endpoint list built by earlier nodes' edges (so the pick is
+    degree-proportional), and odd positions — pointers at an earlier
+    edge's *target* — are resolved by a ``lax.while_loop`` pointer chase
+    that strictly shrinks per round (O(log) iterations).  ``n``/``m`` are
+    static (they fix the output shapes); returns ``(src, dst)`` int32
+    arrays of ``m·(n-m)`` undirected attachment edges with ``dst < src``,
+    connected by construction once deduped (node ``m`` seeds by attaching
+    to all of ``0..m-1``).  Feed through :func:`barabasi_albert_jax` (or
+    ``graphs.from_edges``) to get a validated graph class.
+    """
+    if not (1 <= m < n):
+        raise ValueError("barabasi_albert requires 1 <= m < n")
+    num_edges = m * (n - m)
+    eidx = jnp.arange(num_edges, dtype=jnp.int32)
+    src = m + eidx // m
+    # position draw in [0, 2m(v-m)) — the repeated-list state before node
+    # v's own edges; the first m (seed) edges have bound 0 and are
+    # overwritten below
+    bound = 2 * m * (src - m)
+    u = jax.random.uniform(key, (num_edges,))
+    pos = jnp.minimum(
+        (u * bound.astype(jnp.float32)).astype(jnp.int32),
+        jnp.maximum(bound - 1, 0),
+    )
+
+    def unresolved(p):
+        e_prev = (p - 1) // 2
+        return (p % 2 == 1) & (e_prev >= m)
+
+    def body(p):
+        e_prev = (p - 1) // 2
+        # clip keeps the gather in range on already-resolved lanes (their
+        # looked-up value is discarded by the where)
+        looked = p[jnp.clip(e_prev, 0, num_edges - 1)]
+        return jnp.where(unresolved(p), looked, p)
+
+    pos = lax.while_loop(lambda p: jnp.any(unresolved(p)), body, pos)
+    dst = jnp.where(pos % 2 == 0, m + (pos // 2) // m, (pos - 1) // 2)
+    dst = jnp.where(eidx < m, eidx, dst)  # node m's seed attachments
+    return src, dst
+
+
+def barabasi_albert_jax(
+    n: int,
+    m: int,
+    key: jax.Array,
+    *,
+    layout: str = "csr",
+    bucket_factor: int = 2,
+):
+    """Validated BA graph from a ``jax.random`` key (host wrapper).
+
+    Samples :func:`barabasi_albert_edges` on device, then builds the
+    requested ``core.graphs`` layout through ``from_edges`` (dedupe,
+    self-loops, full validation) exactly like the numpy builder.
+    """
+    src, dst = barabasi_albert_edges(n, m, key)
+    return from_edges(
+        n,
+        np.asarray(src, dtype=np.int64),
+        np.asarray(dst, dtype=np.int64),
+        name=f"ba_jax({n},{m})",
+        layout=layout,
+        bucket_factor=bucket_factor,
+    )
+
+
+def _sbm_pair_meta(block_sizes: Sequence[int]):
+    sizes = np.asarray(block_sizes, dtype=np.int64)
+    if sizes.ndim != 1 or sizes.size < 1 or np.any(sizes < 1):
+        raise ValueError("block_sizes must be a non-empty list of positive ints")
+    n = int(sizes.sum())
+    block_ids = np.repeat(np.arange(sizes.size), sizes)
+    i, j = np.triu_indices(n, k=1)
+    return n, i, j, block_ids[i] == block_ids[j]
+
+
+def sbm_pair_mask(
+    block_sizes: Sequence[int], p_in: float, p_out: float, key: jax.Array
+) -> jnp.ndarray:
+    """Bernoulli mask over all unordered node pairs — jit-compatible.
+
+    Entry ``k`` decides pair ``(i_k, j_k)`` of ``np.triu_indices(n, 1)``
+    row-major order: present with probability ``p_in`` inside a block,
+    ``p_out`` across.  ``block_sizes`` is static (it fixes the
+    ``(n(n-1)/2,)`` shape); ``p_in``/``p_out`` may be traced.  This is
+    the whole device-side randomness of the SBM port — edge-list
+    extraction (variable length) happens in :func:`sbm_jax` host-side.
+    """
+    _, _, _, same_block = _sbm_pair_meta(block_sizes)
+    p_pair = jnp.where(
+        jnp.asarray(same_block),
+        jnp.asarray(p_in, jnp.float32),
+        jnp.asarray(p_out, jnp.float32),
+    )
+    return jax.random.uniform(key, p_pair.shape) < p_pair
+
+
+def sbm_jax(
+    block_sizes: Sequence[int],
+    p_in: float,
+    p_out: float,
+    key: jax.Array,
+    *,
+    layout: str = "csr",
+    bucket_factor: int = 2,
+    max_retries: int = 64,
+):
+    """Validated SBM graph from a ``jax.random`` key (host wrapper).
+
+    Mirrors ``graphs.sbm``'s retry-until-connected loop with
+    ``jax.random.fold_in(key, attempt)`` as the per-attempt key (attempt
+    0 uses ``key`` itself, so one connected draw consumes exactly the
+    caller's key).  Probabilities are validated here — the mask core
+    accepts traced values and cannot.
+    """
+    for q, tag in ((p_in, "p_in"), (p_out, "p_out")):
+        if not (0.0 <= float(q) <= 1.0):
+            raise ValueError(f"{tag} must be in [0,1], got {q}")
+    n, i, j, _ = _sbm_pair_meta(block_sizes)
+    sizes = [int(s) for s in np.asarray(block_sizes, dtype=np.int64)]
+    name = f"sbm_jax({sizes},{p_in},{p_out})"
+    for attempt in range(max_retries):
+        k = key if attempt == 0 else jax.random.fold_in(key, attempt)
+        mask = np.asarray(sbm_pair_mask(block_sizes, p_in, p_out, k))
+        indptr, indices, degrees = _edges_to_csr(n, i[mask], j[mask])
+        if _csr_is_connected(indptr, indices):
+            return _csr_graph_from_arrays(
+                indptr, indices, degrees, name, layout,
+                bucket_factor=bucket_factor,
+            )
+    raise RuntimeError(
+        f"could not sample a connected {name} in {max_retries} tries"
+    )

@@ -360,11 +360,36 @@ def mh_importance_rows_bucketed(graph, lipschitz: np.ndarray) -> tuple:
 # array ever exists — transient memory is O(chunk·max_deg).
 
 
-def _rows_ragged(graph, block_fn, chunk_rows: Optional[int] = None) -> np.ndarray:
+def _rows_ragged(
+    graph,
+    block_fn,
+    chunk_rows: Optional[int] = None,
+    node_ids: Optional[np.ndarray] = None,
+) -> np.ndarray:
     indptr = np.asarray(graph.indptr)
     indices = np.asarray(graph.indices)
     deg = np.asarray(graph.degrees, dtype=np.int64)
     n, max_deg = deg.size, int(deg.max())
+    if node_ids is not None:
+        # Restricted build for incremental churn updates: one flat buffer
+        # covering exactly these rows in ascending CSR edge order — the
+        # ``touched_probs`` input of ``engine.ragged_edge_cdf_update``.
+        # Rows go through the SAME block builder at the full ``max_deg``
+        # width, so each entry stays bit-for-bit the full-build entry.
+        ids = np.asarray(node_ids, dtype=np.int64)
+        if ids.size and (
+            np.any(np.diff(ids) <= 0) or ids[0] < 0 or ids[-1] >= n
+        ):
+            raise ValueError(
+                "node_ids must be unique ascending node ids in range "
+                "(EdgeChurn.touched_rows is)"
+            )
+        nbrs = _pad_neighbor_lists(
+            indptr, indices, deg, node_ids=ids, width=max_deg
+        )
+        return flat_edge_values(
+            indptr, deg, block_fn(nbrs, ids, deg[ids]), node_ids=ids
+        )
     out = np.empty(indices.shape[0], dtype=np.float32)
     for ids in _ragged_row_chunks(n, max_deg, chunk_rows):
         nbrs = _pad_neighbor_lists(
@@ -376,27 +401,42 @@ def _rows_ragged(graph, block_fn, chunk_rows: Optional[int] = None) -> np.ndarra
     return out
 
 
-def simple_rw_rows_ragged(graph, chunk_rows: Optional[int] = None) -> np.ndarray:
-    """Flat (nnz,) simple-RW probabilities for any CSR-core graph."""
+def simple_rw_rows_ragged(
+    graph,
+    chunk_rows: Optional[int] = None,
+    node_ids: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Flat (nnz,) simple-RW probabilities for any CSR-core graph.
+
+    ``node_ids`` (unique ascending) restricts the buffer to those rows —
+    the churn-update row source (``engine.ragged_edge_cdf_update``).
+    """
     return _rows_ragged(
         graph, lambda nbrs, ids, deg_v: _simple_rw_block(nbrs, deg_v),
-        chunk_rows,
+        chunk_rows, node_ids,
     )
 
 
-def mh_uniform_rows_ragged(graph, chunk_rows: Optional[int] = None) -> np.ndarray:
+def mh_uniform_rows_ragged(
+    graph,
+    chunk_rows: Optional[int] = None,
+    node_ids: Optional[np.ndarray] = None,
+) -> np.ndarray:
     """Flat (nnz,) MH-uniform probabilities for any CSR-core graph."""
     deg = np.asarray(graph.degrees, dtype=np.int64)
     weight = np.ones(deg.size)
     return _rows_ragged(
         graph,
         lambda nbrs, ids, deg_v: _mh_rows_block(nbrs, ids, deg_v, deg, weight),
-        chunk_rows,
+        chunk_rows, node_ids,
     )
 
 
 def mh_importance_rows_ragged(
-    graph, lipschitz: np.ndarray, chunk_rows: Optional[int] = None
+    graph,
+    lipschitz: np.ndarray,
+    chunk_rows: Optional[int] = None,
+    node_ids: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Flat (nnz,) P_IS probabilities of Eq. (7) for any CSR-core graph.
 
@@ -404,6 +444,8 @@ def mh_importance_rows_ragged(
     ``indptr[v] + k`` is bit-for-bit ``mh_importance_rows(graph)[v, k]``
     (same block math at the same width, pads dropped), so the flat CDF the
     engine builds from it inverts to the identical neighbor per key.
+    ``node_ids`` (unique ascending) restricts the buffer to those rows —
+    the churn-update row source (``engine.ragged_edge_cdf_update``).
     """
     lipschitz = _check_lipschitz(graph, lipschitz)
     deg = np.asarray(graph.degrees, dtype=np.int64)
@@ -412,7 +454,7 @@ def mh_importance_rows_ragged(
         lambda nbrs, ids, deg_v: _mh_rows_block(
             nbrs, ids, deg_v, deg, lipschitz
         ),
-        chunk_rows,
+        chunk_rows, node_ids,
     )
 
 
@@ -460,7 +502,10 @@ def heterogeneity_rows_bucketed(graph, pi: np.ndarray) -> tuple:
 
 
 def heterogeneity_rows_ragged(
-    graph, pi: np.ndarray, chunk_rows: Optional[int] = None
+    graph,
+    pi: np.ndarray,
+    chunk_rows: Optional[int] = None,
+    node_ids: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Flat (nnz,) heterogeneity-law probabilities for any CSR-core graph."""
     pi = _check_target_pi(graph, pi)
@@ -468,7 +513,7 @@ def heterogeneity_rows_ragged(
     return _rows_ragged(
         graph,
         lambda nbrs, ids, deg_v: _mh_rows_block(nbrs, ids, deg_v, deg, pi),
-        chunk_rows,
+        chunk_rows, node_ids,
     )
 
 
@@ -545,14 +590,20 @@ def private_weighted_rows_ragged(
     *,
     seed: int = 0,
     chunk_rows: Optional[int] = None,
+    node_ids: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    """Flat (nnz,) private-weighted-walk probabilities for any CSR-core graph."""
+    """Flat (nnz,) private-weighted-walk probabilities for any CSR-core graph.
+
+    The noise draw depends only on (weights, gamma, seed) — never on
+    ``node_ids`` — so a churn-restricted buffer stays consistent with the
+    full build of the same triple.
+    """
     w_hat = private_weights(_check_lipschitz(graph, weights), gamma, seed=seed)
     deg = np.asarray(graph.degrees, dtype=np.int64)
     return _rows_ragged(
         graph,
         lambda nbrs, ids, deg_v: _mh_rows_block(nbrs, ids, deg_v, deg, w_hat),
-        chunk_rows,
+        chunk_rows, node_ids,
     )
 
 

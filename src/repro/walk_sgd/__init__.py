@@ -14,9 +14,16 @@ from repro.walk_sgd.fleet import (
     fleet_average,
     init_fleet_walk_state,
     make_fleet_step,
+    migrate_walk_nodes,
     run_fleet,
     sample_initial_nodes,
     shard_walker_batch,
+)
+from repro.walk_sgd.graph_learning import (
+    DadaResult,
+    personalize_models,
+    run_dada,
+    similarity_edges,
 )
 
 __all__ = [
@@ -31,7 +38,12 @@ __all__ = [
     "fleet_average",
     "init_fleet_walk_state",
     "make_fleet_step",
+    "migrate_walk_nodes",
     "run_fleet",
     "sample_initial_nodes",
     "shard_walker_batch",
+    "DadaResult",
+    "personalize_models",
+    "run_dada",
+    "similarity_edges",
 ]

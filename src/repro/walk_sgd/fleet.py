@@ -66,6 +66,7 @@ from repro.sharding.rules import (
 __all__ = [
     "WalkFleet",
     "sample_initial_nodes",
+    "migrate_walk_nodes",
     "fleet_average",
     "run_fleet",
     "shard_fleet",
@@ -104,6 +105,55 @@ def sample_initial_nodes(
             f"[{int(v0s.min())}, {int(v0s.max())}]"
         )
     return v0s
+
+
+def migrate_walk_nodes(
+    nodes,
+    new_degrees,
+    *,
+    seed: int = 0,
+):
+    """THE walk-continuity rule across graph versions — see
+    docs/dynamic_graphs.md.
+
+    After an edge churn (``graphs.apply_edge_churn``), a walk standing on
+    a node that is still *in* the new graph (degree > 1, i.e. any edge
+    beyond the structural self-loop) carries its position unchanged —
+    bitwise, no re-draw.  A walk standing on a **departed** node (degree
+    exactly 1: self-loop only, unreachable for every other walk) is
+    re-seeded through the existing :func:`sample_initial_nodes` stream
+    over the surviving nodes: draw index ``w``'s node is
+    ``active[sample_initial_nodes(len(active), W, seed=seed)[w]]`` with
+    ``active`` the ascending in-graph node ids — documented here because
+    the continuity test pins exactly this formula.  RNG continuity for
+    surviving walks is free by construction: the fleet loops split one
+    key stream over all W walks regardless of position, so carrying a
+    position carries its uniform stream.
+
+    Returns ``(new_nodes, displaced)``: the ``(W,)`` int32 positions and
+    the boolean mask of re-seeded walks.
+    """
+    nodes_np = np.atleast_1d(np.asarray(nodes, np.int32))
+    deg = np.asarray(new_degrees, np.int64)
+    in_graph = deg > 1
+    if not in_graph.any():
+        raise ValueError(
+            "no node of the churned graph has a non-loop edge; every walk "
+            "would be displaced with nowhere to land"
+        )
+    if nodes_np.size and (
+        int(nodes_np.min()) < 0 or int(nodes_np.max()) >= deg.size
+    ):
+        raise ValueError("walk positions out of range for the churned graph")
+    displaced = ~in_graph[nodes_np]
+    new_nodes = nodes_np.copy()
+    if displaced.any():
+        active = np.nonzero(in_graph)[0].astype(np.int32)
+        draws = sample_initial_nodes(
+            int(active.size), int(nodes_np.size), seed=seed
+        )
+        new_nodes[displaced] = active[draws[displaced]]
+    return new_nodes, displaced
 
 
 def fleet_average(tree, do_avg=None):
@@ -167,6 +217,25 @@ class WalkFleet:
             num_walks=num_walks,
             avg_every=avg_every,
         )
+
+    def migrate(self, engine: WalkEngine, *, seed: int = 0):
+        """Carry this fleet onto a churned engine (next graph version).
+
+        Applies :func:`migrate_walk_nodes` to the walk positions against
+        the new engine's degree vector: surviving walks keep their
+        position bitwise, walks on departed nodes re-seed via the
+        documented :func:`sample_initial_nodes` path.  Returns
+        ``(new_fleet, displaced)``; the scalar-``nodes`` W=1 adapter shape
+        is preserved.
+        """
+        was_scalar = jnp.ndim(self.nodes) == 0
+        new_nodes, displaced = migrate_walk_nodes(
+            self.nodes, np.asarray(engine.degrees), seed=seed
+        )
+        nodes = jnp.asarray(
+            new_nodes[0] if was_scalar else new_nodes, jnp.int32
+        )
+        return dataclasses.replace(self, engine=engine, nodes=nodes), displaced
 
     def advance(
         self,

@@ -1,0 +1,327 @@
+"""Dada-style learned collaboration graphs over walk-SGD.
+
+The Dada line of work (Zantedeschi et al., AISTATS 2020) alternates two
+phases: train models *on* the collaboration graph, then update the
+collaboration graph itself from pairwise model similarity — nodes with
+similar local models become neighbors, so collaboration concentrates
+where it helps.  This module is that scenario end to end on the
+dynamic-graph machinery:
+
+1. one walk-SGD epoch through the ordinary trainer/fleet stack
+   (:func:`repro.walk_sgd.trainer.run_rw_sgd_multi`, ``engine=`` seam);
+2. **personalization**: every node takes a few local gradient steps on
+   its own datum from the walk-averaged model
+   (:func:`personalize_models`) — the per-node models whose similarity
+   defines the new graph;
+3. **rewiring**: mutual-k-nearest-neighbor edges in model space
+   (:func:`similarity_edges`), applied as a *batched churn*
+   (``graphs.apply_edge_churn``) so the engine's flat per-edge CDF is
+   patched segment-locally (``WalkEngine.apply_churn``) instead of
+   rebuilt, and the walk fleet carries across the graph version under
+   the continuity rule (``fleet.migrate_walk_nodes``: surviving walks
+   keep their position bitwise, displaced walks re-seed).
+
+The loop never rebuilds row state from scratch after round one — the
+whole point of the incremental churn path — and the per-round receipts
+(edges churned, walks displaced, ``graph_version``) come back in the
+:class:`DadaResult` so the dynamics are measurable, not anecdotal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import WalkEngine
+from repro.core.graphs import _edges_to_csr, apply_edge_churn
+from repro.core.transition import MHLJParams, mh_importance_rows_ragged
+from repro.data.synthetic import RegressionData
+from repro.models import regression as reg
+from repro.walk_sgd.fleet import migrate_walk_nodes
+from repro.walk_sgd.trainer import run_rw_sgd_multi
+
+__all__ = [
+    "DadaResult",
+    "personalize_models",
+    "similarity_edges",
+    "run_dada",
+]
+
+
+@dataclasses.dataclass
+class DadaResult:
+    """Per-round telemetry of one :func:`run_dada` run."""
+
+    round_mse: np.ndarray  # (rounds,) walk-averaged-model MSE per round
+    personalized_mse: np.ndarray  # (rounds,) mean per-node local sq. error
+    edges_inserted: np.ndarray  # (rounds,) churn batch sizes (0 = no rewire)
+    edges_deleted: np.ndarray  # (rounds,)
+    walks_displaced: np.ndarray  # (rounds,) re-seeded walks entering round
+    graph_versions: np.ndarray  # (rounds,) engine.graph_version per round
+    x_final: np.ndarray  # (W, dim) final per-walk models
+    method: str
+
+
+def personalize_models(
+    x_avg,
+    features,
+    targets,
+    *,
+    local_steps: int = 5,
+    lr: float = 0.01,
+) -> np.ndarray:
+    """Per-node models: ``local_steps`` local gradient steps from ``x_avg``.
+
+    Every node starts at the shared walk-averaged model and descends its
+    own single-datum squared loss (``models.regression.linear_grad``,
+    vmapped) — the Dada personalization phase whose resulting ``(n, dim)``
+    model matrix feeds :func:`similarity_edges`.
+    """
+    if local_steps < 0:
+        raise ValueError("local_steps must be >= 0")
+    feats = jnp.asarray(features, jnp.float32)
+    targs = jnp.asarray(targets, jnp.float32)
+    x = jnp.broadcast_to(
+        jnp.asarray(x_avg, jnp.float32)[None, :],
+        (feats.shape[0], feats.shape[1]),
+    )
+    grad_all = jax.vmap(reg.linear_grad)
+    for _ in range(local_steps):
+        x = x - lr * grad_all(x, feats, targs)
+    return np.asarray(x)
+
+
+def _component_labels(indptr: np.ndarray, indices: np.ndarray) -> np.ndarray:
+    """Connected-component label per node over a CSR structure (O(E) BFS)."""
+    n = indptr.shape[0] - 1
+    labels = np.full(n, -1, dtype=np.int64)
+    c = 0
+    for s in range(n):
+        if labels[s] >= 0:
+            continue
+        labels[s] = c
+        stack = [s]
+        while stack:
+            v = stack.pop()
+            for u in indices[indptr[v] : indptr[v + 1]]:
+                if labels[u] < 0:
+                    labels[u] = c
+                    stack.append(int(u))
+        c += 1
+    return labels
+
+
+def similarity_edges(models: np.ndarray, k: int) -> np.ndarray:
+    """Symmetrized k-nearest-neighbor edge set in model space.
+
+    Each node proposes its ``k`` nearest peers by squared model distance
+    (ties broken by node id — deterministic), proposals are symmetrized
+    into undirected pairs, and — because a kNN graph may fragment — any
+    secondary component is bridged to the first by one edge between the
+    components' smallest-id members, so the result always yields a
+    connected collaboration graph.  Returns a ``(E, 2)`` int64 canonical
+    pair array ready for ``graphs.apply_edge_churn`` / ``from_edges``.
+    """
+    x = np.asarray(models, dtype=np.float64)
+    n = x.shape[0]
+    if x.ndim != 2 or n < 2:
+        raise ValueError("models must be (n >= 2, dim)")
+    if not (1 <= k < n):
+        raise ValueError(f"similarity_edges needs 1 <= k < n, got k={k}")
+    sq = (x * x).sum(axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    np.fill_diagonal(d2, np.inf)
+    nn = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    src = np.repeat(np.arange(n, dtype=np.int64), k)
+    dst = nn.ravel().astype(np.int64)
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    codes = np.unique(lo * n + hi)
+    pairs = np.stack([codes // n, codes % n], axis=1)
+    indptr, indices, _ = _edges_to_csr(n, pairs[:, 0], pairs[:, 1])
+    labels = _component_labels(indptr, indices)
+    num_comp = int(labels.max()) + 1
+    if num_comp > 1:
+        reps = np.asarray(
+            [int(np.nonzero(labels == c)[0][0]) for c in range(num_comp)],
+            dtype=np.int64,
+        )
+        bridges = np.stack(
+            [np.full(num_comp - 1, reps[0]), reps[1:]], axis=1
+        )
+        bridges = np.stack(
+            [bridges.min(axis=1), bridges.max(axis=1)], axis=1
+        )
+        codes = np.unique(
+            np.concatenate([codes, bridges[:, 0] * n + bridges[:, 1]])
+        )
+        pairs = np.stack([codes // n, codes % n], axis=1)
+    return pairs
+
+
+def _undirected_pairs(core) -> np.ndarray:
+    """Canonical non-loop undirected pairs of a CSR-core graph."""
+    n = core.n
+    src = np.repeat(
+        np.arange(n, dtype=np.int64), np.diff(np.asarray(core.indptr))
+    )
+    dst = np.asarray(core.indices, dtype=np.int64)
+    keep = src < dst
+    return np.stack([src[keep], dst[keep]], axis=1)
+
+
+def run_dada(
+    graph,
+    data: RegressionData,
+    *,
+    rounds: int = 3,
+    num_steps: int = 200,
+    num_walks: int = 4,
+    gamma: Optional[float] = None,
+    k: int = 3,
+    method: str = "mhlj",
+    mhlj_params: Optional[MHLJParams] = None,
+    avg_every: int = 25,
+    local_steps: int = 5,
+    local_lr: Optional[float] = None,
+    seed: int = 0,
+    backend: str = "auto",
+) -> DadaResult:
+    """Alternate walk-SGD epochs with learned collaboration-graph updates.
+
+    Per round: one ``num_steps``-step walk-SGD epoch of ``num_walks``
+    walkers on the current graph (models carry over between rounds),
+    personalization (:func:`personalize_models`), then — except after the
+    final round — a kNN rewire (:func:`similarity_edges`) applied as a
+    batched churn: ``apply_edge_churn`` diffs the edge sets,
+    ``WalkEngine.apply_churn`` patches only the touched CDF segments, and
+    ``migrate_walk_nodes`` carries the walk positions across the graph
+    version (``k >= 1`` keeps every node in the graph, so displacement is
+    the exception, not the rule).
+
+    ``method`` must be a P_IS-row law (``"mhlj"`` or ``"importance"``) —
+    the engine is carried across rounds with Eq.-7 rows built from
+    ``data.lipschitz``, bit-for-bit the rows the plain trainer would
+    build, so round one is bitwise-identical to an ordinary
+    ``run_rw_sgd_multi`` call on the same seed.
+    """
+    if rounds < 1:
+        raise ValueError("run_dada needs rounds >= 1")
+    if method not in ("mhlj", "importance"):
+        raise ValueError(
+            "run_dada carries Eq.-7 P_IS rows across graph versions; "
+            f"method must be 'mhlj' or 'importance', got {method!r}"
+        )
+    core = graph.to_ragged() if hasattr(graph, "to_ragged") else (
+        graph.to_csr().to_ragged()
+    )
+    lips = np.asarray(data.lipschitz, dtype=np.float64)
+    if gamma is None:
+        gamma = 0.3 / float(lips.mean())
+    if local_lr is None:
+        local_lr = 0.5 / float(lips.max())
+    if method == "mhlj":
+        params = (
+            mhlj_params if mhlj_params is not None
+            else MHLJParams(p_j=0.1, p_d=0.5, r=3)
+        )
+        p_d, r = params.p_d, params.r
+    else:
+        params = mhlj_params
+        p_d, r = 0.5, 1  # the trainer's no-jump engine shape
+
+    engine = WalkEngine.from_graph(
+        core,
+        MHLJParams(p_j=0.0, p_d=p_d, r=r),
+        row_probs=mh_importance_rows_ragged(core, lips),
+        backend=backend,
+        layout="ragged",
+    )
+
+    round_mse = np.zeros(rounds)
+    personalized_mse = np.zeros(rounds)
+    edges_inserted = np.zeros(rounds, dtype=np.int64)
+    edges_deleted = np.zeros(rounds, dtype=np.int64)
+    walks_displaced = np.zeros(rounds, dtype=np.int64)
+    graph_versions = np.zeros(rounds, dtype=np.int64)
+    x0 = None
+    v0s = None
+    res = None
+    for rnd in range(rounds):
+        res = run_rw_sgd_multi(
+            method,
+            core,
+            data,
+            gamma,
+            num_steps,
+            num_walks,
+            mhlj_params=params,
+            x0=x0,
+            v0s=v0s,
+            avg_every=avg_every,
+            seed=seed + rnd,
+            engine=engine,
+        )
+        x0 = res.x_avg
+        models = personalize_models(
+            x0, data.features, data.targets,
+            local_steps=local_steps, lr=local_lr,
+        )
+        preds = (models * np.asarray(data.features)).sum(axis=1)
+        round_mse[rnd] = float(res.avg_mse[-1])
+        personalized_mse[rnd] = float(
+            ((preds - np.asarray(data.targets)) ** 2).mean()
+        )
+        graph_versions[rnd] = engine.graph_version
+        if rnd == rounds - 1:
+            break
+        # rewire: diff the current edge set against the kNN proposal and
+        # apply the net churn incrementally
+        desired = similarity_edges(models, k)
+        current = _undirected_pairs(core)
+        n = core.n
+        des_codes = desired[:, 0] * n + desired[:, 1]
+        cur_codes = current[:, 0] * n + current[:, 1]
+        ins_codes = np.setdiff1d(des_codes, cur_codes)
+        del_codes = np.setdiff1d(cur_codes, des_codes)
+        edges_inserted[rnd] = ins_codes.size
+        edges_deleted[rnd] = del_codes.size
+        last_nodes = res.update_nodes[:, -1]
+        if ins_codes.size or del_codes.size:
+            ins = np.stack([ins_codes // n, ins_codes % n], axis=1)
+            dele = np.stack([del_codes // n, del_codes % n], axis=1)
+            core, churn = apply_edge_churn(
+                core,
+                insert=ins if ins_codes.size else None,
+                delete=dele if del_codes.size else None,
+            )
+            # the escalated full rebuild (max degree outgrew the engine's
+            # cdf_width) needs row probabilities for EVERY row, not just
+            # the touched closure
+            need_full = int(np.asarray(core.degrees).max()) > engine.cdf_width
+            engine = engine.apply_churn(
+                core,
+                churn,
+                touched_probs=mh_importance_rows_ragged(
+                    core, lips,
+                    node_ids=None if need_full else churn.touched_rows,
+                ),
+            )
+        v0s, displaced = migrate_walk_nodes(
+            last_nodes, np.asarray(core.degrees), seed=seed + 7919 * (rnd + 1)
+        )
+        walks_displaced[rnd + 1] = int(displaced.sum())
+
+    return DadaResult(
+        round_mse=round_mse,
+        personalized_mse=personalized_mse,
+        edges_inserted=edges_inserted,
+        edges_deleted=edges_deleted,
+        walks_displaced=walks_displaced,
+        graph_versions=graph_versions,
+        x_final=np.asarray(res.x_final),
+        method=method,
+    )

@@ -337,6 +337,7 @@ def run_rw_sgd_multi(
     engine_kwargs: Optional[dict] = None,
     law_kwargs: Optional[dict] = None,
     mesh=None,
+    engine: Optional[WalkEngine] = None,
 ) -> MultiRWSGDResult:
     """W parallel RW-SGD trainings sharing one batched engine transition.
 
@@ -360,11 +361,25 @@ def run_rw_sgd_multi(
     ``engine_kwargs`` forwards extra knobs to
     :meth:`WalkEngine.from_graph` (bucketed compaction, ``block_w``, a
     ``backend`` override, …).
+
+    ``engine`` injects a pre-built :class:`WalkEngine` instead of
+    constructing one from ``graph`` — the dynamic-graph seam: a churned
+    engine carried across graph versions by
+    :meth:`WalkEngine.apply_churn` (see ``walk_sgd/graph_learning.py``)
+    rides the same fleet scan without rebuilding its row state.  The
+    caller owns consistency between the injected engine's rows and
+    ``method`` (the method's row build is skipped); mutually exclusive
+    with ``engine_kwargs``.
     """
     row_probs, weights, p_j_sched, p_d, r, use_weights = _setup_method(
         method, graph, data, mhlj_params, p_j_schedule, num_steps, law_kwargs
     )
-    engine = _build_engine(graph, p_d, r, row_probs, engine_kwargs, "auto")
+    if engine is None:
+        engine = _build_engine(graph, p_d, r, row_probs, engine_kwargs, "auto")
+    elif engine_kwargs is not None:
+        raise ValueError(
+            "pass either a pre-built engine or engine_kwargs, not both"
+        )
     fleet = WalkFleet.create(
         engine, num_walks, v0s=v0s, seed=seed, avg_every=avg_every
     )

@@ -70,5 +70,11 @@ def test_doc_references_exist(doc):
 
 def test_doc_tree_is_present():
     """The documented doc set itself: a rename here must be deliberate."""
-    for name in ("theory_map.md", "layouts.md", "benchmarks.md", "fleet.md"):
+    for name in (
+        "theory_map.md",
+        "layouts.md",
+        "benchmarks.md",
+        "fleet.md",
+        "dynamic_graphs.md",
+    ):
         assert os.path.exists(os.path.join(REPO, "docs", name)), name

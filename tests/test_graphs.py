@@ -455,3 +455,123 @@ def test_watts_strogatz_retries_disconnected_rewirings(monkeypatch):
     g = graphs.watts_strogatz(20, 4, 0.3, seed=0)
     g.validate()
     assert calls["n"] >= 2  # retried with seed+1 instead of raising
+
+
+# ---------------------------------------------------------------------------
+# jax.random sampler ports (core.jax_sampling) — pinned seeds + family parity
+# ---------------------------------------------------------------------------
+
+
+def _jax_sampling():
+    import jax
+
+    from repro.core import jax_sampling as js
+
+    return jax, js
+
+
+def test_ba_jax_pinned_seed_regression():
+    """Exact pinned draw at PRNGKey(0): the BA port is deterministic per
+    key, and jit compiles to the bitwise-identical sample (asserting
+    jit-compatibility, not just closeness)."""
+    jax, js = _jax_sampling()
+    key = jax.random.PRNGKey(0)
+    src, dst = js.barabasi_albert_edges(200, 3, key)
+    assert src[:8].tolist() == [3, 3, 3, 4, 4, 4, 5, 5]
+    assert dst[:8].tolist() == [0, 1, 2, 3, 3, 2, 3, 2]
+    jitted = jax.jit(js.barabasi_albert_edges, static_argnums=(0, 1))
+    src_j, dst_j = jitted(200, 3, key)
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(src_j))
+    np.testing.assert_array_equal(np.asarray(dst), np.asarray(dst_j))
+    g = js.barabasi_albert_jax(200, 3, key)
+    g.validate()
+    assert int(np.asarray(g.degrees).sum()) == 1334
+
+
+def test_sbm_jax_pinned_seed_regression():
+    """Exact pinned draw at PRNGKey(0) for the SBM port: mask count, edge
+    count and a degree entry, plus bitwise jit==eager on the mask core."""
+    jax, js = _jax_sampling()
+    key = jax.random.PRNGKey(0)
+    sizes = (30, 30, 30)
+    mask = js.sbm_pair_mask(sizes, 0.3, 0.02, key)
+    assert int(np.asarray(mask).sum()) == 422
+    jitted = jax.jit(js.sbm_pair_mask, static_argnums=(0,))
+    np.testing.assert_array_equal(
+        np.asarray(mask), np.asarray(jitted(sizes, 0.3, 0.02, key))
+    )
+    g = js.sbm_jax(list(sizes), 0.3, 0.02, key)
+    g.validate()
+    assert g.n == 90
+    assert int(np.asarray(g.degrees).sum()) == 934
+    assert int(np.asarray(g.degrees)[0]) == 9
+
+
+def _check_ba_jax_family(n, m, key_seed):
+    """Family-property parity with graphs.barabasi_albert: attachment
+    count, min degree, hub growth — stream-level equality is NOT the
+    contract (different RNGs by design)."""
+    jax, js = _jax_sampling()
+    m = min(m, n - 1)
+    src, dst = js.barabasi_albert_edges(n, m, jax.random.PRNGKey(key_seed))
+    assert src.shape == (m * (n - m),)
+    assert bool((np.asarray(dst) < np.asarray(src)).all())
+    g = js.barabasi_albert_jax(n, m, jax.random.PRNGKey(key_seed))
+    g.validate()  # connected, symmetric, self-loops — like the numpy family
+    assert g.n == n
+    assert int(np.asarray(g.degrees).min()) >= 2
+    ref = graphs.barabasi_albert(n, m, seed=key_seed, layout="csr")
+    # same family envelope as the numpy sampler: dedupe can only shrink
+    # the m(n-m) attachments, never past the spanning minimum
+    for got in (g, ref):
+        und = (int(np.asarray(got.degrees).sum()) - got.n) // 2
+        assert n - m <= und <= m * (n - m)
+
+
+def _check_sbm_jax_family(sizes, key_seed):
+    jax, js = _jax_sampling()
+    g = js.sbm_jax(sizes, 0.7, 0.15, jax.random.PRNGKey(key_seed))
+    g.validate()
+    assert g.n == sum(sizes)
+    # block structure: in-block degree dominates cross-block on average
+    blocks = np.repeat(np.arange(len(sizes)), sizes)
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    src = np.repeat(np.arange(g.n), np.diff(indptr))
+    nonloop = src != indices
+    same = blocks[src[nonloop]] == blocks[indices[nonloop]]
+    in_pairs = sum(s * (s - 1) // 2 for s in sizes)
+    out_pairs = g.n * (g.n - 1) // 2 - in_pairs
+    in_density = same.sum() / 2 / in_pairs
+    out_density = (~same).sum() / 2 / out_pairs
+    assert in_density > 2 * out_density
+
+
+@pytest.mark.parametrize(
+    "check,args",
+    [
+        (_check_ba_jax_family, (24, 3, 2)),
+        (_check_ba_jax_family, (60, 1, 0)),
+        (_check_sbm_jax_family, ([8, 10, 6], 4)),
+    ],
+)
+def test_jax_sampler_family_pinned(check, args):
+    """One pinned draw per ported family — runs with or without
+    hypothesis."""
+    check(*args)
+
+
+if st is not None:
+
+    @given(n=st.integers(5, 40), m=st.integers(1, 4), seed=st.integers(0, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_ba_jax_family_properties(n, m, seed):
+        _check_ba_jax_family(n, m, seed)
+
+    @given(
+        sizes=st.lists(st.integers(5, 12), min_size=2, max_size=3),
+        seed=st.integers(0, 5),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_sbm_jax_family_properties(sizes, seed):
+        _check_sbm_jax_family(sizes, seed)
