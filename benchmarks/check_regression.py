@@ -50,13 +50,17 @@ BASELINE_PATH = os.path.join(REPO, "results", "BENCH_large_graph.json")
 METRIC_SUFFIX = "_steps_per_sec"
 REFERENCE_LABEL = "sparse"
 # Presence-gated keys: the law sweep's `{family}_{law}_herfindahl`
-# telemetry and the dynamic-graph sweep's `{family}_churn_speedup`.
-# These values are statistical (walk occupancy) or wall-clock ratios on a
-# tiny smoke batch, not step-times, so their magnitude is not compared —
-# each key is pinned to ratio 1.0 and only its EXISTENCE is gated: a
-# chain law or the churn sweep silently dropped from the run is a loud
-# missing-key failure, a noisy value is not.
-PRESENCE_SUFFIXES = ("_herfindahl", "_churn_speedup")
+# telemetry, the dynamic-graph sweep's `{family}_churn_speedup`, and the
+# serving sweep's `ba_{law}_p99_ticks` / `ba_{law}_requests_per_sec`.
+# These values are statistical (walk occupancy), wall-clock ratios or
+# latency percentiles on a tiny smoke batch, not step-times, so their
+# magnitude is not compared — each key is pinned to ratio 1.0 and only its
+# EXISTENCE is gated: a chain law, the churn sweep, or a serving routing
+# law silently dropped from the run is a loud missing-key failure, a noisy
+# value is not.
+PRESENCE_SUFFIXES = (
+    "_herfindahl", "_churn_speedup", "_p99_ticks", "_requests_per_sec"
+)
 # Fleet rows (`fleet_w{W}_aggregate_walk_steps_per_sec`) have no sparse
 # sibling: they normalize against the same sweep's smallest-W row, so the
 # gate watches the W-scaling shape — and a fleet configuration vanishing
@@ -86,11 +90,18 @@ def aggregate_ratios(derived: dict) -> dict:
 
 def fresh_smoke_derived() -> dict:
     """Run the smoke tiers in-process; returns {module: derived}."""
-    from benchmarks import fig5_sparse_graphs, large_graph_walk, law_sweep
+    from benchmarks import (
+        fig5_sparse_graphs,
+        large_graph_walk,
+        law_sweep,
+        serve_throughput,
+    )
 
     return {
         mod.NAME: mod.run_smoke().get("derived", {})
-        for mod in (fig5_sparse_graphs, large_graph_walk, law_sweep)
+        for mod in (
+            fig5_sparse_graphs, large_graph_walk, law_sweep, serve_throughput
+        )
     }
 
 

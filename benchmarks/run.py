@@ -35,6 +35,7 @@ from benchmarks import (
     llm_walk_throughput,
     multi_walk,
     roofline,
+    serve_throughput,
     theorem1_remark1,
 )
 from benchmarks.common import dump, row, time_call
@@ -49,6 +50,7 @@ MODULES = [
     llm_walk_throughput,
     large_graph_walk,
     law_sweep,
+    serve_throughput,
     roofline,
 ]
 

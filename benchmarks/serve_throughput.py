@@ -1,0 +1,144 @@
+"""Walk-routed serving throughput: where requests/s meets walk-steps/s.
+
+One ``repro.launch.serve.ServeSimulator`` workload per routing law: requests
+arrive at nodes of a ragged-layout Barabasi-Albert graph (traffic skewed
+∝ degree, so demand concentrates on the hubs), a W-walker fleet routes them
+via batched ``WalkEngine`` transitions — law selected through the trainer
+METHODS seam — and a slot-based ``ServeEngine`` with a bounded admission
+queue and per-request deadlines decodes them through the cached decode path.
+
+Per law the sweep records requests/s, p50/p95/p99 latency (in engine ticks,
+machine-independent), queue depth, slot occupancy, the shed counters
+(queue-full backpressure + deadline expiry) and the per-node visit
+Herfindahl/top-k share (``repro.core.entrapment.occupancy_concentration``,
+the exact entrapment telemetry ``law_sweep.py`` attaches to training
+walks) — so "which chain law serves skewed traffic best, and what
+entrapment does it pay" is one JSON apart per law.
+
+The full sweep (100k-node ragged BA, 512 walkers) lands in
+``results/BENCH_serve.json``.  The smoke tier runs every law at toy sizes;
+its ``ba_{law}_herfindahl`` / ``ba_{law}_p99_ticks`` /
+``ba_{law}_requests_per_sec`` derived keys are presence-gated by
+``benchmarks/check_regression.py`` (values are wall-clock / statistical, so
+only their existence is compared) — a law silently dropped from the serving
+sweep is a loud missing-key CI failure on both ``REPRO_BACKEND`` legs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+from repro.configs import get_arch, reduced
+from repro.core.graphs import barabasi_albert
+from repro.launch.serve import ServeEngine, ServeSimulator
+
+NAME = "serve_throughput"
+PAPER_CLAIM = (
+    "Serving closes the loop: requests pinned to nodes of a hub-heavy "
+    "graph are routed by walker fleets, and the chain law's entrapment "
+    "trade-off (Herfindahl) becomes a requests/s + p99-latency trade-off."
+)
+
+# (label, trainer method, law_kwargs) — heterogeneity's pi defaults to the
+# load vector inside ServeSimulator (visit mass ∝ demand), so no O(n²)
+# dissimilarity measurement runs at serving scale
+LAWS = (
+    ("simple", "simple", None),
+    ("uniform", "uniform", None),
+    ("importance", "importance", None),
+    ("mhlj", "mhlj", None),
+    ("heterogeneity", "heterogeneity", None),
+    ("private_g0.5", "private", {"gamma": 0.5}),
+)
+
+# one scenario per scale: graph size, fleet size, traffic and decode budget
+SCALES = {
+    "smoke": dict(
+        n=384, m=3, walkers=24, ticks=90, drain=30, rate=1.0, pickup=4,
+        batch=4, cache_len=64, max_queue=32, deadline=80,
+        prompt_len=(4, 10), max_new=6,
+    ),
+    "quick": dict(
+        n=20_000, m=3, walkers=128, ticks=400, drain=150, rate=1.5, pickup=4,
+        batch=8, cache_len=128, max_queue=64, deadline=300,
+        prompt_len=(4, 16), max_new=8,
+    ),
+    "full": dict(
+        n=100_000, m=3, walkers=512, ticks=1500, drain=500, rate=2.0,
+        pickup=4, batch=8, cache_len=192, max_queue=128, deadline=1000,
+        prompt_len=(4, 24), max_new=12,
+    ),
+}
+
+
+def run(quick: bool = False, scale: str | None = None) -> dict:
+    scale = scale or ("quick" if quick else "full")
+    p = SCALES[scale]
+    graph = barabasi_albert(p["n"], p["m"], seed=0, layout="ragged")
+    cfg = reduced(get_arch("mamba2-370m"))
+    # ONE model build + decode compile for the whole law sweep: each law
+    # reuses the slot engine via reset()
+    engine = ServeEngine(
+        cfg, p["batch"], p["cache_len"], seed=0, max_queue=p["max_queue"]
+    )
+    out = {
+        "scale": scale,
+        "graph": graph.name,
+        "n": graph.n,
+        "walkers": p["walkers"],
+        "ticks": p["ticks"] + p["drain"],
+        "claim": PAPER_CLAIM,
+        "laws": [l[0] for l in LAWS],
+    }
+    derived: dict = {}
+    for label, method, law_kwargs in LAWS:
+        sim = ServeSimulator(
+            graph,
+            engine.reset(),
+            method=method,
+            num_walkers=p["walkers"],
+            rate=p["rate"],
+            pickup=p["pickup"],
+            deadline_ticks=p["deadline"],
+            prompt_len=p["prompt_len"],
+            max_new_tokens=p["max_new"],
+            law_kwargs=law_kwargs,
+            seed=0,
+        )
+        metrics = sim.run(p["ticks"], drain_ticks=p["drain"])
+        out[label] = metrics
+        # the gate keys: presence says the law still serves (a law dropped
+        # from the sweep is a loud missing-key CI failure); values are
+        # wall-clock/statistical, so magnitude is deliberately not gated
+        derived[f"ba_{label}_herfindahl"] = metrics["herfindahl"]
+        derived[f"ba_{label}_p99_ticks"] = metrics["p99_ticks"]
+        derived[f"ba_{label}_requests_per_sec"] = metrics["requests_per_sec"]
+    out["derived"] = derived
+
+    if scale == "full":
+        # only the full 100k-node sweep may write the committed results
+        # file — docs/benchmarks.md cites its numbers, so a --quick or
+        # smoke run must not clobber it (benchmarks.run already drops
+        # every tier's output in its own results/bench_<name>.json)
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "BENCH_serve.json")
+        # (the smoke-tier regression baseline lives with the other modules'
+        # in BENCH_large_graph.json's smoke_baseline section)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, default=float)
+    return out
+
+
+def run_smoke() -> dict:
+    """Tiny tier exercised by the tier-1 bench-smoke test: every routing
+    law serves a toy workload end to end (arrivals → fleet pickup → slot
+    decode → shed accounting), so the serving path cannot rot silently."""
+    return run(scale="smoke")
+
+
+if __name__ == "__main__":
+    res = run(scale="full")
+    for k, v in sorted(res["derived"].items()):
+        print(f"{k}: {v:.4g}" if isinstance(v, float) else f"{k}: {v}")
+    print(f"\nwrote {os.path.join(RESULTS_DIR, 'BENCH_serve.json')}")

@@ -1,44 +1,53 @@
-"""Serving demo: batched greedy decoding with continuous batching.
+"""Serving demo: walk-routed requests on a hub-heavy graph, per routing law.
 
-Spins up the ServeEngine on the reduced mamba2-370m (SSM: O(1) decode
-state) and the reduced qwen2.5 (KV cache) backbones, submits a bursty
-queue of requests with mixed prompt lengths, and reports throughput +
-slot utilization.  The production decode path for all 10 assigned
-architectures is exercised by the decode_32k / long_500k dry-run shapes.
+Spins up ONE ServeEngine (reduced mamba2-370m — SSM decode, O(1) state)
+and, for each routing law in the trainer METHODS seam, a ServeSimulator on
+a ragged-layout Barabasi-Albert graph: requests arrive at nodes with
+degree-proportional skew (demand concentrates on the hubs), a small walker
+fleet picks them up and feeds the slot scheduler, and the table shows the
+serving numbers next to the entrapment telemetry — requests/s, p50/p99
+latency in ticks, shed counters (backpressure + deadlines) and the
+per-node visit Herfindahl.  The full architecture sweep (`docs/serving.md`)
+and the 100k-node numbers live in `benchmarks/serve_throughput.py`.
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
-import numpy as np
-
 from repro.configs import get_arch, reduced
-from repro.launch.serve import Request, ServeEngine
+from repro.core.graphs import barabasi_albert
+from repro.launch.serve import ServeEngine, ServeSimulator
 
-
-def demo(arch: str, n_requests: int = 12, batch: int = 4):
-    cfg = reduced(get_arch(arch))
-    engine = ServeEngine(cfg, batch_size=batch, cache_len=256)
-    rng = np.random.default_rng(0)
-    for rid in range(n_requests):
-        engine.submit(
-            Request(
-                rid=rid,
-                prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(4, 32))).astype(np.int32),
-                max_new_tokens=int(rng.integers(8, 24)),
-            )
-        )
-    stats = engine.run()
-    print(f"{arch:<24} completed {stats['completed']:>3}/{n_requests}   "
-          f"tokens {stats['generated_tokens']:>4}   "
-          f"slot-util {stats['slot_utilization']:.1%}   "
-          f"{stats['tokens_per_sec']:.1f} tok/s")
+LAWS = (
+    ("simple", "simple", None),
+    ("uniform", "uniform", None),
+    ("mhlj", "mhlj", None),
+    ("private_g0.5", "private", {"gamma": 0.5}),
+)
 
 
 def main():
-    print(f"{'arch':<24} {'results'}")
-    for arch in ("mamba2-370m", "qwen2.5-32b", "olmoe-1b-7b"):
-        demo(arch)
-    print("\n(reduced configs on CPU; decode_32k/long_500k dry-run shapes prove"
-          "\n the full configs lower on the production mesh)")
+    graph = barabasi_albert(512, 3, seed=0, layout="ragged")
+    cfg = reduced(get_arch("mamba2-370m"))
+    # one model build + decode compile; each law resets the serving state
+    engine = ServeEngine(cfg, batch_size=4, cache_len=64, max_queue=32)
+    print(f"graph: {graph.name} (n={graph.n}), walkers: 32, "
+          f"arch: {cfg.name} (reduced)")
+    print(f"{'law':<14} {'served':>9} {'req/s':>7} {'p50':>5} {'p99':>6} "
+          f"{'shed(q/ddl)':>11} {'herfindahl':>10}")
+    for label, method, law_kwargs in LAWS:
+        sim = ServeSimulator(
+            graph, engine.reset(), method=method, num_walkers=32,
+            rate=1.5, pickup=4, deadline_ticks=120,
+            prompt_len=(4, 12), max_new_tokens=6,
+            law_kwargs=law_kwargs, seed=0,
+        )
+        m = sim.run(150, drain_ticks=50)
+        print(f"{label:<14} {m['completed']:>4}/{m['offered']:<4} "
+              f"{m['requests_per_sec']:>7.1f} {m['p50_ticks']:>5.0f} "
+              f"{m['p99_ticks']:>6.1f} "
+              f"{m['shed_queue_full']:>5}/{m['shed_deadline']:<5} "
+              f"{m['herfindahl']:>10.4f}")
+    print("\n(toy scale on CPU; the 100k-node ragged-graph sweep writes "
+          "results/BENCH_serve.json)")
 
 
 if __name__ == "__main__":

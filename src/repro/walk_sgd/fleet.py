@@ -43,6 +43,11 @@ Consumers (all three former loops route through here):
   consumers: ``WalkContext.advance`` advances a one-walker fleet, and
   :func:`make_fleet_step` is THE W-walker LLM step
   (``make_multi_walk_step`` delegates here).
+* ``repro.launch.serve.ServeSimulator`` — the fleet as a *service
+  fabric*: W walkers route serving requests pinned to graph nodes (one
+  batched :meth:`WalkFleet.advance` per tick; more walkers = more pickup
+  bandwidth), the non-training consumer of the walker batch — see
+  docs/serving.md.
 """
 from __future__ import annotations
 

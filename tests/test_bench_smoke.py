@@ -2,8 +2,8 @@
 
 Runs ``python -m benchmarks.run --smoke`` as a subprocess: every benchmark
 module must satisfy the harness contract (NAME / PAPER_CLAIM / run) and the
-modules with a smoke tier (fig5_sparse_graphs, large_graph_walk, law_sweep)
-must actually execute at toy sizes.  The large-graph tier must take real walk
+modules with a smoke tier (fig5_sparse_graphs, large_graph_walk, law_sweep,
+serve_throughput) must actually execute at toy sizes.  The large-graph tier must take real walk
 steps through EVERY registered engine layout (``repro.core.engine.LAYOUTS``)
 plus the compacted bucketed dispatch, so a rotted path — not just the
 default one — fails tier 1 here instead of rotting until someone runs the
@@ -49,6 +49,7 @@ def test_benchmarks_smoke_tier_passes(tmp_path):
     assert "large_graph_walk[smoke]" in out
     assert "fig5_sparse_graphs[smoke]" in out
     assert "law_sweep[smoke]" in out
+    assert "serve_throughput[smoke]" in out
     assert "FAILED" not in out
     # every registered engine layout + the compacted bucketed dispatch must
     # have taken real walk steps
@@ -75,6 +76,19 @@ def test_benchmarks_smoke_tier_passes(tmp_path):
         ):
             assert f"{family}_{label}_herfindahl" in law_keys, (
                 f"law {label!r} vanished from the {family} sweep"
+            )
+    # every routing law must have served the walk-routed workload — the
+    # serving sweep's presence-gated keys (Herfindahl entrapment telemetry,
+    # p99 latency, requests/s) feed the same missing-key path
+    serve_keys = set(derived.get("serve_throughput", {}))
+    for label in (
+        "simple", "uniform", "importance", "mhlj", "heterogeneity",
+        "private_g0.5",
+    ):
+        for suffix in ("herfindahl", "p99_ticks", "requests_per_sec"):
+            assert f"ba_{label}_{suffix}" in serve_keys, (
+                f"routing law {label!r} vanished from the serving sweep "
+                f"({suffix})"
             )
 
     # step-time regression gate: fresh smoke numbers vs the committed

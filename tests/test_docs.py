@@ -5,6 +5,12 @@ dotted name (``repro.module.attr``) in ``docs/*.md`` and ``README.md``
 must actually exist — paths on disk, dotted names via import + getattr.
 A rename that orphans a reference in the documentation fails here, in
 tier 1, instead of leaving the theory-to-code map pointing at nothing.
+
+CLI flags are checked too: every ``--flag`` in a documented ``python -m
+repro.x`` / ``python path/to/script.py`` command line (inside a code
+fence) must appear in an ``add_argument`` call of the module it targets —
+so a renamed or deleted flag cannot leave the docs quoting commands that
+crash on arrival.
 """
 import glob
 import importlib
@@ -76,5 +82,71 @@ def test_doc_tree_is_present():
         "benchmarks.md",
         "fleet.md",
         "dynamic_graphs.md",
+        "serving.md",
     ):
         assert os.path.exists(os.path.join(REPO, "docs", name)), name
+
+
+# -- CLI flags quoted in docs must match the argparse definitions ----------
+
+_FENCE = re.compile(r"```[^\n]*\n(.*?)```", re.S)
+_CMD = re.compile(
+    r"python(?:3)?\s+(?:-m\s+(?P<mod>[A-Za-z_][\w.]*)|(?P<script>[\w\-./]+\.py))"
+)
+_FLAG = re.compile(r"(?<!\S)(--[A-Za-z][\w-]*)")
+_ADD_ARGUMENT = re.compile(r"add_argument\(\s*[\"'](--[\w-]+)[\"']")
+
+
+def _module_path(mod: str):
+    """Repo file for a ``python -m`` target; None = not a repo module
+    (``pytest`` etc. are skipped, not failed)."""
+    rel = mod.replace(".", os.sep) + ".py"
+    for cand in (rel, os.path.join("src", rel)):
+        path = os.path.join(REPO, cand)
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def _doc_commands(doc):
+    """(command line, target path, flags) for every repo-targeting
+    ``python`` invocation inside the doc's code fences."""
+    with open(doc) as f:
+        text = f.read()
+    for fence in _FENCE.findall(text):
+        # fold backslash continuations so multi-line commands are one line
+        for line in fence.replace("\\\n", " ").splitlines():
+            m = _CMD.search(line)
+            if not m:
+                continue
+            path = (
+                _module_path(m["mod"])
+                if m["mod"]
+                else _module_path(m["script"][: -len(".py")].replace("/", "."))
+            )
+            if path is None:
+                continue
+            # only flags AFTER the module reference (env-var assignments
+            # like XLA_FLAGS=--xla_... before `python` are not CLI flags)
+            flags = set(_FLAG.findall(line[m.end():]))
+            if flags:
+                yield line.strip(), path, flags
+
+
+@pytest.mark.parametrize(
+    "doc", DOC_FILES, ids=[os.path.relpath(p, REPO) for p in DOC_FILES]
+)
+def test_doc_cli_flags_exist(doc):
+    problems = []
+    for line, path, flags in _doc_commands(doc):
+        with open(path) as f:
+            defined = set(_ADD_ARGUMENT.findall(f.read()))
+        for flag in sorted(flags - defined):
+            problems.append(
+                f"{flag!r} (from {line!r}) is not an argparse flag of "
+                f"{os.path.relpath(path, REPO)}"
+            )
+    assert not problems, (
+        f"{os.path.relpath(doc, REPO)} quotes CLI flags that do not "
+        "resolve:\n  " + "\n  ".join(problems)
+    )

@@ -1,0 +1,213 @@
+"""Walk-routed serving tests: the ServeEngine scheduling contract and the
+ServeSimulator routing loop (docs/serving.md documents both).
+
+The engine edge cases named by the contract are each pinned here:
+finished-slot immediate refill, queue-empty idle slots as no-ops, prompts
+that cannot fit the cache budget rejected loudly, and deadline-expired
+requests shed exactly once (a double shed is a RuntimeError, not a
+double-counted statistic).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.core.graphs import barabasi_albert
+from repro.launch.serve import (
+    Request,
+    ServeEngine,
+    ServeSimulator,
+    build_route_engine,
+    latency_percentiles,
+)
+
+CFG = reduced(get_arch("mamba2-370m"))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    # one model build + decode compile for the whole module; each test
+    # takes a fresh serving state via reset() (the same reuse seam the
+    # serve_throughput benchmark leans on)
+    return ServeEngine(CFG, 2, 64, seed=0, max_queue=4)
+
+
+def _req(rid, plen=4, max_new=3, **kw):
+    rng = np.random.default_rng(100 + rid)
+    prompt = rng.integers(0, CFG.vocab_size, plen).astype(np.int32)
+    return Request(rid=rid, prompt=prompt, max_new_tokens=max_new, **kw)
+
+
+# -- ServeEngine scheduling contract ---------------------------------------
+
+
+def test_finished_slot_immediately_refilled(engine):
+    """A slot freed by a finishing request admits the next queued request
+    in the same engine step's fill — no idle step in between."""
+    eng = engine.reset()
+    for rid in range(4):  # 2 slots, 4 equal-length requests
+        assert eng.submit(_req(rid, plen=4, max_new=3))
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+    stats = eng.stats()
+    assert stats["completed"] == 4
+    # equal-sized requests + immediate refill = both slots busy every step:
+    # each request takes plen + max_new - 1 = 6 busy steps (the last prefill
+    # step already yields the first generated token), 4 x 6 over 2 slots =
+    # exactly 12 engine steps
+    assert stats["engine_steps"] == 12
+    assert stats["slot_utilization"] == 1.0
+
+
+def test_queue_empty_idle_slots_are_noops(engine):
+    """With nothing queued, step() burns neither an engine step nor a
+    cache row; a half-empty batch still decodes correctly."""
+    eng = engine.reset()
+    eng.step()  # fully idle
+    assert eng.engine_steps == 0 and eng.cache_pos == 0
+    assert eng.submit(_req(0, plen=4, max_new=3))  # 1 request, 2 slots
+    eng.run()
+    stats = eng.stats()
+    assert stats["completed"] == 1
+    assert len(eng.completed[0].generated) == 3
+    # exactly one of two slots was ever busy
+    assert stats["slot_utilization"] == pytest.approx(0.5)
+
+
+def test_oversized_prompt_rejected_loudly(engine):
+    """prompt + max_new_tokens beyond the cache budget is a ValueError at
+    submit — never queued, never silently truncated."""
+    eng = engine.reset()
+    with pytest.raises(ValueError, match="cache budget"):
+        eng.submit(_req(0, plen=eng.cache_len, max_new=1))
+    with pytest.raises(ValueError, match="cache budget"):
+        eng.submit(_req(1, plen=4, max_new=eng.cache_len))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(_req(2, plen=0))
+    assert not eng.queue and not eng.shed_requests
+
+
+def test_deadline_expired_shed_exactly_once(engine):
+    """An expired queue head is shed with reason "deadline" exactly once;
+    re-shedding the same request raises instead of double counting."""
+    eng = engine.reset()
+    expired = _req(0, deadline=5)
+    live = _req(1, deadline=50)
+    assert eng.submit(expired, tick=0)
+    assert eng.submit(live, tick=0)
+    eng.step(tick=10)  # past expired's deadline, inside live's
+    assert expired.shed and expired.shed_reason == "deadline"
+    assert eng.stats()["shed_deadline"] == 1
+    assert eng.slots[0] is live  # the live request was admitted instead
+    # shed-exactly-once is an invariant, not a convention
+    with pytest.raises(RuntimeError, match="shed twice"):
+        eng.shed(expired, "queue_full")
+    assert eng.stats()["shed_deadline"] == 1
+    assert eng.stats()["shed_queue_full"] == 0
+
+
+def test_bounded_queue_backpressure(engine):
+    """submit() against a full admission queue sheds loudly and returns
+    False instead of growing the queue without bound."""
+    eng = engine.reset()  # max_queue=4
+    assert all(eng.submit(_req(rid)) for rid in range(4))
+    overflow = _req(99)
+    assert eng.submit(overflow) is False
+    assert overflow.shed and overflow.shed_reason == "queue_full"
+    assert eng.stats()["shed_queue_full"] == 1
+    assert len(eng.queue) == 4
+
+
+def test_cache_recycle_preempts_and_completes(engine):
+    """When the shared cache position exhausts cache_len the engine
+    recycles (preempt to queue front + replay) instead of stopping."""
+    eng = engine.reset()
+    # 6 requests x 12 tokens over 2 slots = 36 busy steps > 63-step epoch?
+    # no — force recycling with long generations instead: 4 x (8+30) over
+    # 2 slots = 76 busy steps, beyond the 63-row cache epoch
+    for rid in range(4):
+        assert eng.submit(_req(rid, plen=8, max_new=30))
+    stats = eng.run()
+    assert stats["completed"] == 4
+    assert stats["cache_recycles"] >= 1
+    for req in eng.completed:
+        assert len(req.generated) == 30
+
+
+def test_latency_percentiles_bookkeeping(engine):
+    eng = engine.reset()
+    for rid in range(3):
+        assert eng.submit(_req(rid, plen=4, max_new=3), tick=0)
+    eng.run()
+    lat = latency_percentiles(eng.completed)
+    assert lat["p50_ticks"] > 0
+    assert lat["p50_ticks"] <= lat["p95_ticks"] <= lat["p99_ticks"]
+    assert latency_percentiles([]) == {
+        "p50_ticks": -1.0, "p95_ticks": -1.0, "p99_ticks": -1.0
+    }
+
+
+# -- walk-routed simulator --------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return barabasi_albert(96, 3, seed=0, layout="ragged")
+
+
+def test_build_route_engine_methods_seam(graph):
+    load = np.asarray(graph.degrees, np.float64)
+    eng_mhlj, p_j = build_route_engine(graph, "mhlj", load)
+    assert p_j > 0.0  # the jump law routes with jumps
+    _, p_j0 = build_route_engine(graph, "uniform", load)
+    assert p_j0 == 0.0
+    with pytest.raises(ValueError, match="method"):
+        build_route_engine(graph, "no-such-law", load)
+    with pytest.raises(ValueError, match="positive"):
+        build_route_engine(graph, "uniform", np.zeros(graph.n))
+
+
+def test_simulator_serves_requests_end_to_end(engine, graph):
+    sim = ServeSimulator(
+        graph, engine.reset(), method="mhlj", num_walkers=16,
+        rate=1.0, pickup=4, deadline_ticks=60,
+        prompt_len=(4, 8), max_new_tokens=4, seed=0,
+    )
+    metrics = sim.run(60, drain_ticks=30)
+    assert metrics["offered"] > 0
+    assert metrics["completed"] > 0
+    assert metrics["requests_per_sec"] > 0
+    assert 0.0 < metrics["herfindahl"] <= 1.0
+    assert metrics["p99_ticks"] >= metrics["p50_ticks"] > 0
+    # conservation: every offered request is accounted for exactly once
+    accounted = (
+        metrics["completed"]
+        + metrics["shed_queue_full"]
+        + metrics["shed_deadline"]
+        + metrics["pending_left"]
+        + metrics["queued_left"]
+        + sum(1 for s in sim.engine.slots if s is not None)
+    )
+    assert accounted == metrics["offered"]
+
+
+def test_simulator_heterogeneity_defaults_pi_to_load(engine, graph):
+    # must not fall into the O(n^2) dissimilarity measurement: the load
+    # vector (here degree-proportional) is the routing target by default
+    sim = ServeSimulator(
+        graph, engine.reset(), method="heterogeneity", num_walkers=8,
+        rate=0.5, prompt_len=(4, 6), max_new_tokens=3, seed=1,
+    )
+    metrics = sim.run(30, drain_ticks=10)
+    assert metrics["ticks"] == 40
+    assert metrics["offered"] > 0
+
+
+def test_simulator_rejects_bad_requests(engine, graph):
+    sim = ServeSimulator(
+        graph, engine.reset(), num_walkers=4, seed=0,
+        prompt_len=(4, 6), max_new_tokens=3,
+    )
+    with pytest.raises(ValueError, match="outside"):
+        sim.offer(_req(0, node=graph.n))
+    with pytest.raises(ValueError, match="cache budget"):
+        sim.offer(_req(1, node=0, plen=engine.cache_len, max_new=1))
