@@ -59,7 +59,8 @@ REFERENCE_LABEL = "sparse"
 # law silently dropped from the run is a loud missing-key failure, a noisy
 # value is not.
 PRESENCE_SUFFIXES = (
-    "_herfindahl", "_churn_speedup", "_p99_ticks", "_requests_per_sec"
+    "_herfindahl", "_churn_speedup", "_p99_ticks", "_requests_per_sec",
+    "_rescue", "_fault_free",
 )
 # Fleet rows (`fleet_w{W}_aggregate_walk_steps_per_sec`) have no sparse
 # sibling: they normalize against the same sweep's smallest-W row, so the
@@ -91,6 +92,7 @@ def aggregate_ratios(derived: dict) -> dict:
 def fresh_smoke_derived() -> dict:
     """Run the smoke tiers in-process; returns {module: derived}."""
     from benchmarks import (
+        fault_sweep,
         fig5_sparse_graphs,
         large_graph_walk,
         law_sweep,
@@ -100,7 +102,8 @@ def fresh_smoke_derived() -> dict:
     return {
         mod.NAME: mod.run_smoke().get("derived", {})
         for mod in (
-            fig5_sparse_graphs, large_graph_walk, law_sweep, serve_throughput
+            fig5_sparse_graphs, large_graph_walk, law_sweep,
+            serve_throughput, fault_sweep,
         )
     }
 

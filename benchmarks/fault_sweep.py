@@ -1,0 +1,301 @@
+"""Chaos sweep: convergence and serving under node failures, rescue on/off.
+
+Training leg — the fleet scan under a Markov node-fault process
+(``repro.core.faults.FaultModel``: per-tick crash probability, slow
+recovery) on the two fault-sensitive families: the **dumbbell** (one
+bridge — a single death disconnects the cliques) and
+**Barabasi-Albert** (hub deaths take out the routing shortcuts).  Per
+failure rate the sweep runs the same seeded scan three ways —
+fault-free, faults with the Lévy-jump rescue, faults with the rescue
+disabled — and reports the *convergence excess*: tail-window
+fleet-averaged MSE minus the exact least-squares optimum.  Rescue-off
+walkers park on dead nodes for the full outage (their compute is down,
+they are excluded from the masked averaging, and their stale models
+drag the fleet mean), so their excess stalls; rescue-on walkers
+teleport to the live set after ``patience`` blocked steps and keep
+training.
+
+The data is *homogeneous* regression deliberately: the forced rescue
+jump is uniform over the live set, which perturbs the chain's
+stationary visit distribution — under heterogeneous data the
+importance-weighted laws would fold that perturbation into their
+L_bar/L_v correction and the measurement would conflate rescue bias
+with fault stalls (docs/faults.md, "rescue bias").  Homogeneous data
+keeps the mhlj weights ≈ 1, so the sweep isolates the fault dynamics.
+
+Serving leg — one fault-free ``ServeSimulator`` run records its arrival
+trace, then every (failure rate × rescue) leg replays the *identical*
+workload (``arrival_trace=``) under faults, so p99 latency and the shed
+rate (queue-full + deadline + node_down, over offered) isolate the
+policy: any difference between legs is degradation handling, not load
+noise.
+
+The full sweep lands in ``results/BENCH_faults.json``.  The smoke tier
+runs one failure rate at toy sizes; its ``*_with_rescue`` /
+``*_no_rescue`` derived keys are presence-gated by
+``benchmarks/check_regression.py`` (values are statistical, so only
+their existence is compared) — a rescue leg silently dropped from the
+sweep is a loud missing-key CI failure on both ``REPRO_BACKEND`` legs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR
+from repro.configs import get_arch, reduced
+from repro.core.faults import FaultModel
+from repro.core.graphs import barabasi_albert, dumbbell
+from repro.data.synthetic import make_homogeneous_regression
+from repro.launch.serve import ServeEngine, ServeSimulator
+from repro.models import regression as reg
+from repro.walk_sgd.fleet import WalkFleet, run_fleet
+
+NAME = "fault_sweep"
+PAPER_CLAIM = (
+    "Node failures re-create the entrapment problem at runtime: a walker "
+    "blocked by dead nodes stops mixing exactly like a trapped one.  The "
+    "Lévy-jump rescue (forced jump to the live set after `patience` "
+    "blocked steps) restores convergence to within ~2x of the fault-free "
+    "run at a 5% per-tick failure rate, while the rescue-off fleet "
+    "stalls; on the serving side the same faults show up as p99/shed-rate "
+    "degradation that trace-replayed legs make directly comparable."
+)
+
+RATES = {"smoke": (0.05,), "quick": (0.05,), "full": (0.01, 0.05, 0.10)}
+
+SCALES = {
+    "smoke": dict(
+        dumbbell=(10, 1), ba=(96, 2), dim=4, steps=240, walks=6,
+        avg_every=20, recovery=0.05, patience=2,
+        serve=dict(
+            n=96, m=2, walkers=8, ticks=60, drain=30, rate=1.0, pickup=2,
+            batch=2, cache_len=64, max_queue=16, deadline=50,
+            prompt_len=(3, 6), max_new=4, relocate_after=2,
+        ),
+    ),
+    "quick": dict(
+        dumbbell=(30, 2), ba=(500, 3), dim=8, steps=800, walks=8,
+        avg_every=25, recovery=0.05, patience=2,
+        serve=dict(
+            n=500, m=3, walkers=24, ticks=200, drain=80, rate=1.2, pickup=4,
+            batch=4, cache_len=96, max_queue=32, deadline=150,
+            prompt_len=(4, 10), max_new=6, relocate_after=3,
+        ),
+    ),
+    "full": dict(
+        dumbbell=(60, 2), ba=(2000, 3), dim=10, steps=600, walks=16,
+        avg_every=25, recovery=0.02, patience=2,
+        serve=dict(
+            n=2000, m=3, walkers=64, ticks=500, drain=200, rate=1.5,
+            pickup=4, batch=8, cache_len=128, max_queue=64, deadline=350,
+            prompt_len=(4, 16), max_new=8, relocate_after=3,
+        ),
+    ),
+}
+
+
+def _graphs(p):
+    """(family, graph, data) for the two fault-sensitive families.
+
+    Homogeneous data on purpose — see the module docstring: the uniform
+    rescue jump perturbs the visit distribution, and a flat Lipschitz
+    field keeps the mhlj importance weights ≈ 1 so that perturbation
+    cannot masquerade as (or hide) the fault-stall signal.
+    """
+    c, plen = p["dumbbell"]
+    g_dumb = dumbbell(c, path_len=plen)
+    d_dumb = make_homogeneous_regression(g_dumb.n, dim=p["dim"], seed=0)
+    n, m = p["ba"]
+    g_ba = barabasi_albert(n, m, seed=0, layout="ragged")
+    d_ba = make_homogeneous_regression(n, dim=p["dim"], seed=1)
+    return (("dumbbell", g_dumb, d_dumb), ("ba", g_ba, d_ba))
+
+
+def _mse_opt(data) -> float:
+    """Exact least-squares optimum of the paper's reported MSE metric."""
+    F = np.asarray(data.features, np.float64)
+    y = np.asarray(data.targets, np.float64)
+    x_opt, *_ = np.linalg.lstsq(F, y, rcond=None)
+    return float(np.mean((y - F @ x_opt) ** 2))
+
+
+def _train_leg(graph, data, p, *, seed=0, fault_model=None) -> dict:
+    """One fleet run (mhlj law) → final averaged MSE + fault telemetry."""
+    from repro.walk_sgd import trainer as trainer_mod
+
+    steps, walks = p["steps"], p["walks"]
+    row_probs, weights, p_j_sched, p_d, r, use_weights = (
+        trainer_mod._setup_method(
+            "mhlj", graph, data, None, None, steps, None
+        )
+    )
+    engine = trainer_mod._build_engine(graph, p_d, r, row_probs, None, "auto")
+    fleet = WalkFleet.create(
+        engine, walks, seed=seed, avg_every=p["avg_every"]
+    )
+    lips = np.asarray(data.lipschitz, np.float64)
+    gamma = 0.3 / float(lips.mean())
+    x0s = jnp.zeros((walks, data.dim), jnp.float32)
+    _xs, _mses, avg_mses, _nodes, _hops, final = run_fleet(
+        jax.random.PRNGKey(seed),
+        x0s,
+        jnp.asarray(data.features, jnp.float32),
+        jnp.asarray(data.targets, jnp.float32),
+        weights,
+        fleet,
+        steps,
+        gamma,
+        p_j_sched,
+        use_weights,
+        reg.linear_grad,
+        faults=fault_model,
+    )
+    # tail-window mean: the plateau level, not one noisy last sample
+    tail = max(1, steps // 10)
+    out = {"final_avg_mse": float(np.asarray(avg_mses)[-tail:].mean())}
+    if fault_model is not None:
+        out["rescues"] = int(np.asarray(final["rescued"]).sum())
+        out["blocked_steps"] = int(np.asarray(final["blocked"]).sum())
+    return out
+
+
+def _serve_leg(graph, sp, engine, *, fault_model=None, trace=None) -> dict:
+    sim = ServeSimulator(
+        graph,
+        engine.reset(),
+        method="mhlj",
+        num_walkers=sp["walkers"],
+        rate=sp["rate"],
+        pickup=sp["pickup"],
+        deadline_ticks=sp["deadline"],
+        prompt_len=sp["prompt_len"],
+        max_new_tokens=sp["max_new"],
+        seed=0,
+        fault_model=fault_model,
+        relocate_after=sp["relocate_after"],
+        arrival_trace=trace,
+    )
+    m = sim.run(sp["ticks"], drain_ticks=sp["drain"])
+    shed = m["shed_queue_full"] + m["shed_deadline"] + m["shed_node_down"]
+    m["shed_rate"] = shed / max(1, m["offered"])
+    m["arrival_log"] = sim.arrival_log
+    return m
+
+
+def run(quick: bool = False, scale: str | None = None) -> dict:
+    scale = scale or ("quick" if quick else "full")
+    p = SCALES[scale]
+    rates = RATES[scale]
+    out = {
+        "scale": scale,
+        "claim": PAPER_CLAIM,
+        "rates": list(rates),
+        "recovery_rate": p["recovery"],
+        "patience": p["patience"],
+        "train": {},
+        "serve": {},
+    }
+    derived: dict = {}
+
+    # -- training leg: convergence excess vs failure rate ------------------
+    for fam, graph, data in _graphs(p):
+        opt = _mse_opt(data)
+        free = _train_leg(graph, data, p)
+        free_excess = max(free["final_avg_mse"] - opt, 1e-12)
+        fam_out = {
+            "mse_opt": opt,
+            "fault_free": {**free, "excess": free_excess},
+        }
+        derived[f"{fam}_excess_fault_free"] = free_excess
+        for rate in rates:
+            pct = int(round(rate * 100))
+            for tag, rescue in (("with_rescue", True), ("no_rescue", False)):
+                leg = _train_leg(
+                    graph, data, p,
+                    fault_model=FaultModel(
+                        crash_rate=rate,
+                        recovery_rate=p["recovery"],
+                        patience=p["patience"],
+                        rescue=rescue,
+                    ),
+                )
+                excess = max(leg["final_avg_mse"] - opt, 1e-12)
+                leg["excess"] = excess
+                leg["excess_vs_fault_free"] = excess / free_excess
+                fam_out[f"f{pct}_{tag}"] = leg
+                derived[f"{fam}_excess_f{pct}_{tag}"] = excess
+        out["train"][fam] = fam_out
+
+    # -- serving leg: identical trace replayed across rescue legs ----------
+    sp = p["serve"]
+    graph = barabasi_albert(sp["n"], sp["m"], seed=0, layout="ragged")
+    cfg = reduced(get_arch("mamba2-370m"))
+    engine = ServeEngine(
+        cfg, sp["batch"], sp["cache_len"], seed=0, max_queue=sp["max_queue"]
+    )
+    base = _serve_leg(graph, sp, engine)
+    trace = np.asarray(base.pop("arrival_log"), np.int64)
+    out["serve"]["fault_free"] = base
+    derived["serve_p99_fault_free"] = base["p99_ticks"]
+    derived["serve_shed_rate_fault_free"] = base["shed_rate"]
+    for rate in rates:
+        pct = int(round(rate * 100))
+        for tag, rescue in (("with_rescue", True), ("no_rescue", False)):
+            m = _serve_leg(
+                graph, sp, engine,
+                fault_model=FaultModel(
+                    crash_rate=rate,
+                    recovery_rate=p["recovery"],
+                    patience=p["patience"],
+                    rescue=rescue,
+                ),
+                trace=trace,
+            )
+            m.pop("arrival_log")
+            out["serve"][f"f{pct}_{tag}"] = m
+            derived[f"serve_p99_f{pct}_{tag}"] = m["p99_ticks"]
+            derived[f"serve_shed_rate_f{pct}_{tag}"] = m["shed_rate"]
+
+    # the acceptance record: at the 5% failure rate on the dumbbell the
+    # rescued fleet must sit within ~2x of the fault-free excess while the
+    # rescue-off fleet stalls well beyond it
+    if 0.05 in rates:
+        d = out["train"]["dumbbell"]
+        out["criterion"] = {
+            "dumbbell_f5_with_rescue_vs_fault_free":
+                d["f5_with_rescue"]["excess_vs_fault_free"],
+            "dumbbell_f5_no_rescue_vs_fault_free":
+                d["f5_no_rescue"]["excess_vs_fault_free"],
+        }
+    out["derived"] = derived
+
+    if scale == "full":
+        # only the full sweep may write the committed results file
+        # (docs/faults.md cites its numbers); the smoke-tier regression
+        # baseline lives in BENCH_large_graph.json's smoke_baseline
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "BENCH_faults.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, default=float)
+    return out
+
+
+def run_smoke() -> dict:
+    """Tiny tier for the tier-1 bench-smoke test: both families train
+    through all three fault legs and the serving trace replays across
+    rescue-on/off, so the fault path cannot rot silently."""
+    return run(scale="smoke")
+
+
+if __name__ == "__main__":
+    res = run(scale="full")
+    for k, v in sorted(res["derived"].items()):
+        print(f"{k}: {v:.4g}" if isinstance(v, float) else f"{k}: {v}")
+    if "criterion" in res:
+        print("\ncriterion:", json.dumps(res["criterion"], indent=2))
+    print(f"\nwrote {os.path.join(RESULTS_DIR, 'BENCH_faults.json')}")

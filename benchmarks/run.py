@@ -26,6 +26,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    fault_sweep,
     fig3_ring,
     fig4_erdos_renyi,
     fig5_sparse_graphs,
@@ -51,6 +52,7 @@ MODULES = [
     large_graph_walk,
     law_sweep,
     serve_throughput,
+    fault_sweep,
     roofline,
 ]
 

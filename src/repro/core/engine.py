@@ -93,6 +93,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core.levy import trunc_geom_icdf
 
 __all__ = [
@@ -1351,6 +1352,7 @@ class WalkEngine:
         p_j: Optional[Union[float, jnp.ndarray]] = None,
         lipschitz: Optional[jnp.ndarray] = None,
         with_aux: bool = False,
+        faults: Optional[tuple] = None,
     ):
         """One batched MHLJ transition.
 
@@ -1368,11 +1370,33 @@ class WalkEngine:
             other layouts / with compaction off).  This is how the static
             :func:`bucket_capacities` rule is audited in production
             sweeps instead of guessed.
+          faults: optional ``(FaultModel, FaultState)`` pair — the
+            liveness-masked transition path (docs/faults.md).  The
+            backend proposal is computed exactly as without faults (scan
+            and Pallas stay bitwise-identical per key), then
+            :func:`repro.core.faults.apply_liveness` rejects handoffs
+            onto dead nodes/edges like MH rejections and force-jumps
+            walkers blocked past the model's ``patience`` to a uniform
+            live node.  Requires ``with_aux=True``; the aux dict gains
+            ``blocked_steps`` (the updated (W,) consecutive counter — the
+            caller's next ``FaultState.blocked``), plus ``fault_blocked``
+            and ``rescued`` (W,) masks.  ``faults=None`` consumes the key
+            identically to the pre-fault engine (bitwise).
 
         Returns:
           (next_nodes, hops) matching the shape of ``nodes``; with
           ``with_aux``, (next_nodes, hops, aux).
         """
+        if faults is not None and not with_aux:
+            raise ValueError(
+                "the liveness-masked path returns its blocked counter "
+                "through aux; call step(..., faults=..., with_aux=True)"
+            )
+        if faults is not None:
+            # split BEFORE the uniform draw so the rescue stream is
+            # independent of the transition stream; the faults=None path
+            # consumes the caller's key untouched (bitwise).
+            key, rescue_key = jax.random.split(key)
         nodes = jnp.asarray(nodes, jnp.int32)
         squeeze = nodes.ndim == 0
         if squeeze:
@@ -1488,13 +1512,37 @@ class WalkEngine:
                 self.p_d,
                 self.r,
             )
+        aux = {"compact_overflow": overflow}
+        if faults is not None:
+            # liveness masking applies AFTER the backend dispatch, on the
+            # proposed endpoints — every backend/layout pair shares this
+            # exact rejection + rescue arithmetic (see docs/faults.md)
+            fmodel, fstate = faults
+            nxt, hops, blocked, was_blocked, rescued = faults_mod.apply_liveness(
+                rescue_key,
+                nodes,
+                nxt,
+                hops,
+                jnp.atleast_1d(fstate.blocked),
+                fmodel.live_mask(fstate),
+                patience=fmodel.patience,
+                rescue=fmodel.rescue,
+                rescue_hops=self.r,
+                edge_live=fmodel.edge_live_mask(fstate),
+                indptr=self.indptr,
+                indices=self.indices,
+                max_degree=self.max_degree,
+            )
+            aux["blocked_steps"] = blocked[0] if squeeze else blocked
+            aux["fault_blocked"] = was_blocked[0] if squeeze else was_blocked
+            aux["rescued"] = rescued[0] if squeeze else rescued
         if self.walker_sharding is not None and not squeeze:
             nxt = self._constrain_walkers(nxt)
             hops = self._constrain_walkers(hops)
         if squeeze:
             nxt, hops = nxt[0], hops[0]
         if with_aux:
-            return nxt, hops, {"compact_overflow": overflow}
+            return nxt, hops, aux
         return nxt, hops
 
     def run(

@@ -1,0 +1,388 @@
+"""Node/link fault injection for the walk stack — THE liveness layer.
+
+The paper's entrapment problem has an adversarial sibling: a crashed hub
+or a partitioned cut traps the chain *absolutely*, not just
+probabilistically.  This module supplies the seeded, jit-compatible fault
+process every layer threads through (``WalkEngine.step`` →
+``walk_sgd.fleet`` → ``launch.serve``; see docs/faults.md):
+
+* :class:`FaultModel` — the static fault *law*: a per-node two-state
+  Markov up/down process (``crash_rate`` up→down, ``recovery_rate``
+  down→up, both per tick), deterministic scripted windows (node ``v`` is
+  down while ``down_at[v] <= t < up_at[v]``) and, on CSR-bearing layouts,
+  per-edge drop windows over the flat ``(nnz,)`` slot axis.  Registered
+  as a pytree (scripted arrays are leaves; rates and the rescue policy
+  ride as static aux), so a model crosses ``jax.jit``/``lax.scan``
+  boundaries exactly like the engine does.
+* :class:`FaultState` — the per-tick carry: the Markov liveness vector,
+  the per-walk consecutive ``blocked`` counter and the tick index.  One
+  small pytree, scanned alongside the walk state.
+* :func:`apply_liveness` — the rejection rule: a transition whose
+  endpoint is dead (or whose traversed edge is dropped) is rejected like
+  an MH rejection — the walker stays put and its ``blocked`` counter
+  increments; ``blocked >= patience`` triggers the **jump rescue**, a
+  forced Levy jump restricted to the live node set
+  (:func:`live_uniform_choice` — the max-range limit of the truncated
+  Levy law of arXiv:2604.12260, the same escape primitive the paper uses
+  against probabilistic entrapment).
+
+Semantics (documented in docs/faults.md, pinned by tests/test_faults.py):
+a transition is a model handoff ``v -> v'``, so liveness is checked at
+the endpoint — a multi-hop Levy jump is one handoff whose intermediate
+hops are virtual routing.  A blocked handoff still pays its attempted
+hop cost (the transmission was tried); a rescue jump pays the engine's
+``r`` hops (the max-range jump).  A walker standing on a node that dies
+under it is blocked every step until recovery or rescue — the
+stalled-worker regime of Markov-chain SGD (arXiv:1909.10238) that
+``benchmarks/fault_sweep.py`` prices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NEVER",
+    "FaultModel",
+    "FaultState",
+    "apply_liveness",
+    "live_uniform_choice",
+    "edge_slot_lookup",
+    "kill_top_hubs",
+    "partition_groups",
+    "dumbbell_bridge_mask",
+]
+
+# scripted-window sentinel: a node/edge with down_at == NEVER never faults
+NEVER = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FaultState:
+    """Per-tick fault carry: Markov liveness + per-walk blocked counters.
+
+    ``live`` is the *Markov* component only — the effective mask is
+    :meth:`FaultModel.live_mask`, which also applies the scripted windows
+    at tick ``t`` (so a pure-scripted model never mutates ``live``).
+    """
+
+    live: jnp.ndarray  # (n,) bool Markov up/down component
+    blocked: jnp.ndarray  # (W,) int32 consecutive fault-blocked steps
+    t: jnp.ndarray  # () int32 tick index
+
+
+def _state_flatten(s: FaultState):
+    return (s.live, s.blocked, s.t), None
+
+
+def _state_unflatten(_, children) -> FaultState:
+    return FaultState(*children)
+
+
+jax.tree_util.register_pytree_node(
+    FaultState, _state_flatten, _state_unflatten
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FaultModel:
+    """Seeded fault law: Markov node churn + scripted node/edge windows.
+
+    ``crash_rate``/``recovery_rate`` are per-tick probabilities of the
+    two-state Markov process (steady-state down fraction
+    ``crash / (crash + recovery)``, mean downtime ``1 / recovery``
+    ticks).  ``down_at``/``up_at`` script node ``v`` down during
+    ``[down_at[v], up_at[v])``; ``edge_down_at``/``edge_up_at`` do the
+    same per CSR edge slot (requires an engine with flat ``indptr`` /
+    ``indices`` state, i.e. the ragged layout).  ``patience`` and
+    ``rescue`` are the jump-rescue policy: a walker blocked ``patience``
+    consecutive steps is force-jumped to a uniform live node;
+    ``rescue=False`` (the ablation leg of ``benchmarks/fault_sweep.py``)
+    leaves it parked.
+    """
+
+    crash_rate: float = 0.0
+    recovery_rate: float = 0.0
+    down_at: Optional[jnp.ndarray] = None  # (n,) int32, NEVER = no fault
+    up_at: Optional[jnp.ndarray] = None  # (n,) int32 scripted recovery tick
+    edge_down_at: Optional[jnp.ndarray] = None  # (nnz,) int32 per CSR slot
+    edge_up_at: Optional[jnp.ndarray] = None  # (nnz,) int32
+    patience: int = 3  # static: blocked steps before the forced jump
+    rescue: bool = True  # static: enable the jump-rescue policy
+
+    def __post_init__(self):
+        if (self.down_at is None) != (self.up_at is None):
+            raise ValueError("down_at and up_at must be given together")
+        if (self.edge_down_at is None) != (self.edge_up_at is None):
+            raise ValueError(
+                "edge_down_at and edge_up_at must be given together"
+            )
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+
+    # -- state lifecycle ----------------------------------------------------
+    def init_state(self, num_nodes: int, num_walks: int) -> FaultState:
+        """All-live state at tick 0 with zeroed blocked counters."""
+        return FaultState(
+            live=jnp.ones((num_nodes,), bool),
+            blocked=jnp.zeros((num_walks,), jnp.int32),
+            t=jnp.int32(0),
+        )
+
+    def advance(self, key: jax.Array, state: FaultState) -> FaultState:
+        """One tick of the Markov up/down process (scripted windows are
+        evaluated lazily by :meth:`live_mask`, so they cost nothing here).
+
+        ``blocked`` is carried through untouched — it is the *step's*
+        output (:func:`apply_liveness`), not the fault process's.
+        """
+        live = state.live
+        if self.crash_rate > 0.0 or self.recovery_rate > 0.0:
+            u = jax.random.uniform(key, live.shape, jnp.float32)
+            crash = u < jnp.float32(self.crash_rate)
+            recover = u < jnp.float32(self.recovery_rate)
+            live = jnp.where(live, ~crash, recover)
+        return FaultState(live=live, blocked=state.blocked, t=state.t + 1)
+
+    # -- masks --------------------------------------------------------------
+    def live_mask(self, state: FaultState) -> jnp.ndarray:
+        """(n,) bool effective node liveness: Markov AND scripted windows."""
+        live = state.live
+        if self.down_at is not None:
+            scripted_down = (self.down_at <= state.t) & (state.t < self.up_at)
+            live = live & ~scripted_down
+        return live
+
+    def edge_live_mask(self, state: FaultState) -> Optional[jnp.ndarray]:
+        """(nnz,) bool per-CSR-slot edge liveness, or None without edge
+        faults (the common case pays nothing)."""
+        if self.edge_down_at is None:
+            return None
+        return ~(
+            (self.edge_down_at <= state.t) & (state.t < self.edge_up_at)
+        )
+
+
+def _model_flatten(m: FaultModel):
+    children = (m.down_at, m.up_at, m.edge_down_at, m.edge_up_at)
+    aux = (m.crash_rate, m.recovery_rate, m.patience, m.rescue)
+    return children, aux
+
+
+def _model_unflatten(aux, children) -> FaultModel:
+    crash_rate, recovery_rate, patience, rescue = aux
+    down_at, up_at, edge_down_at, edge_up_at = children
+    return FaultModel(
+        crash_rate=crash_rate,
+        recovery_rate=recovery_rate,
+        down_at=down_at,
+        up_at=up_at,
+        edge_down_at=edge_down_at,
+        edge_up_at=edge_up_at,
+        patience=patience,
+        rescue=rescue,
+    )
+
+
+jax.tree_util.register_pytree_node(
+    FaultModel, _model_flatten, _model_unflatten
+)
+
+
+# ---------------------------------------------------------------------------
+# the rejection + rescue math (pure functions; the engine calls these AFTER
+# its backend dispatch, so scan and Pallas stay bitwise-identical per key)
+# ---------------------------------------------------------------------------
+
+
+def live_uniform_choice(u: jnp.ndarray, live: jnp.ndarray) -> jnp.ndarray:
+    """Uniform draw over the live node set — THE rescue destination law.
+
+    Inverse-CDF over the 0/1 liveness weights: ``cumsum`` puts a unit
+    step at every live node, so ``searchsorted(cdf, u * n_live)`` lands
+    uniformly on live nodes (the max-range limit of the truncated Levy
+    jump).  With **no** live node the draw is meaningless — callers must
+    gate on ``live.sum() > 0`` (:func:`apply_liveness` does).
+    """
+    w = live.astype(jnp.float32)
+    cdf = jnp.cumsum(w)
+    tgt = u * cdf[-1]
+    idx = jnp.searchsorted(cdf, tgt, side="right")
+    return jnp.clip(idx, 0, live.shape[0] - 1).astype(jnp.int32)
+
+
+def edge_slot_lookup(
+    indptr: jnp.ndarray,
+    indices: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    max_degree: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat CSR slot of edge ``src -> dst`` per walk: ``(slot, found)``.
+
+    Scans each source row's ``max_degree``-wide window (the ragged
+    layout's static bound) for ``dst``; ``found=False`` marks pairs with
+    no such edge (e.g. a multi-hop jump endpoint), whose ``slot`` is
+    meaningless and must be masked by the caller.
+    """
+    start = indptr[src]
+    deg = (indptr[src + 1] - start).astype(jnp.int32)
+    offs = jnp.arange(max_degree, dtype=start.dtype)
+    gather = jnp.clip(start[:, None] + offs[None, :], 0, indices.shape[0] - 1)
+    cand = indices[gather]
+    hit = (cand == dst[:, None]) & (
+        offs[None, :].astype(jnp.int32) < deg[:, None]
+    )
+    found = hit.any(axis=1)
+    slot = start + jnp.argmax(hit, axis=1).astype(start.dtype)
+    return slot, found
+
+
+def apply_liveness(
+    key: jax.Array,
+    nodes: jnp.ndarray,  # (W,) int32 positions before the step
+    nxt: jnp.ndarray,  # (W,) int32 proposed positions (backend output)
+    hops: jnp.ndarray,  # (W,) int32 attempted hop cost
+    blocked: jnp.ndarray,  # (W,) int32 consecutive blocked counter
+    live: jnp.ndarray,  # (n,) bool effective node liveness
+    *,
+    patience: int,
+    rescue: bool,
+    rescue_hops: int = 1,  # hop cost of a rescue jump (engines pass r)
+    edge_live: Optional[jnp.ndarray] = None,  # (nnz,) bool CSR slot mask
+    indptr: Optional[jnp.ndarray] = None,
+    indices: Optional[jnp.ndarray] = None,
+    max_degree: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Liveness-masked acceptance of one batched transition.
+
+    The rejection rule (see module docstring): a handoff is blocked when
+    the walker's own node is down, the endpoint is down, or (edge faults)
+    the traversed single-hop edge is dropped.  Blocked walkers stay put,
+    pay the attempted ``hops`` and increment ``blocked``; a walker
+    reaching ``patience`` is force-jumped to a uniform live node when
+    ``rescue`` is on and any live node exists.
+
+    Returns ``(next_nodes, hops, blocked, was_blocked, rescued)``; the
+    first three replace the step's outputs/carry, the last two are
+    telemetry masks.
+    """
+    self_dead = ~live[nodes]
+    moved = nxt != nodes
+    dst_dead = moved & ~live[nxt]
+    fault_blocked = self_dead | dst_dead
+    if edge_live is not None:
+        if indptr is None or indices is None or max_degree is None:
+            raise ValueError(
+                "edge faults need flat CSR state (indptr/indices/"
+                "max_degree) — only CSR-bearing engine layouts (ragged) "
+                "support per-edge drop masks"
+            )
+        slot, found = edge_slot_lookup(indptr, indices, nodes, nxt, max_degree)
+        fault_blocked = fault_blocked | (moved & found & ~edge_live[slot])
+    nxt_out = jnp.where(fault_blocked, nodes, nxt)
+    blocked_out = jnp.where(fault_blocked, blocked + 1, jnp.int32(0))
+    rescued = jnp.zeros_like(fault_blocked)
+    if rescue:
+        # the rescue uniform is drawn unconditionally (fixed key
+        # consumption given faults are active), applied only past patience
+        u = jax.random.uniform(key, nodes.shape, jnp.float32)
+        v_rescue = live_uniform_choice(u, live)
+        rescued = (
+            fault_blocked
+            & (blocked_out >= jnp.int32(patience))
+            & (live.sum() > 0)
+        )
+        nxt_out = jnp.where(rescued, v_rescue, nxt_out)
+        hops = jnp.where(rescued, jnp.int32(rescue_hops), hops)
+        blocked_out = jnp.where(rescued, jnp.int32(0), blocked_out)
+    return nxt_out, hops, blocked_out, fault_blocked, rescued
+
+
+# ---------------------------------------------------------------------------
+# scripted scenarios
+# ---------------------------------------------------------------------------
+
+
+def kill_top_hubs(
+    degrees,
+    k: int,
+    *,
+    at: int,
+    duration: Optional[int] = None,
+    **model_kwargs,
+) -> FaultModel:
+    """Scripted scenario: the ``k`` highest-degree nodes crash at tick
+    ``at`` (ties broken by node id) and recover after ``duration`` ticks
+    (``None`` = never) — the adversarial version of hub entrapment.
+    Extra kwargs (Markov rates, patience, rescue) pass through."""
+    deg = np.asarray(degrees)
+    n = deg.shape[0]
+    if not 0 < k <= n:
+        raise ValueError(f"k must be in [1, {n}], got {k}")
+    top = np.argsort(-deg, kind="stable")[:k]
+    down_at = np.full(n, NEVER, np.int32)
+    up_at = np.full(n, NEVER, np.int32)
+    down_at[top] = at
+    if duration is not None:
+        up_at[top] = at + duration
+    return FaultModel(
+        down_at=jnp.asarray(down_at), up_at=jnp.asarray(up_at), **model_kwargs
+    )
+
+
+def partition_groups(
+    indptr,
+    indices,
+    side: np.ndarray,
+    *,
+    at: int,
+    duration: Optional[int] = None,
+    **model_kwargs,
+) -> FaultModel:
+    """Scripted scenario: drop every edge crossing the ``side`` cut (both
+    CSR directions) during ``[at, at + duration)`` — the graph partition.
+
+    ``side`` is an (n,) bool group assignment; with
+    :func:`dumbbell_bridge_mask` this is "partition the dumbbell bridge".
+    """
+    indptr_np = np.asarray(indptr)
+    indices_np = np.asarray(indices)
+    side = np.asarray(side, bool)
+    n = indptr_np.shape[0] - 1
+    if side.shape != (n,):
+        raise ValueError(f"side must be an ({n},) bool mask, got {side.shape}")
+    src = np.repeat(np.arange(n), np.diff(indptr_np))
+    crossing = side[src] != side[indices_np]
+    if not crossing.any():
+        raise ValueError("side mask cuts no edge; nothing to partition")
+    edge_down = np.full(indices_np.shape[0], NEVER, np.int32)
+    edge_up = np.full(indices_np.shape[0], NEVER, np.int32)
+    edge_down[crossing] = at
+    if duration is not None:
+        edge_up[crossing] = at + duration
+    return FaultModel(
+        edge_down_at=jnp.asarray(edge_down),
+        edge_up_at=jnp.asarray(edge_up),
+        **model_kwargs,
+    )
+
+
+def dumbbell_bridge_mask(
+    n: int, clique_n: int, path_len: int = 1
+) -> np.ndarray:
+    """Side assignment splitting ``graphs.dumbbell(clique_n, path_len)``
+    at the middle of its bridge (clique A + the first half of the chain
+    vs the rest), for :func:`partition_groups`."""
+    if n != 2 * clique_n + path_len:
+        raise ValueError(
+            f"n={n} is not a dumbbell({clique_n},{path_len}) node count "
+            f"({2 * clique_n + path_len})"
+        )
+    side = np.zeros(n, bool)
+    side[clique_n + (path_len + 1) // 2:] = True
+    return side

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.configs import ARCHITECTURES, get_arch, reduced
 from repro.core.entrapment import occupancy_concentration
+from repro.core.faults import FaultModel
 from repro.core.graphs import barabasi_albert
 from repro.data.synthetic import RegressionData
 from repro.models.factory import build_model
@@ -56,6 +57,8 @@ __all__ = [
     "ServeSimulator",
     "build_route_engine",
     "latency_percentiles",
+    "load_arrival_trace",
+    "save_arrival_trace",
     "main",
 ]
 
@@ -80,9 +83,12 @@ def latency_percentiles(requests) -> Dict[str, float]:
     """p50/p95/p99 of ``done_tick - submit_tick`` over finished requests.
 
     Latency is measured in *engine ticks* (the simulator clock), not wall
-    seconds, so the numbers are machine-independent; -1.0 marks "no
-    completed requests yet" (never a silent 0, which would read as an
-    impossibly perfect latency).
+    seconds, so the numbers are machine-independent.  Zero completed
+    requests — every request shed, or a fault scenario that killed the
+    whole serving region — returns defined zeros rather than NaN or an
+    exception, so a fully-degraded leg of a sweep still serializes;
+    pair the percentiles with ``completed`` to tell "instant" from
+    "nothing finished".
     """
     lats = [
         r.done_tick - r.submit_tick
@@ -90,9 +96,38 @@ def latency_percentiles(requests) -> Dict[str, float]:
         if r.done_tick is not None and r.submit_tick is not None
     ]
     if not lats:
-        return {"p50_ticks": -1.0, "p95_ticks": -1.0, "p99_ticks": -1.0}
+        return {"p50_ticks": 0.0, "p95_ticks": 0.0, "p99_ticks": 0.0}
     arr = np.asarray(lats, np.float64)
     return {f"p{p}_ticks": float(np.percentile(arr, p)) for p in (50, 95, 99)}
+
+
+def save_arrival_trace(path: str, trace) -> str:
+    """Write an arrival trace — ``(tick, node, prompt_len)`` int64 rows.
+
+    The trace is the replayable workload of a :class:`ServeSimulator`
+    run (``sim.arrival_log`` after ``run()``): feeding it back through
+    ``arrival_trace=`` replays the *identical* offered load, which is
+    what makes fault sweeps comparable — the rescue-on and rescue-off
+    legs of ``benchmarks/fault_sweep.py`` see the same requests at the
+    same nodes on the same ticks, so any difference is the policy's.
+    """
+    arr = np.asarray(trace, dtype=np.int64)
+    if arr.size == 0:
+        arr = arr.reshape(0, 3)
+    if arr.ndim != 2 or arr.shape[1] != 3:
+        raise ValueError(
+            f"arrival trace must be (k, 3) rows of (tick, node, "
+            f"prompt_len); got shape {arr.shape}"
+        )
+    np.savez(path, tick=arr[:, 0], node=arr[:, 1], prompt_len=arr[:, 2])
+    return path
+
+
+def load_arrival_trace(path: str) -> np.ndarray:
+    """Load :func:`save_arrival_trace` → ``(k, 3)`` int64, tick-sorted."""
+    with np.load(path, allow_pickle=False) as z:
+        arr = np.stack([z["tick"], z["node"], z["prompt_len"]], axis=1)
+    return arr[np.argsort(arr[:, 0], kind="stable")].astype(np.int64)
 
 
 class ServeEngine:
@@ -164,6 +199,10 @@ class ServeEngine:
         self.cache_recycles = 0
         self.queue_depth_sum = 0.0
         self.queue_depth_max = 0
+        # node ids currently down (set by the fault-aware simulator each
+        # tick); an expiry observed while the request's node is in this
+        # set sheds with reason "node_down" instead of "deadline"
+        self.down_nodes: set = set()
         return self
 
     # -- scheduling ---------------------------------------------------------
@@ -209,7 +248,11 @@ class ServeEngine:
             while self.queue:
                 req = self.queue.pop(0)
                 if req.deadline is not None and tick > req.deadline:
-                    self.shed(req, "deadline")
+                    self.shed(
+                        req,
+                        "node_down" if req.node in self.down_nodes
+                        else "deadline",
+                    )
                     continue
                 req.admit_tick = tick
                 self.slots[i] = req
@@ -295,6 +338,7 @@ class ServeEngine:
             "queued": len(self.queue),
             "shed_queue_full": self.shed_counts.get("queue_full", 0),
             "shed_deadline": self.shed_counts.get("deadline", 0),
+            "shed_node_down": self.shed_counts.get("node_down", 0),
             "cache_recycles": self.cache_recycles,
             "mean_queue_depth": self.queue_depth_sum / max(1, self.engine_steps),
             "max_queue_depth": self.queue_depth_max,
@@ -354,6 +398,21 @@ def build_route_engine(
     return engine, float(p_j_sched[0])
 
 
+def _faulted_advance(fleet, key, p_j, fmodel, fstate):
+    """One fault-aware tick transition (jitted as a whole in the sim).
+
+    The fault process advances *first* (same per-tick ordering as the
+    training fleet scan), then the fleet takes one liveness-masked step;
+    the returned state carries the engine's consecutive-blocked counters
+    forward so patience accrues across ticks.
+    """
+    akey, fkey = jax.random.split(key)
+    fstate = fmodel.advance(fkey, fstate)
+    new_fleet, _hops, aux = fleet.advance(akey, p_j=p_j, faults=(fmodel, fstate))
+    fstate = dataclasses.replace(fstate, blocked=aux["blocked_steps"])
+    return new_fleet, fstate, fmodel.live_mask(fstate), aux
+
+
 class ServeSimulator:
     """Requests as nodes on the graph, walkers as the routing fabric.
 
@@ -374,6 +433,24 @@ class ServeSimulator:
     load (routing interpretation: visit mass ∝ demand) so the O(n²)
     dissimilarity measurement is never run on a serving graph; pass
     ``law_kwargs={"pi": ...}`` to override.
+
+    **Degraded operation** (docs/faults.md): with
+    ``fault_model=FaultModel(...)`` the node fault process advances once
+    per tick on its own key stream, the fleet transition is
+    liveness-masked (blocked walkers accrue patience and take Lévy
+    rescues onto the live set), walkers parked on dead nodes pick
+    nothing up, and pending requests at a node that has been down for
+    ``relocate_after`` consecutive ticks are re-queued at a live node
+    (arrival order preserved, counted in ``relocated_requests``).  A
+    deadline expiry observed while the request's node is down sheds with
+    reason ``"node_down"`` instead of ``"deadline"`` — still exactly
+    once.  ``fault_model=None`` is bitwise the pre-fault simulator.
+
+    **Trace-driven load**: ``arrival_trace`` (``(k, 3)`` int64 rows of
+    ``(tick, node, prompt_len)``, see :func:`save_arrival_trace`)
+    replaces the Poisson generator so two legs of a sweep face the
+    identical workload; every run also records its own arrivals in
+    ``self.arrival_log`` for re-play.
     """
 
     def __init__(
@@ -393,6 +470,9 @@ class ServeSimulator:
         law_kwargs: Optional[dict] = None,
         engine_kwargs: Optional[dict] = None,
         seed: int = 0,
+        fault_model: Optional[FaultModel] = None,
+        relocate_after: int = 3,
+        arrival_trace: Optional[np.ndarray] = None,
     ):
         self.graph = graph
         self.n = int(graph.n)
@@ -416,6 +496,37 @@ class ServeSimulator:
         )
         self._base_key = jax.random.PRNGKey(seed)
         self._rng = np.random.default_rng(seed + 1)
+        # fault machinery — all of it dormant (and RNG-silent) when
+        # fault_model is None, so the no-fault path stays bitwise
+        self.fault_model = fault_model
+        self.relocate_after = int(relocate_after)
+        self._fault_state = (
+            None if fault_model is None
+            else fault_model.init_state(self.n, num_walkers)
+        )
+        self._advance_faulted = (
+            None if fault_model is None else jax.jit(_faulted_advance)
+        )
+        self._relocate_rng = np.random.default_rng(seed + 2)
+        self._down_now: set = set()
+        self.down_since: Dict[int, int] = {}
+        self.rescues = 0
+        self.blocked_steps = 0
+        self.down_node_ticks = 0
+        self.relocated = 0
+        # trace-driven load (replaces the Poisson generator when set)
+        if arrival_trace is not None:
+            arr = np.asarray(arrival_trace, dtype=np.int64)
+            if arr.ndim != 2 or arr.shape[1] != 3:
+                raise ValueError(
+                    "arrival_trace must be (k, 3) rows of (tick, node, "
+                    f"prompt_len); got shape {arr.shape}"
+                )
+            arrival_trace = arr[np.argsort(arr[:, 0], kind="stable")]
+        self._trace = arrival_trace
+        self._trace_pos = 0
+        self._draining = False
+        self.arrival_log: List[tuple] = []
         self.rate = rate
         self.pickup = pickup
         self.deadline_ticks = deadline_ticks
@@ -450,7 +561,38 @@ class ServeSimulator:
         self.pending_count += 1
         self.offered += 1
 
+    def _offer_generated(self, t: int, node: int, plen: int) -> None:
+        """One synthetic arrival: prompt tokens from the workload RNG."""
+        self.offer(
+            Request(
+                rid=self._next_rid,
+                prompt=self._rng.integers(
+                    0, self.engine.cfg.vocab_size, plen
+                ).astype(np.int32),
+                max_new_tokens=self.max_new_tokens,
+                node=node,
+                deadline=(
+                    None
+                    if self.deadline_ticks is None
+                    else t + self.deadline_ticks
+                ),
+                submit_tick=t,
+            )
+        )
+        self.arrival_log.append((t, node, plen))
+        self._next_rid += 1
+
     def _arrivals(self, t: int) -> None:
+        if self._trace is not None:
+            if self._draining:
+                return
+            tr, i = self._trace, self._trace_pos
+            while i < tr.shape[0] and tr[i, 0] <= t:
+                if tr[i, 0] == t:
+                    self._offer_generated(t, int(tr[i, 1]), int(tr[i, 2]))
+                i += 1
+            self._trace_pos = i
+            return
         k = int(self._rng.poisson(self.rate))
         if k == 0:
             return
@@ -458,34 +600,62 @@ class ServeSimulator:
         lo, hi = self.prompt_len
         for v in nodes:
             plen = int(self._rng.integers(lo, hi + 1))
-            self.offer(
-                Request(
-                    rid=self._next_rid,
-                    prompt=self._rng.integers(
-                        0, self.engine.cfg.vocab_size, plen
-                    ).astype(np.int32),
-                    max_new_tokens=self.max_new_tokens,
-                    node=int(v),
-                    deadline=(
-                        None
-                        if self.deadline_ticks is None
-                        else t + self.deadline_ticks
-                    ),
-                    submit_tick=t,
-                )
-            )
-            self._next_rid += 1
+            self._offer_generated(t, int(v), plen)
+
+    # -- fault handling -----------------------------------------------------
+    def _advance_faults(self, t: int, key) -> None:
+        """Advance the fault process + fleet one tick, then degrade:
+        update the engine's ``down_nodes`` view, track per-node downtime,
+        and relocate pending work off nodes down past the backoff."""
+        self.fleet, self._fault_state, live, aux = self._advance_faulted(
+            self.fleet, key, self._p_j, self.fault_model, self._fault_state
+        )
+        live_np = np.asarray(live)
+        self.rescues += int(np.asarray(aux["rescued"]).sum())
+        self.blocked_steps += int(np.asarray(aux["fault_blocked"]).sum())
+        self.down_node_ticks += int((~live_np).sum())
+        self._down_now = set(np.nonzero(~live_np)[0].tolist())
+        self.engine.down_nodes = self._down_now
+        for v in [u for u in self.down_since if u not in self._down_now]:
+            del self.down_since[v]
+        for v in self._down_now:
+            self.down_since.setdefault(v, t)
+        self._relocate_pending(t, live_np)
+
+    def _relocate_pending(self, t: int, live_np: np.ndarray) -> None:
+        """Re-queue pending requests off nodes down ≥ ``relocate_after``
+        ticks onto a uniformly-drawn live node (arrival order kept)."""
+        live_ids = np.nonzero(live_np)[0]
+        if live_ids.size == 0:
+            return  # total failure: nowhere to go, requests wait or expire
+        stale = [
+            v for v in list(self.pending)
+            if v in self._down_now
+            and t - self.down_since.get(v, t) >= self.relocate_after
+        ]
+        for v in stale:
+            dq = self.pending.pop(v)
+            tgt = int(live_ids[int(self._relocate_rng.integers(live_ids.size))])
+            for req in dq:
+                req.node = tgt
+            self.relocated += len(dq)
+            self.pending.setdefault(tgt, deque()).extend(dq)
 
     # -- the tick loop ------------------------------------------------------
     def tick(self) -> None:
         t = self.ticks
         self._arrivals(t)
         key = jax.random.fold_in(self._base_key, t)
-        self.fleet, _hops = self._advance(self.fleet, key, self._p_j)
+        if self.fault_model is None:
+            self.fleet, _hops = self._advance(self.fleet, key, self._p_j)
+        else:
+            self._advance_faults(t, key)
         where = np.asarray(self.fleet.nodes)
         self.visits.append(where.copy())
         self.walk_steps += self.num_walkers
         for v in where.tolist():
+            if v in self._down_now:
+                continue  # a walker parked on a dead node serves nothing
             dq = self.pending.get(v)
             if not dq:
                 continue
@@ -505,7 +675,8 @@ class ServeSimulator:
         self.ticks += 1
 
     def _expire_pending(self) -> None:
-        """Shed deadline-expired requests still waiting at their node."""
+        """Shed deadline-expired requests still waiting at their node;
+        expiry observed at a currently-down node sheds as ``node_down``."""
         t = self.ticks
         for v in list(self.pending):
             keep: deque = deque()
@@ -513,7 +684,11 @@ class ServeSimulator:
             while dq:
                 req = dq.popleft()
                 if req.deadline is not None and t > req.deadline:
-                    self.engine.shed(req, "deadline")
+                    self.engine.shed(
+                        req,
+                        "node_down" if req.node in self._down_now
+                        else "deadline",
+                    )
                     self.pending_count -= 1
                 else:
                     keep.append(req)
@@ -526,11 +701,13 @@ class ServeSimulator:
         for _ in range(num_ticks):
             self.tick()
         rate, self.rate = self.rate, 0.0
+        self._draining = True
         try:
             for _ in range(drain_ticks):
                 self.tick()
         finally:
             self.rate = rate
+            self._draining = False
         self._expire_pending()
         self._wall += time.time() - t0
         return self.metrics()
@@ -554,6 +731,7 @@ class ServeSimulator:
             "queued_left": eng["queued"],
             "shed_queue_full": eng["shed_queue_full"],
             "shed_deadline": eng["shed_deadline"],
+            "shed_node_down": eng["shed_node_down"],
             "cache_recycles": eng["cache_recycles"],
             "slot_occupancy": eng["slot_utilization"],
             "mean_queue_depth": eng["mean_queue_depth"],
@@ -566,6 +744,14 @@ class ServeSimulator:
             "p99_ticks": eng["p99_ticks"],
             "herfindahl": conc["herfindahl"],
             "topk_share": conc["topk_share"],
+            # degradation telemetry — all zeros when fault_model is None,
+            # so the metrics schema is stable across sweep legs
+            "walker_rescues": self.rescues,
+            "walker_blocked_steps": self.blocked_steps,
+            "relocated_requests": self.relocated,
+            "node_downtime_frac": (
+                self.down_node_ticks / max(1, self.ticks * self.n)
+            ),
         }
 
 
@@ -598,6 +784,24 @@ def main():
     ap.add_argument("--deadline", type=int, default=None,
                     help="per-request admission deadline in ticks")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--crash-rate", type=float, default=0.0,
+                    help="per-tick node crash probability (0 = no faults)")
+    ap.add_argument("--recovery-rate", type=float, default=0.0,
+                    help="per-tick dead-node recovery probability")
+    ap.add_argument("--patience", type=int, default=3,
+                    help="consecutive blocked steps before a Lévy rescue")
+    ap.add_argument("--no-rescue", action="store_true",
+                    help="disable the Lévy-jump rescue (blocked walkers "
+                    "just wait)")
+    ap.add_argument("--relocate-after", type=int, default=3,
+                    help="ticks a node stays down before its pending "
+                    "requests are re-queued at a live node")
+    ap.add_argument("--trace", default=None,
+                    help="replay arrivals from a recorded trace file "
+                    "instead of the Poisson generator")
+    ap.add_argument("--record-trace", default=None,
+                    help="write this run's arrival trace to a file "
+                    "(replayable via --trace)")
     ap.add_argument("--standalone", action="store_true",
                     help="skip graph routing: direct-submit --requests "
                     "requests to the slot engine (the original demo)")
@@ -627,6 +831,14 @@ def main():
         return 0 if stats["completed"] == args.requests else 1
 
     graph = barabasi_albert(args.nodes, args.ba_m, seed=args.seed, layout="ragged")
+    fault_model = None
+    if args.crash_rate > 0.0:
+        fault_model = FaultModel(
+            crash_rate=args.crash_rate,
+            recovery_rate=args.recovery_rate,
+            patience=args.patience,
+            rescue=not args.no_rescue,
+        )
     sim = ServeSimulator(
         graph,
         engine,
@@ -637,8 +849,15 @@ def main():
         deadline_ticks=args.deadline,
         max_new_tokens=args.max_new,
         seed=args.seed,
+        fault_model=fault_model,
+        relocate_after=args.relocate_after,
+        arrival_trace=(
+            load_arrival_trace(args.trace) if args.trace else None
+        ),
     )
     metrics = sim.run(args.ticks, drain_ticks=args.drain)
+    if args.record_trace:
+        save_arrival_trace(args.record_trace, sim.arrival_log)
     for k, v in metrics.items():
         print(f"{k}: {v:.4g}" if isinstance(v, float) else f"{k}: {v}")
     return 0 if metrics["completed"] > 0 else 1

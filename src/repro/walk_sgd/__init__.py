@@ -13,10 +13,12 @@ from repro.walk_sgd.fleet import (
     WalkFleet,
     fleet_average,
     init_fleet_walk_state,
+    load_fleet_checkpoint,
     make_fleet_step,
     migrate_walk_nodes,
     run_fleet,
     sample_initial_nodes,
+    save_fleet_checkpoint,
     shard_walker_batch,
 )
 from repro.walk_sgd.graph_learning import (
@@ -41,6 +43,8 @@ __all__ = [
     "migrate_walk_nodes",
     "run_fleet",
     "sample_initial_nodes",
+    "save_fleet_checkpoint",
+    "load_fleet_checkpoint",
     "shard_walker_batch",
     "DadaResult",
     "personalize_models",

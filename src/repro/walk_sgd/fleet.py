@@ -78,6 +78,8 @@ __all__ = [
     "shard_walker_batch",
     "make_fleet_step",
     "init_fleet_walk_state",
+    "save_fleet_checkpoint",
+    "load_fleet_checkpoint",
 ]
 
 
@@ -98,6 +100,14 @@ def sample_initial_nodes(
     identical fleets for the same seed.  Explicit ``v0s`` are validated
     (shape ``(num_walks,)``, every node in ``[0, n)``).
     """
+    if n <= 0:
+        # total node failure or full-departure churn: say WHY seeding is
+        # impossible instead of letting rng.choice/indexing fail opaquely
+        raise ValueError(
+            f"cannot seed {num_walks} walks: the active-node set is empty "
+            f"(n={n}) — a graph with no live/in-graph nodes cannot host a "
+            "fleet (total failure, or every node departed in a churn)"
+        )
     if v0s is None:
         rng = np.random.default_rng(seed)
         v0s = rng.choice(n, size=num_walks, replace=num_walks > n)
@@ -248,16 +258,198 @@ class WalkFleet:
         *,
         p_j=None,
         lipschitz: Optional[jnp.ndarray] = None,
+        faults=None,
     ):
         """ONE batched MHLJ transition for all W walkers.
 
         Returns ``(advanced_fleet, hops)``; ``hops`` is the Remark-1
-        physical transition count per walker.
+        physical transition count per walker.  With
+        ``faults=(FaultModel, FaultState)`` the transition is
+        liveness-masked (docs/faults.md) and a third element carries the
+        engine's fault aux (``blocked_steps`` — the caller's next
+        ``FaultState.blocked`` — plus the ``fault_blocked``/``rescued``
+        telemetry masks); ``faults=None`` is bitwise the pre-fault
+        advance.
         """
-        nxt, hops = self.engine.step(
-            key, self.nodes, p_j=p_j, lipschitz=lipschitz
+        if faults is None:
+            nxt, hops = self.engine.step(
+                key, self.nodes, p_j=p_j, lipschitz=lipschitz
+            )
+            return dataclasses.replace(self, nodes=nxt), hops
+        nxt, hops, aux = self.engine.step(
+            key, self.nodes, p_j=p_j, lipschitz=lipschitz,
+            with_aux=True, faults=faults,
         )
-        return dataclasses.replace(self, nodes=nxt), hops
+        return dataclasses.replace(self, nodes=nxt), hops, aux
+
+
+    # -- crash consistency (docs/faults.md: "checkpoint format") ------------
+    def checkpoint(self) -> dict:
+        """Host-side snapshot: pytree → flat numpy arrays + static aux.
+
+        Every engine data field becomes a plain ``np.ndarray`` (tuples of
+        arrays, e.g. the bucketed ladder, stay tuples of arrays), engine
+        statics ride in ``engine_meta`` and fleet statics at the top
+        level.  ``walker_sharding`` is deliberately dropped — device
+        placement is not state; re-place with :func:`shard_fleet` after
+        :meth:`restore`.  :meth:`restore` of this dict resumes bitwise
+        (``tests/test_faults.py`` pins a mid-run kill-and-restore).
+        """
+        from repro.core.engine import (
+            _ENGINE_DATA_FIELDS,
+            _ENGINE_META_FIELDS,
+        )
+
+        data = {}
+        for f in _ENGINE_DATA_FIELDS:
+            v = getattr(self.engine, f)
+            if v is None:
+                data[f] = None
+            elif isinstance(v, tuple):
+                data[f] = tuple(np.asarray(x) for x in v)
+            else:
+                data[f] = np.asarray(v)
+        meta = {
+            f: getattr(self.engine, f)
+            for f in _ENGINE_META_FIELDS
+            if f != "walker_sharding"
+        }
+        meta["walker_sharding"] = None
+        # a python-float p_j is a static-style scalar; keep it one across
+        # the round trip so the restored pytree has the same leaf set
+        if isinstance(self.engine.p_j, float):
+            data["p_j"] = float(self.engine.p_j)
+        return {
+            "version": 1,
+            "num_walks": self.num_walks,
+            "avg_every": self.avg_every,
+            "nodes": np.asarray(self.nodes),
+            "engine_data": data,
+            "engine_meta": meta,
+        }
+
+    @classmethod
+    def restore(cls, ckpt: dict) -> "WalkFleet":
+        """Rebuild a fleet from :meth:`checkpoint` output — bitwise."""
+        from repro.core.engine import WalkEngine as _Engine
+
+        data = {}
+        for f, v in ckpt["engine_data"].items():
+            if v is None or isinstance(v, float):
+                data[f] = v
+            elif isinstance(v, tuple):
+                data[f] = tuple(jnp.asarray(x) for x in v)
+            else:
+                data[f] = jnp.asarray(v)
+        engine = _Engine(**data, **ckpt["engine_meta"])
+        return cls(
+            engine=engine,
+            nodes=jnp.asarray(ckpt["nodes"]),
+            num_walks=ckpt["num_walks"],
+            avg_every=ckpt["avg_every"],
+        )
+
+
+def save_fleet_checkpoint(
+    path: str,
+    fleet: WalkFleet,
+    *,
+    step: int = 0,
+    extras: Optional[dict] = None,
+) -> str:
+    """Crash-consistent fleet checkpoint on disk (atomic ``os.replace``).
+
+    One ``.npz`` holding the :meth:`WalkFleet.checkpoint` arrays plus any
+    ``extras`` arrays (per-walker models, a ``FaultState``'s leaves, the
+    DADA round index — whatever the caller's loop carries), and a JSON
+    sidecar entry for the static aux.  A crash mid-write never corrupts
+    an existing checkpoint: the temp file is renamed into place only
+    after a full flush.
+    """
+    import json
+    import os
+    import tempfile
+
+    ckpt = fleet.checkpoint()
+    arrays: dict = {"nodes": ckpt["nodes"]}
+    none_fields, tuple_lens, scalar_fields = [], {}, {}
+    for f, v in ckpt["engine_data"].items():
+        if v is None:
+            none_fields.append(f)
+        elif isinstance(v, float):
+            scalar_fields[f] = v
+        elif isinstance(v, tuple):
+            tuple_lens[f] = len(v)
+            for i, x in enumerate(v):
+                arrays[f"engine_data/{f}/{i}"] = x
+        else:
+            arrays[f"engine_data/{f}"] = v
+    extras = extras or {}
+    for name, x in extras.items():
+        arrays[f"extras/{name}"] = np.asarray(x)
+    meta = {
+        "version": ckpt["version"],
+        "num_walks": ckpt["num_walks"],
+        "avg_every": ckpt["avg_every"],
+        "step": int(step),
+        "engine_meta": {
+            k: (list(v) if isinstance(v, tuple) else v)
+            for k, v in ckpt["engine_meta"].items()
+        },
+        "meta_tuples": [
+            k for k, v in ckpt["engine_meta"].items() if isinstance(v, tuple)
+        ],
+        "none_fields": none_fields,
+        "tuple_lens": tuple_lens,
+        "scalar_fields": scalar_fields,
+        "extras": sorted(extras),
+    }
+    arrays["meta_json"] = np.asarray(json.dumps(meta))
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez(fh, **arrays)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def load_fleet_checkpoint(path: str):
+    """Load :func:`save_fleet_checkpoint` → ``(fleet, step, extras)``."""
+    import json
+
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta_json"]))
+        data: dict = {f: None for f in meta["none_fields"]}
+        data.update(meta["scalar_fields"])
+        for f, k in meta["tuple_lens"].items():
+            data[f] = tuple(z[f"engine_data/{f}/{i}"] for i in range(k))
+        for key in z.files:
+            if key.startswith("engine_data/") and key.count("/") == 1:
+                data[key.split("/", 1)[1]] = z[key]
+        engine_meta = {
+            k: (tuple(v) if k in meta["meta_tuples"] and v is not None else v)
+            for k, v in meta["engine_meta"].items()
+        }
+        fleet = WalkFleet.restore(
+            {
+                "version": meta["version"],
+                "num_walks": meta["num_walks"],
+                "avg_every": meta["avg_every"],
+                "nodes": z["nodes"],
+                "engine_data": data,
+                "engine_meta": engine_meta,
+            }
+        )
+        extras = {name: z[f"extras/{name}"] for name in meta["extras"]}
+    return fleet, meta["step"], extras
 
 
 def _fleet_flatten(f: WalkFleet):
@@ -283,7 +475,9 @@ jax.tree_util.register_pytree_node(WalkFleet, _fleet_flatten, _fleet_unflatten)
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_steps", "use_weights", "loss_grad"),
+    static_argnames=(
+        "num_steps", "use_weights", "loss_grad", "start_step", "total_steps",
+    ),
 )
 def _fleet_scan(
     key,
@@ -297,31 +491,96 @@ def _fleet_scan(
     p_j_sched,  # (num_steps,)
     use_weights: bool,
     loss_grad,  # static callable: grad of per-node loss
+    faults=None,  # (FaultModel, FaultState) or None — docs/faults.md
+    start_step: int = 0,  # static: absolute index of the first step taken
+    total_steps=None,  # static: absolute run length the key stream is cut
+    #   from — split(key, total)[start : start + num] so a resumed window
+    #   replays the exact keys of the uninterrupted run (bitwise)
 ):
     engine = fleet.engine
     avg_every = fleet.avg_every
     grad_w = jax.vmap(loss_grad, in_axes=(0, 0, 0))
+    fmodel = faults[0] if faults is not None else None
 
     def step(carry, inputs):
-        xs, vs, t = carry
-        key_t, p_j_t = inputs
+        if faults is None:
+            xs, vs, t = carry
+            key_t, p_j_t = inputs
+            alive_w = None
+        else:
+            # fault timeline per tick: the fault process advances first
+            # (nodes crash/recover), THEN the walkers react — a walker on
+            # a dead node computes no update (its compute is down), takes
+            # no part in averaging, and its handoff is liveness-rejected.
+            xs, vs, t, fstate = carry
+            key_t, p_j_t = inputs
+            key_t, key_f = jax.random.split(key_t)
+            fstate = fmodel.advance(key_f, fstate)
+            alive_w = fmodel.live_mask(fstate)[vs]  # (W,) walker liveness
         gs = grad_w(xs, features[vs], targets[vs])  # (W, dim)
         ws = jnp.where(use_weights, weights[vs], 1.0)[:, None]
         xs_new = xs - gamma * ws * gs
+        if alive_w is not None:
+            xs_new = jnp.where(alive_w[:, None], xs_new, xs)
         if avg_every > 0:
             do_avg = (t + 1) % avg_every == 0
-            xs_new = fleet_average(xs_new, do_avg)
-        vs_next, hops = engine.step(key_t, vs, p_j=p_j_t)  # ONE batched call
+            if alive_w is None:
+                xs_new = fleet_average(xs_new, do_avg)
+            else:
+                # dead walkers are unreachable: they neither contribute to
+                # nor receive the average (a parked model stays frozen and
+                # drags the fleet only when it REJOINS — the stalled-worker
+                # cost benchmarks/fault_sweep.py measures)
+                w_live = alive_w.astype(xs_new.dtype)[:, None]
+                mean = (xs_new * w_live).sum(axis=0, keepdims=True) / (
+                    jnp.maximum(w_live.sum(), 1.0)
+                )
+                avg = jnp.broadcast_to(mean, xs_new.shape).astype(
+                    xs_new.dtype
+                )
+                xs_new = jnp.where(
+                    do_avg & alive_w[:, None], avg, xs_new
+                )
+        if faults is None:
+            vs_next, hops = engine.step(key_t, vs, p_j=p_j_t)  # ONE batched call
+        else:
+            vs_next, hops, aux = engine.step(
+                key_t, vs, p_j=p_j_t, with_aux=True, faults=(fmodel, fstate)
+            )
+            fstate = dataclasses.replace(
+                fstate, blocked=aux["blocked_steps"]
+            )
         mses = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
             xs_new, features, targets
         )
         avg_mse = reg.mse_objective(xs_new.mean(axis=0), features, targets)
-        return (xs_new, vs_next, t + 1), (mses, avg_mse, vs, hops)
+        if faults is None:
+            return (xs_new, vs_next, t + 1), (mses, avg_mse, vs, hops)
+        return (
+            (xs_new, vs_next, t + 1, fstate),
+            (
+                mses, avg_mse, vs, hops,
+                aux["rescued"].sum(), aux["fault_blocked"].sum(),
+            ),
+        )
 
-    keys = jax.random.split(key, num_steps)
-    (xs_fin, _, _), (mses, avg_mses, nodes, hops) = jax.lax.scan(
-        step, (x0s, fleet.nodes, jnp.int32(0)), (keys, p_j_sched)
-    )
+    total = num_steps if total_steps is None else total_steps
+    keys = jax.random.split(key, total)[start_step:start_step + num_steps]
+    t0 = jnp.int32(start_step)
+    if faults is None:
+        (xs_fin, vs_fin, _), (mses, avg_mses, nodes, hops) = jax.lax.scan(
+            step, (x0s, fleet.nodes, t0), (keys, p_j_sched)
+        )
+        final = {"nodes": vs_fin, "fault_state": None, "rescued": None,
+                 "blocked": None}
+    else:
+        (xs_fin, vs_fin, _, fstate_fin), (
+            mses, avg_mses, nodes, hops, rescued, blocked
+        ) = jax.lax.scan(
+            step, (x0s, fleet.nodes, t0, faults[1]), (keys, p_j_sched)
+        )
+        final = {"nodes": vs_fin, "fault_state": fstate_fin,
+                 "rescued": rescued, "blocked": blocked}
     mse0 = jax.vmap(reg.mse_objective, in_axes=(0, None, None))(
         x0s, features, targets
     )
@@ -332,6 +591,7 @@ def _fleet_scan(
         jnp.concatenate([avg0[None], avg_mses]),  # (T+1,)
         nodes.T,  # (W, T) node holding the model at update t
         hops.T,  # (W, T)
+        final,  # final walk positions + fault carry/telemetry (resume seam)
     )
 
 
@@ -379,6 +639,10 @@ def run_fleet(
     loss_grad: Callable,
     *,
     mesh=None,
+    faults=None,
+    fault_state=None,
+    start_step: int = 0,
+    total_steps: Optional[int] = None,
 ):
     """Run the fleet training scan, optionally mesh-sharded.
 
@@ -390,9 +654,46 @@ def run_fleet(
     (``tests/test_fleet.py`` pins both paths against the frozen
     pre-refactor oracle).
 
+    ``faults`` takes a :class:`repro.core.faults.FaultModel` for the
+    liveness-masked regime (docs/faults.md): nodes crash/recover per
+    tick, dead walkers stop updating/averaging, blocked walkers past the
+    model's patience take the forced live-restricted jump.
+    ``fault_state`` resumes a recorded :class:`FaultState` (defaults to
+    the all-live state at tick ``start_step``).
+
+    ``start_step``/``total_steps`` are the crash-recovery seam: the scan
+    burns ``split(key, total_steps)[start_step : start_step+num_steps]``,
+    so running ``[0, k)`` — checkpointing via
+    :func:`save_fleet_checkpoint` — then ``[k, T)`` replays the exact
+    per-step keys of the uninterrupted ``[0, T)`` run (bitwise; pinned by
+    ``tests/test_faults.py``).  Pass the matching ``p_j_sched`` window
+    (``full_sched[start_step:start_step+num_steps]``).
+
     Returns ``(x_final (W, dim), mse (W, T+1), avg_mse (T+1,),
-    update_nodes (W, T), hops (W, T))``.
+    update_nodes (W, T), hops (W, T), final)`` where ``final`` carries
+    the resume state: ``final["nodes"]`` are the walk positions after the
+    last step and, under faults, ``final["fault_state"]`` plus per-step
+    ``final["rescued"]``/``final["blocked"]`` (T,) totals.
     """
+    if start_step < 0:
+        raise ValueError(f"start_step must be >= 0, got {start_step}")
+    total = num_steps if total_steps is None else total_steps
+    if start_step + num_steps > total:
+        raise ValueError(
+            f"window [{start_step}, {start_step + num_steps}) exceeds "
+            f"total_steps={total}"
+        )
+    faults_arg = None
+    if faults is not None:
+        n = int(fleet.engine.degrees.shape[0])
+        w = int(jnp.atleast_1d(fleet.nodes).shape[0])
+        if fault_state is None:
+            fault_state = faults.init_state(n, w)
+            if start_step:
+                fault_state = dataclasses.replace(
+                    fault_state, t=jnp.int32(start_step)
+                )
+        faults_arg = (faults, fault_state)
     if mesh is not None:
         fleet = shard_fleet(fleet, mesh)
         x0s = shard_walker_batch(x0s, fleet.num_walks, mesh)
@@ -416,6 +717,9 @@ def run_fleet(
         p_j_sched,
         use_weights,
         loss_grad,
+        faults_arg,
+        start_step=start_step,
+        total_steps=total_steps,
     )
 
 

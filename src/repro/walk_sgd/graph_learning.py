@@ -29,6 +29,7 @@ whole point of the incremental churn path — and the per-round receipts
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 import jax
@@ -36,11 +37,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import WalkEngine
-from repro.core.graphs import _edges_to_csr, apply_edge_churn
+from repro.core.graphs import RaggedCSRGraph, _edges_to_csr, apply_edge_churn
 from repro.core.transition import MHLJParams, mh_importance_rows_ragged
 from repro.data.synthetic import RegressionData
 from repro.models import regression as reg
-from repro.walk_sgd.fleet import migrate_walk_nodes
+from repro.walk_sgd.fleet import (
+    WalkFleet,
+    load_fleet_checkpoint,
+    migrate_walk_nodes,
+    save_fleet_checkpoint,
+)
 from repro.walk_sgd.trainer import run_rw_sgd_multi
 
 __all__ = [
@@ -189,6 +195,7 @@ def run_dada(
     local_lr: Optional[float] = None,
     seed: int = 0,
     backend: str = "auto",
+    checkpoint_path: Optional[str] = None,
 ) -> DadaResult:
     """Alternate walk-SGD epochs with learned collaboration-graph updates.
 
@@ -207,6 +214,15 @@ def run_dada(
     ``data.lipschitz``, bit-for-bit the rows the plain trainer would
     build, so round one is bitwise-identical to an ordinary
     ``run_rw_sgd_multi`` call on the same seed.
+
+    ``checkpoint_path`` makes the loop crash-consistent at round
+    granularity (docs/faults.md): after every round the engine (with its
+    churned graph state), the averaged model, the migrated walk
+    positions and the per-round telemetry land in one atomic
+    :func:`repro.walk_sgd.fleet.save_fleet_checkpoint` file; a rerun
+    with the same path resumes at the first unfinished round and
+    produces the uninterrupted run's result bitwise (per-round seeds are
+    absolute, ``seed + rnd``).
     """
     if rounds < 1:
         raise ValueError("run_dada needs rounds >= 1")
@@ -250,7 +266,86 @@ def run_dada(
     x0 = None
     v0s = None
     res = None
-    for rnd in range(rounds):
+
+    def _result(x_final: np.ndarray) -> DadaResult:
+        return DadaResult(
+            round_mse=round_mse,
+            personalized_mse=personalized_mse,
+            edges_inserted=edges_inserted,
+            edges_deleted=edges_deleted,
+            walks_displaced=walks_displaced,
+            graph_versions=graph_versions,
+            x_final=np.asarray(x_final),
+            method=method,
+        )
+
+    def _ckpt(step: int, nodes, x_final=None) -> None:
+        extras = {
+            "x0": np.asarray(x0),
+            "round_mse": round_mse,
+            "personalized_mse": personalized_mse,
+            "edges_inserted": edges_inserted,
+            "edges_deleted": edges_deleted,
+            "walks_displaced": walks_displaced,
+            "graph_versions": graph_versions,
+            "dada_rounds": np.int64(rounds),
+            "dada_seed": np.int64(seed),
+            "dada_num_steps": np.int64(num_steps),
+        }
+        if x_final is not None:
+            extras["x_final"] = np.asarray(x_final)
+        save_fleet_checkpoint(
+            checkpoint_path,
+            WalkFleet(
+                engine=engine,
+                nodes=jnp.asarray(np.asarray(nodes), jnp.int32),
+                num_walks=num_walks,
+            ),
+            step=step,
+            extras=extras,
+        )
+
+    start_round = 0
+    if checkpoint_path is not None and os.path.exists(checkpoint_path):
+        fleet, step, extras = load_fleet_checkpoint(checkpoint_path)
+        saved = {
+            k: int(extras[f"dada_{k}"])
+            for k in ("rounds", "seed", "num_steps")
+        }
+        want = {"rounds": rounds, "seed": seed, "num_steps": num_steps}
+        if saved != want or fleet.num_walks != num_walks:
+            raise ValueError(
+                f"checkpoint at {checkpoint_path!r} was written by a "
+                f"different run_dada config (saved {saved} "
+                f"num_walks={fleet.num_walks}, requested {want} "
+                f"num_walks={num_walks}); refusing to resume"
+            )
+        engine = fleet.engine
+        # the core graph IS the engine's CSR state — rebuild it host-side
+        # with the canonical ragged dtypes so the rewire diff is bitwise
+        # the one a fresh run would compute
+        core = RaggedCSRGraph(
+            indptr=np.asarray(engine.indptr, dtype=np.int64),
+            indices=np.asarray(engine.indices, dtype=np.int32),
+            degrees=np.asarray(engine.degrees, dtype=np.int32),
+            name=core.name,
+        )
+        for name, arr in (
+            ("round_mse", round_mse),
+            ("personalized_mse", personalized_mse),
+            ("edges_inserted", edges_inserted),
+            ("edges_deleted", edges_deleted),
+            ("walks_displaced", walks_displaced),
+            ("graph_versions", graph_versions),
+        ):
+            arr[:] = extras[name]
+        x0 = np.asarray(extras["x0"])
+        v0s = np.asarray(fleet.nodes)
+        start_round = int(step)
+        if start_round >= rounds:
+            return _result(extras["x_final"])
+
+    for rnd in range(start_round, rounds):
         res = run_rw_sgd_multi(
             method,
             core,
@@ -277,6 +372,8 @@ def run_dada(
         )
         graph_versions[rnd] = engine.graph_version
         if rnd == rounds - 1:
+            if checkpoint_path is not None:
+                _ckpt(rounds, res.update_nodes[:, -1], x_final=res.x_final)
             break
         # rewire: diff the current edge set against the kNN proposal and
         # apply the net churn incrementally
@@ -314,14 +411,7 @@ def run_dada(
             last_nodes, np.asarray(core.degrees), seed=seed + 7919 * (rnd + 1)
         )
         walks_displaced[rnd + 1] = int(displaced.sum())
+        if checkpoint_path is not None:
+            _ckpt(rnd + 1, v0s)
 
-    return DadaResult(
-        round_mse=round_mse,
-        personalized_mse=personalized_mse,
-        edges_inserted=edges_inserted,
-        edges_deleted=edges_deleted,
-        walks_displaced=walks_displaced,
-        graph_versions=graph_versions,
-        x_final=np.asarray(res.x_final),
-        method=method,
-    )
+    return _result(res.x_final)

@@ -272,7 +272,7 @@ def run_rw_sgd(
     grad_fn = {"linear": reg.linear_grad, "logistic": reg.logistic_grad}[loss]
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
 
-    xs_fin, mses, _, nodes, hops = run_fleet(
+    xs_fin, mses, _, nodes, hops, _final = run_fleet(
         jax.random.PRNGKey(seed),
         jnp.broadcast_to(x0[None], (1, data.dim)),
         jnp.asarray(data.features, jnp.float32),
@@ -388,7 +388,7 @@ def run_rw_sgd_multi(
     x0 = jnp.zeros(data.dim, jnp.float32) if x0 is None else jnp.asarray(x0, jnp.float32)
     x0s = jnp.broadcast_to(x0[None], (num_walks, data.dim))
 
-    xs_fin, mses, avg_mses, nodes, hops = run_fleet(
+    xs_fin, mses, avg_mses, nodes, hops, _final = run_fleet(
         jax.random.PRNGKey(seed),
         x0s,
         jnp.asarray(data.features, jnp.float32),

@@ -3,7 +3,7 @@
 Runs ``python -m benchmarks.run --smoke`` as a subprocess: every benchmark
 module must satisfy the harness contract (NAME / PAPER_CLAIM / run) and the
 modules with a smoke tier (fig5_sparse_graphs, large_graph_walk, law_sweep,
-serve_throughput) must actually execute at toy sizes.  The large-graph tier must take real walk
+serve_throughput, fault_sweep) must actually execute at toy sizes.  The large-graph tier must take real walk
 steps through EVERY registered engine layout (``repro.core.engine.LAYOUTS``)
 plus the compacted bucketed dispatch, so a rotted path — not just the
 default one — fails tier 1 here instead of rotting until someone runs the
@@ -50,6 +50,7 @@ def test_benchmarks_smoke_tier_passes(tmp_path):
     assert "fig5_sparse_graphs[smoke]" in out
     assert "law_sweep[smoke]" in out
     assert "serve_throughput[smoke]" in out
+    assert "fault_sweep[smoke]" in out
     assert "FAILED" not in out
     # every registered engine layout + the compacted bucketed dispatch must
     # have taken real walk steps
@@ -90,6 +91,20 @@ def test_benchmarks_smoke_tier_passes(tmp_path):
                 f"routing law {label!r} vanished from the serving sweep "
                 f"({suffix})"
             )
+    # every fault-sweep leg must have run: the rescue-on AND rescue-off
+    # training legs per family plus the trace-replayed serving legs feed
+    # check_regression's presence gate ("_rescue"/"_fault_free" suffixes)
+    fault_keys = set(derived.get("fault_sweep", {}))
+    for fam in ("dumbbell", "ba"):
+        assert f"{fam}_excess_fault_free" in fault_keys
+        for tag in ("with_rescue", "no_rescue"):
+            assert f"{fam}_excess_f5_{tag}" in fault_keys, (
+                f"fault leg {tag!r} vanished from the {fam} sweep"
+            )
+    for suffix in ("p99", "shed_rate"):
+        assert f"serve_{suffix}_fault_free" in fault_keys
+        assert f"serve_{suffix}_f5_with_rescue" in fault_keys
+        assert f"serve_{suffix}_f5_no_rescue" in fault_keys
 
     # step-time regression gate: fresh smoke numbers vs the committed
     # baseline (generous 2.5x tolerance — catches rot, not noise)

@@ -83,6 +83,7 @@ def test_doc_tree_is_present():
         "fleet.md",
         "dynamic_graphs.md",
         "serving.md",
+        "faults.md",
     ):
         assert os.path.exists(os.path.join(REPO, "docs", name)), name
 

@@ -1,0 +1,589 @@
+"""Fault-injection tests: liveness rejection, jump rescue, scripted
+scenarios, crash-consistent fleet/dada checkpoints, and degradation-aware
+serving (docs/faults.md).
+
+Two frozen-oracle pins guard the no-fault seam: ``faults=None`` through
+``WalkEngine.step`` and ``run_fleet`` must stay bitwise-identical to the
+pre-fault stack (goldens captured from the last pre-fault commit), so the
+fault layer can NEVER perturb a healthy run — not by one key split.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import WalkEngine
+from repro.core.faults import (
+    NEVER,
+    FaultModel,
+    FaultState,
+    apply_liveness,
+    dumbbell_bridge_mask,
+    edge_slot_lookup,
+    kill_top_hubs,
+    live_uniform_choice,
+    partition_groups,
+)
+from repro.core.graphs import barabasi_albert, dumbbell
+from repro.core.transition import MHLJParams
+from repro.models import regression as reg
+from repro.walk_sgd.fleet import (
+    WalkFleet,
+    load_fleet_checkpoint,
+    run_fleet,
+    sample_initial_nodes,
+    save_fleet_checkpoint,
+)
+
+# ---------------------------------------------------------------------------
+# model validation + state lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="together"):
+        FaultModel(down_at=jnp.zeros(4, jnp.int32))
+    with pytest.raises(ValueError, match="together"):
+        FaultModel(edge_up_at=jnp.zeros(4, jnp.int32))
+    with pytest.raises(ValueError, match="patience"):
+        FaultModel(patience=0)
+
+
+def test_init_state_all_live():
+    fm = FaultModel(crash_rate=0.1, recovery_rate=0.1)
+    st = fm.init_state(7, 3)
+    assert bool(st.live.all()) and st.live.shape == (7,)
+    assert st.blocked.shape == (3,) and not st.blocked.any()
+    assert int(st.t) == 0
+    assert bool(fm.live_mask(st).all())
+
+
+def test_markov_advance_reaches_steady_state():
+    fm = FaultModel(crash_rate=0.2, recovery_rate=0.2)
+    st = fm.init_state(400, 1)
+    for i in range(60):
+        st = fm.advance(jax.random.PRNGKey(i), st)
+    frac_down = 1.0 - float(fm.live_mask(st).mean())
+    # steady state crash/(crash+recovery) = 0.5 (tolerance: 400 nodes)
+    assert 0.35 < frac_down < 0.65
+    assert int(st.t) == 60
+
+
+def test_scripted_window_is_pure():
+    """Scripted-only models never mutate the Markov live vector."""
+    n = 6
+    down = np.full(n, NEVER, np.int32)
+    up = np.full(n, NEVER, np.int32)
+    down[2], up[2] = 3, 5
+    fm = FaultModel(down_at=jnp.asarray(down), up_at=jnp.asarray(up))
+    st = fm.init_state(n, 1)
+    seen = []
+    for i in range(7):
+        seen.append(bool(fm.live_mask(st)[2]))
+        st = fm.advance(jax.random.PRNGKey(i), st)
+        assert bool(st.live.all())  # Markov component untouched
+    assert seen == [True, True, True, False, False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# the rejection + rescue arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _liveness_case(live_np, nodes, nxt, blocked, **kw):
+    W = len(nodes)
+    return apply_liveness(
+        jax.random.PRNGKey(0),
+        jnp.asarray(nodes, jnp.int32),
+        jnp.asarray(nxt, jnp.int32),
+        jnp.ones(W, jnp.int32),
+        jnp.asarray(blocked, jnp.int32),
+        jnp.asarray(live_np, bool),
+        **kw,
+    )
+
+
+def test_rejection_rule_endpoints():
+    # nodes 0..3; node 2 dead. walk0 moves 0->1 (ok), walk1 moves 1->2
+    # (dst dead), walk2 sits on 2 (self dead), walk3 stays at 3 (ok)
+    live = [True, True, False, True]
+    out, hops, blocked, was_blocked, rescued = _liveness_case(
+        live, [0, 1, 2, 3], [1, 2, 2, 3], [0, 0, 0, 0],
+        patience=3, rescue=True,
+    )
+    assert np.asarray(out).tolist() == [1, 1, 2, 3]
+    assert np.asarray(was_blocked).tolist() == [False, True, True, False]
+    # blocked counters: reset on success, increment on rejection
+    assert np.asarray(blocked).tolist() == [0, 1, 1, 0]
+    assert not np.asarray(rescued).any()
+
+
+def test_patience_triggers_rescue_and_resets():
+    live = [False, True, True, True]
+    out, hops, blocked, was_blocked, rescued = _liveness_case(
+        live, [0, 0, 0, 0], [0, 0, 0, 0], [0, 1, 2, 5],
+        patience=3, rescue=True, rescue_hops=4,
+    )
+    r = np.asarray(rescued).tolist()
+    assert r == [False, False, True, True]
+    out = np.asarray(out)
+    assert (out[2:] != 0).all() and np.asarray(live)[out[2:]].all()
+    assert np.asarray(hops).tolist()[2:] == [4, 4]
+    assert np.asarray(blocked).tolist() == [1, 2, 0, 0]
+
+
+def test_rescue_off_parks_walkers_indefinitely():
+    live = [False, True, True]
+    out, hops, blocked, _, rescued = _liveness_case(
+        live, [0, 0, 0], [1, 1, 1], [0, 7, 99], patience=3, rescue=False,
+    )
+    assert np.asarray(out).tolist() == [0, 0, 0]
+    assert np.asarray(blocked).tolist() == [1, 8, 100]
+    assert not np.asarray(rescued).any()
+
+
+def test_total_failure_parks_even_with_rescue():
+    live = [False, False, False]
+    out, _, blocked, was_blocked, rescued = _liveness_case(
+        live, [0, 1, 2], [1, 2, 0], [5, 5, 5], patience=1, rescue=True,
+    )
+    assert np.asarray(out).tolist() == [0, 1, 2]
+    assert np.asarray(was_blocked).all()
+    assert not np.asarray(rescued).any()  # no live target: stay parked
+
+
+def test_live_uniform_choice_lands_on_live_set():
+    live = jnp.asarray([False, True, False, True, True, False])
+    u = jax.random.uniform(jax.random.PRNGKey(3), (512,))
+    picks = np.asarray(live_uniform_choice(u, live))
+    assert set(picks.tolist()) == {1, 3, 4}
+    counts = np.bincount(picks, minlength=6)[[1, 3, 4]]
+    assert counts.min() > 512 / 3 * 0.6  # roughly uniform
+
+
+def test_edge_slot_lookup_found_and_missing():
+    g = dumbbell(4, layout="ragged")
+    indptr = jnp.asarray(np.asarray(g.indptr))
+    indices = jnp.asarray(np.asarray(g.indices))
+    indices_np = np.asarray(g.indices)
+    indptr_np = np.asarray(g.indptr)
+    src = jnp.asarray([0, 0], jnp.int32)
+    # 0->1 exists in the clique; 0->(n-1) crosses to the far clique: absent
+    dst = jnp.asarray([1, g.n - 1], jnp.int32)
+    slot, found = edge_slot_lookup(
+        indptr, indices, src, dst, int(np.asarray(g.degrees).max())
+    )
+    assert np.asarray(found).tolist() == [True, False]
+    s = int(np.asarray(slot)[0])
+    assert indptr_np[0] <= s < indptr_np[1] and indices_np[s] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine integration: the faults= step path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense_engine():
+    g = dumbbell(6, layout="dense")
+    return g, WalkEngine.from_graph(
+        g, MHLJParams(p_j=0.2, p_d=0.5, r=2),
+        lipschitz=np.ones(g.n), backend="scan",
+    )
+
+
+def test_faults_none_path_matches_prefault_golden(dense_engine):
+    """FROZEN ORACLE: faults=None consumes the key exactly like the
+    pre-fault engine (golden captured from the last pre-fault commit)."""
+    _, eng = dense_engine
+    nxt, hops = eng.step(jax.random.PRNGKey(0), jnp.arange(4, dtype=jnp.int32))
+    assert np.asarray(nxt).tolist() == [0, 3, 1, 2]
+    assert np.asarray(hops).tolist() == [1, 1, 1, 1]
+
+
+def test_faults_require_with_aux(dense_engine):
+    g, eng = dense_engine
+    fm = FaultModel(crash_rate=0.1, recovery_rate=0.1)
+    st = fm.init_state(g.n, 4)
+    with pytest.raises(ValueError, match="with_aux"):
+        eng.step(jax.random.PRNGKey(0), jnp.arange(4, dtype=jnp.int32),
+                 faults=(fm, st))
+
+
+def test_engine_step_all_dead_stays_put(dense_engine):
+    g, eng = dense_engine
+    fm = FaultModel(patience=1)
+    st = dataclasses.replace(
+        fm.init_state(g.n, 4), live=jnp.zeros(g.n, bool)
+    )
+    nodes = jnp.arange(4, dtype=jnp.int32)
+    nxt, hops, aux = eng.step(
+        jax.random.PRNGKey(0), nodes, with_aux=True, faults=(fm, st)
+    )
+    assert np.array_equal(np.asarray(nxt), np.asarray(nodes))
+    assert np.asarray(aux["fault_blocked"]).all()
+    assert np.asarray(aux["blocked_steps"]).tolist() == [1, 1, 1, 1]
+    assert not np.asarray(aux["rescued"]).any()
+
+
+def test_engine_step_scans_with_fault_carry(dense_engine):
+    g, eng = dense_engine
+    fm = FaultModel(crash_rate=0.3, recovery_rate=0.2, patience=2)
+
+    def body(carry, k):
+        v, st = carry
+        st = fm.advance(k, st)
+        nn, _h, aux = eng.step(k, v, with_aux=True, faults=(fm, st))
+        st = dataclasses.replace(st, blocked=aux["blocked_steps"])
+        return (nn, st), (aux["rescued"].sum(), aux["fault_blocked"].sum())
+
+    keys = jax.random.split(jax.random.PRNGKey(1), 50)
+    (_vf, stf), (resc, blk) = jax.lax.scan(
+        body, (jnp.arange(4, dtype=jnp.int32), fm.init_state(g.n, 4)), keys
+    )
+    assert int(np.asarray(blk).sum()) > 0
+    assert int(np.asarray(resc).sum()) > 0
+    assert int(stf.t) == 50
+
+
+def test_scripted_partition_blocks_bridge_crossings():
+    g = dumbbell(6, layout="ragged")
+    eng = WalkEngine.from_graph(
+        g, MHLJParams(p_j=0.0, p_d=0.5, r=1),
+        lipschitz=np.ones(g.n), backend="scan",
+    )
+    side = dumbbell_bridge_mask(g.n, 6, 1)
+    fm = partition_groups(g.indptr, g.indices, side, at=0, patience=10,
+                          rescue=False)
+    st = fm.init_state(g.n, 16)
+    # all walkers on the bridge node: any accepted move crossing the cut
+    # must have been rejected, so sides never mix
+    nodes = jnp.full(16, 6, jnp.int32)  # bridge node of dumbbell(6, 1)
+    for i in range(20):
+        nodes, _h, aux = eng.step(
+            jax.random.PRNGKey(i), nodes, with_aux=True, faults=(fm, st)
+        )
+        st = dataclasses.replace(st, blocked=aux["blocked_steps"])
+    # the bridge node sits on the A side of the cut: nobody crossed
+    assert not side[np.asarray(nodes)].any()
+
+
+def test_kill_top_hubs_scripts_the_right_nodes():
+    g = barabasi_albert(64, 2, seed=0, layout="ragged")
+    deg = np.asarray(g.degrees)
+    fm = kill_top_hubs(deg, 3, at=5, duration=10)
+    top = np.argsort(-deg, kind="stable")[:3]
+    st = fm.init_state(g.n, 1)
+    assert bool(fm.live_mask(st).all())  # before the window
+    st = dataclasses.replace(st, t=jnp.int32(5))
+    mask = np.asarray(fm.live_mask(st))
+    assert not mask[top].any() and mask.sum() == g.n - 3
+    st = dataclasses.replace(st, t=jnp.int32(15))
+    assert bool(fm.live_mask(st).all())  # recovered
+    with pytest.raises(ValueError, match="k must be"):
+        kill_top_hubs(deg, 0, at=0)
+
+
+def test_partition_validation():
+    g = dumbbell(4, layout="ragged")
+    with pytest.raises(ValueError, match="bool mask"):
+        partition_groups(g.indptr, g.indices, np.zeros(3, bool), at=0)
+    with pytest.raises(ValueError, match="cuts no edge"):
+        partition_groups(g.indptr, g.indices, np.zeros(g.n, bool), at=0)
+    with pytest.raises(ValueError, match="not a dumbbell"):
+        dumbbell_bridge_mask(10, 6, 1)
+
+
+# ---------------------------------------------------------------------------
+# fleet: frozen no-fault golden, checkpoint resume, faulted runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fleet_case():
+    g = dumbbell(8, layout="dense")
+    eng = WalkEngine.from_graph(
+        g, MHLJParams(p_j=0.2, p_d=0.5, r=2),
+        lipschitz=np.ones(g.n), backend="scan",
+    )
+    fleet = WalkFleet.create(eng, 4, seed=3, avg_every=5)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.n, 3))
+    targs = rng.normal(size=(g.n,))
+    return g, fleet, feats, targs
+
+
+def _run(fleet_case, fleet, steps, sched, **kw):
+    _g, _fleet, feats, targs = fleet_case
+    return run_fleet(
+        jax.random.PRNGKey(42), np.zeros((4, 3)), feats, targs,
+        np.ones(feats.shape[0]), fleet, steps, 0.05, sched, False,
+        reg.linear_grad, **kw,
+    )
+
+
+def test_run_fleet_no_faults_matches_prefault_golden(fleet_case):
+    """FROZEN ORACLE: the full no-fault training scan is bitwise-identical
+    to the pre-fault ``run_fleet`` (goldens captured pre-change)."""
+    _g, fleet, _f, _t = fleet_case
+    sched = np.full(30, 0.2, np.float32)
+    xs, mses, avg, nodes, hops, final = _run(fleet_case, fleet, 30, sched)
+    gold = np.array(
+        [[-0.05618035048246384, 0.5244519710540771, -0.018438000231981277]]
+        * 4
+    )
+    assert np.array_equal(np.asarray(xs, np.float64), gold)
+    assert float(np.asarray(avg)[-1]) == 0.6565974950790405
+    assert int(np.asarray(nodes).sum()) == 752
+    assert int(np.asarray(hops).sum()) == 129
+    assert np.asarray(final["nodes"]).shape == (4,)
+
+
+def test_fleet_checkpoint_resume_is_bitwise(fleet_case, tmp_path):
+    """Kill at step 18 of 30, checkpoint through disk, resume: the stitched
+    run equals the uninterrupted one bitwise."""
+    _g, fleet, _f, _t = fleet_case
+    sched = np.full(30, 0.2, np.float32)
+    ref = _run(fleet_case, fleet, 30, sched)
+
+    a = _run(fleet_case, fleet, 18, sched[:18], total_steps=30)
+    fleet_mid = dataclasses.replace(fleet, nodes=a[5]["nodes"])
+    path = save_fleet_checkpoint(
+        str(tmp_path / "fleet.npz"), fleet_mid, step=18,
+        extras={"xs": np.asarray(a[0])},
+    )
+    fleet_r, step_r, extras_r = load_fleet_checkpoint(path)
+    assert step_r == 18
+    b = run_fleet(
+        jax.random.PRNGKey(42), jnp.asarray(extras_r["xs"]),
+        fleet_case[2], fleet_case[3], np.ones(fleet_case[2].shape[0]),
+        fleet_r, 12, 0.05, sched[18:], False, reg.linear_grad,
+        start_step=18, total_steps=30,
+    )
+    assert np.array_equal(np.asarray(b[0]), np.asarray(ref[0]))
+    nodes_full = np.concatenate(
+        [np.asarray(a[3]), np.asarray(b[3])], axis=1
+    )
+    assert np.array_equal(nodes_full, np.asarray(ref[3]))
+    mse_full = np.concatenate(
+        [np.asarray(a[1]), np.asarray(b[1])[:, 1:]], axis=1
+    )
+    assert np.array_equal(mse_full, np.asarray(ref[1]))
+
+
+def test_faulted_fleet_run_and_checkpoint_resume(fleet_case, tmp_path):
+    """The faulted scan produces rescue telemetry, and a mid-run
+    checkpoint carrying the FaultState resumes bitwise."""
+    _g, fleet, _f, _t = fleet_case
+    fm = FaultModel(crash_rate=0.05, recovery_rate=0.1, patience=2)
+    sched = np.full(120, 0.2, np.float32)
+    ref = _run(fleet_case, fleet, 120, sched, faults=fm)
+    assert ref[5]["fault_state"] is not None
+    assert int(np.asarray(ref[5]["blocked"]).sum()) > 0
+    assert int(np.asarray(ref[5]["rescued"]).sum()) > 0
+
+    a = _run(fleet_case, fleet, 70, sched[:70], faults=fm, total_steps=120)
+    st_mid = a[5]["fault_state"]
+    fleet_mid = dataclasses.replace(fleet, nodes=a[5]["nodes"])
+    path = save_fleet_checkpoint(
+        str(tmp_path / "faulted.npz"), fleet_mid, step=70,
+        extras={
+            "xs": np.asarray(a[0]),
+            "fault_live": np.asarray(st_mid.live),
+            "fault_blocked": np.asarray(st_mid.blocked),
+            "fault_t": np.asarray(st_mid.t),
+        },
+    )
+    fl, step_r, ex = load_fleet_checkpoint(path)
+    st_restored = FaultState(
+        live=jnp.asarray(ex["fault_live"]),
+        blocked=jnp.asarray(ex["fault_blocked"]),
+        t=jnp.asarray(ex["fault_t"]),
+    )
+    b = run_fleet(
+        jax.random.PRNGKey(42), jnp.asarray(ex["xs"]), fleet_case[2],
+        fleet_case[3], np.ones(fleet_case[2].shape[0]), fl, 50, 0.05,
+        sched[70:], False, reg.linear_grad, faults=fm,
+        fault_state=st_restored, start_step=70, total_steps=120,
+    )
+    assert np.array_equal(np.asarray(b[0]), np.asarray(ref[0]))
+
+
+def test_rescue_off_fleet_accumulates_blocked_without_rescues(fleet_case):
+    _g, fleet, _f, _t = fleet_case
+    fm = FaultModel(crash_rate=0.1, recovery_rate=0.05, patience=2,
+                    rescue=False)
+    out = _run(fleet_case, fleet, 80, np.full(80, 0.2, np.float32),
+               faults=fm)
+    assert int(np.asarray(out[5]["blocked"]).sum()) > 0
+    assert int(np.asarray(out[5]["rescued"]).sum()) == 0
+
+
+def test_empty_active_node_set_raises():
+    with pytest.raises(ValueError, match="active-node set is empty"):
+        sample_initial_nodes(0, 4)
+
+
+def test_run_fleet_window_validation(fleet_case):
+    _g, fleet, _f, _t = fleet_case
+    with pytest.raises(ValueError, match="start_step"):
+        _run(fleet_case, fleet, 10, np.full(10, 0.2, np.float32),
+             start_step=-1)
+    with pytest.raises(ValueError, match="exceeds"):
+        _run(fleet_case, fleet, 10, np.full(10, 0.2, np.float32),
+             start_step=5, total_steps=10)
+
+
+# ---------------------------------------------------------------------------
+# dada: crash-consistent round checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_run_dada_kill_and_restore_is_bitwise(tmp_path, monkeypatch):
+    from repro.core.graphs import watts_strogatz
+    from repro.data.synthetic import make_homogeneous_regression
+    from repro.walk_sgd import graph_learning as gl
+
+    g = watts_strogatz(24, 4, 0.2, seed=3)
+    data = make_homogeneous_regression(g.n, dim=4, seed=5)
+    kw = dict(rounds=3, num_steps=60, num_walks=4, k=3, avg_every=20,
+              seed=11, backend="scan")
+    ref = gl.run_dada(g, data, **kw)
+
+    path = str(tmp_path / "dada.npz")
+    orig = gl.run_rw_sgd_multi
+    calls = {"n": 0}
+
+    def dying(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("simulated crash in round 2")
+        return orig(*a, **k)
+
+    monkeypatch.setattr(gl, "run_rw_sgd_multi", dying)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        gl.run_dada(g, data, checkpoint_path=path, **kw)
+    monkeypatch.setattr(gl, "run_rw_sgd_multi", orig)
+    import os
+    assert os.path.exists(path), "round-1 checkpoint missing after crash"
+
+    res = gl.run_dada(g, data, checkpoint_path=path, **kw)
+    for f in ("round_mse", "personalized_mse", "edges_inserted",
+              "edges_deleted", "walks_displaced", "graph_versions",
+              "x_final"):
+        assert np.array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(res, f))
+        ), f
+
+    # completed checkpoint: the fast path returns without recompute
+    res2 = gl.run_dada(g, data, checkpoint_path=path, **kw)
+    assert np.array_equal(res2.x_final, ref.x_final)
+
+    # config mismatch refuses to resume rather than corrupt
+    with pytest.raises(ValueError, match="refusing to resume"):
+        gl.run_dada(g, data, checkpoint_path=path,
+                    **{**kw, "seed": 12})
+
+
+# ---------------------------------------------------------------------------
+# serving: degradation telemetry, shed-exactly-once, trace replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_graph():
+    return barabasi_albert(96, 2, seed=0, layout="ragged")
+
+
+def _serve_sim(graph, *, fault_model=None, trace=None, seed=0):
+    from repro.configs import get_arch, reduced
+    from repro.launch.serve import ServeEngine, ServeSimulator
+
+    cfg = reduced(get_arch("mamba2-370m"))
+    eng = ServeEngine(cfg, 2, 64, seed=0, max_queue=8)
+    sim = ServeSimulator(
+        graph, eng, method="mhlj", num_walkers=6, rate=1.2, pickup=2,
+        deadline_ticks=40, prompt_len=(3, 6), max_new_tokens=4, seed=seed,
+        fault_model=fault_model, relocate_after=2, arrival_trace=trace,
+    )
+    return sim
+
+
+def test_faulted_serving_degrades_gracefully(serve_graph):
+    """Faults produce degradation telemetry while every offered request is
+    accounted for exactly once (completed/shed/pending/queued/in-slot) —
+    the shed-exactly-once invariant under recycle + deadline + node_down."""
+    fm = FaultModel(crash_rate=0.04, recovery_rate=0.1, patience=2)
+    sim = _serve_sim(serve_graph, fault_model=fm)
+    m = sim.run(80, drain_ticks=40)
+    assert m["completed"] > 0  # the cluster keeps serving through faults
+    assert m["walker_blocked_steps"] > 0
+    assert m["walker_rescues"] > 0
+    assert m["node_downtime_frac"] > 0
+    tot_shed = (
+        m["shed_queue_full"] + m["shed_deadline"] + m["shed_node_down"]
+    )
+    eng = sim.engine
+    assert tot_shed == len(eng.shed_requests)
+    rids = [r.rid for r in eng.shed_requests] + [
+        r.rid for r in eng.completed
+    ]
+    assert len(rids) == len(set(rids))  # nothing shed/completed twice
+    assert m["offered"] == (
+        m["completed"] + tot_shed + m["pending_left"] + m["queued_left"]
+        + sum(s is not None for s in eng.slots)
+    )
+
+
+def test_no_fault_serving_keeps_fault_telemetry_zero(serve_graph):
+    sim = _serve_sim(serve_graph)
+    m = sim.run(30, drain_ticks=10)
+    assert m["walker_rescues"] == 0
+    assert m["walker_blocked_steps"] == 0
+    assert m["shed_node_down"] == 0
+    assert m["node_downtime_frac"] == 0.0
+    assert m["relocated_requests"] == 0
+
+
+def test_arrival_trace_roundtrip_and_replay_identity(serve_graph, tmp_path):
+    """Record a fault-free trace, replay it under two rescue policies: all
+    legs see the identical workload (offered == trace rows) and identical
+    seeds give identical completions."""
+    from repro.launch.serve import load_arrival_trace, save_arrival_trace
+
+    src = _serve_sim(serve_graph)
+    src.run(30, drain_ticks=10)
+    trace = np.asarray(src.arrival_log, np.int64)
+    assert trace.shape[1] == 3
+    path = str(tmp_path / "trace.npz")
+    save_arrival_trace(path, trace)
+    loaded = load_arrival_trace(path)
+    assert np.array_equal(loaded, trace)
+
+    fm_on = FaultModel(crash_rate=0.04, recovery_rate=0.1, patience=2)
+    fm_off = dataclasses.replace(fm_on, rescue=False)
+    a = _serve_sim(serve_graph, fault_model=fm_on, trace=loaded)
+    a.run(30, drain_ticks=10)
+    b = _serve_sim(serve_graph, fault_model=fm_on, trace=loaded)
+    b.run(30, drain_ticks=10)
+    assert a.arrival_log == b.arrival_log
+    pa = [(r.rid, r.prompt.tolist()) for r in a.engine.completed]
+    pb = [(r.rid, r.prompt.tolist()) for r in b.engine.completed]
+    assert pa == pb  # same trace + seed -> bitwise same outcome
+    c = _serve_sim(serve_graph, fault_model=fm_off, trace=loaded)
+    c.run(30, drain_ticks=10)
+    assert a.arrival_log == c.arrival_log  # identical load across legs
+    assert a.offered == c.offered == len(loaded)
+    assert c.rescues == 0 and a.rescues >= 0
+
+
+def test_save_arrival_trace_validates(tmp_path):
+    from repro.launch.serve import load_arrival_trace, save_arrival_trace
+
+    path = str(tmp_path / "empty.npz")
+    save_arrival_trace(path, [])
+    assert load_arrival_trace(path).shape == (0, 3)
+    with pytest.raises(ValueError):
+        save_arrival_trace(str(tmp_path / "bad.npz"), [[1, 2]])

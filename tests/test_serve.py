@@ -142,7 +142,7 @@ def test_latency_percentiles_bookkeeping(engine):
     assert lat["p50_ticks"] > 0
     assert lat["p50_ticks"] <= lat["p95_ticks"] <= lat["p99_ticks"]
     assert latency_percentiles([]) == {
-        "p50_ticks": -1.0, "p95_ticks": -1.0, "p99_ticks": -1.0
+        "p50_ticks": 0.0, "p95_ticks": 0.0, "p99_ticks": 0.0
     }
 
 
